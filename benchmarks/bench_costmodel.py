@@ -1,0 +1,21 @@
+"""§4 cost/energy model — every number in the paper vs ours."""
+import time
+
+from repro.core import costmodel as cm
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    checks = cm.paper_validation()
+    us = (time.perf_counter() - t0) / max(len(checks), 1) * 1e6
+    for name, (ours, paper) in checks.items():
+        rows.append((f"costmodel/{name}", us,
+                     f"ours={ours:.3f} paper={paper} "
+                     f"rel_err={abs(ours - paper) / paper:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,24 @@
+"""Figure 4: BigQuery execution-time projection under Lovelock."""
+import time
+
+from repro.core.costmodel import project_bigquery
+
+
+def run():
+    rows = []
+    for phi in (1.0, 2.0, 3.0):
+        t0 = time.perf_counter()
+        p = project_bigquery(phi)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig4/phi{int(phi)}", us,
+                     f"mu={p['mu']:.2f} cpu_t={p['cpu_time']:.2f} "
+                     f"net_t={p['network_time']:.2f} "
+                     f"cost={p['cost_ratio']:.2f}x "
+                     f"energy={p['power_ratio']:.2f}x "
+                     f"cost_w_fabric={p['cost_ratio_with_fabric']:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks (interpret-mode timings on CPU are *correctness
+cost* only; real perf comes from the roofline analysis — see EXPERIMENTS)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention, \
+    decode_attention_ref
+from repro.kernels.flash_attention import flash_attention, \
+    flash_attention_ref
+from repro.kernels.rwkv6 import wkv6, wkv6_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    # flash attention
+    B, S, H, K, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, K, d))
+    v = jax.random.normal(ks[2], (B, S, K, d))
+    us_k = _time(lambda *a: flash_attention(*a), q, k, v)
+    us_r = _time(lambda *a: flash_attention_ref(*a), q, k, v)
+    err = float(jnp.max(jnp.abs(flash_attention(q, k, v)
+                                - flash_attention_ref(q, k, v))))
+    rows.append(("kernels/flash_attention_interp", us_k,
+                 f"ref_us={us_r:.0f} max_err={err:.1e} shape=B{B}S{S}H{H}d{d}"))
+    # decode attention
+    W = 2048
+    qd = jax.random.normal(ks[0], (B, 1, H, d))
+    kd = jax.random.normal(ks[1], (B, W, K, d))
+    vd = jax.random.normal(ks[2], (B, W, K, d))
+    bias = jnp.zeros((B, W))
+    us_k = _time(lambda *a: decode_attention(*a), qd, kd, vd, bias)
+    err = float(jnp.max(jnp.abs(decode_attention(qd, kd, vd, bias)
+                                - decode_attention_ref(qd, kd, vd, bias))))
+    rows.append(("kernels/decode_attention_interp", us_k,
+                 f"max_err={err:.1e} W={W}"))
+    # rwkv6
+    Bh, Hh, Sh, dh = 1, 2, 256, 64
+    r = jax.random.normal(ks[0], (Bh, Hh, Sh, dh)) * 0.5
+    kk = jax.random.normal(ks[1], (Bh, Hh, Sh, dh)) * 0.5
+    vv = jax.random.normal(ks[2], (Bh, Hh, Sh, dh)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (Bh, Hh, Sh, dh)) - 1.0)
+    u = jax.random.normal(ks[4], (Hh, dh)) * 0.5
+    us_k = _time(lambda *a: wkv6(*a)[0], r, kk, vv, lw, u)
+    S0 = jnp.zeros((Bh, Hh, dh, dh))
+    us_r = _time(lambda *a: wkv6_ref(*a)[0], r, kk, vv, lw, u, S0)
+    err = float(jnp.max(jnp.abs(wkv6(r, kk, vv, lw, u)[0]
+                                - wkv6_ref(r, kk, vv, lw, u, S0)[0])))
+    rows.append(("kernels/wkv6_chunked_interp", us_k,
+                 f"per_token_scan_ref_us={us_r:.0f} max_err={err:.1e} "
+                 f"S={Sh}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

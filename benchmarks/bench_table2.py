@@ -1,0 +1,69 @@
+"""Table 2: coordinator (host) resources during accelerator training.
+
+The paper's point: the host only coordinates — tiny CPU, and peak memory
+~2x the model shard *only while checkpointing*, fixed by streaming chunks.
+We measure OUR coordinator: RSS growth during a short training run, and
+checkpoint staging memory naive (whole-tree snapshot) vs streaming.
+"""
+import os
+import resource
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.streaming_checkpoint import StreamingCheckpointer
+from repro.models import model as M
+from repro.optim import OptimizerConfig, adamw_init
+
+
+def _rss_mb():
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run(sizes=("lovelock-20m",)):
+    rows = []
+    for name in sizes:
+        cfg = get_config(name)
+        params = M.init_params(jax.random.PRNGKey(0), cfg, tp=1)
+        state = adamw_init(params, OptimizerConfig())
+        state_bytes = sum(l.nbytes for l in jax.tree.leaves(state))
+
+        # naive checkpoint: stage the whole tree in host RAM at once
+        t0 = time.perf_counter()
+        blobs = [np.asarray(jax.device_get(l)).tobytes()
+                 for l in jax.tree.leaves(state)]
+        naive_peak = sum(len(b) for b in blobs)
+        naive_us = (time.perf_counter() - t0) * 1e6
+        del blobs
+
+        # streaming checkpoint: bounded double buffer
+        with tempfile.TemporaryDirectory() as d:
+            ck = StreamingCheckpointer(d, chunk_bytes=4 << 20)
+            t0 = time.perf_counter()
+            ck.save(1, state)
+            stream_us = (time.perf_counter() - t0) * 1e6
+            stream_peak = ck.metrics.peak_buffer_bytes
+
+        rows.append((f"table2/{name}/naive_ckpt", naive_us,
+                     f"staged_bytes={naive_peak} "
+                     f"({naive_peak / state_bytes:.2f}x of state)"))
+        rows.append((f"table2/{name}/streaming_ckpt", stream_us,
+                     f"peak_buffer_bytes={stream_peak} "
+                     f"({stream_peak / state_bytes:.4f}x of state) "
+                     f"reduction={naive_peak / max(stream_peak, 1):.0f}x"))
+        rows.append((f"table2/{name}/host_rss", 0.0,
+                     f"rss_mb={_rss_mb():.0f} state_mb={state_bytes/2**20:.0f}"))
+    # paper context: host CPU <= 13.3% of one E2000 during training; memory
+    # mean 3-5 GB, peak 2x model at checkpoint — our streaming bound removes
+    # exactly that peak.
+    rows.append(("table2/paper_claim", 0.0,
+                 "peak_host_mem 2x_model_at_ckpt -> O(chunk) via streaming"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,57 @@
+"""Aggregate the dry-run artifacts into the §Roofline table."""
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh="single", tag=""):
+    cells = []
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("mesh") != mesh or rec.get("status") != "ok":
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def fmt_table(cells):
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'bneck':>10s} {'useful':>7s} {'roof%':>6s} "
+           f"{'GB/dev':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        r = c["roofline"]
+        lines.append(
+            f"{c['arch']:24s} {c['shape']:12s} "
+            f"{r['t_compute']:9.2e} {r['t_memory']:9.2e} "
+            f"{r['t_collective']:9.2e} {r['bottleneck']:>10s} "
+            f"{r['useful_ratio']:7.2f} {100*r['roofline_fraction']:6.1f} "
+            f"{c['bytes_per_device']/2**30:7.1f}")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        for c in cells:
+            r = c["roofline"]
+            rows.append((
+                f"roofline/{c['arch']}/{c['shape']}/{mesh}",
+                r["step_time"] * 1e6 if "step_time" in r else
+                max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+                f"bottleneck={r['bottleneck']} "
+                f"roof_frac={r['roofline_fraction']:.3f} "
+                f"useful={r['useful_ratio']:.2f} "
+                f"dcn_bytes={c['collectives']['dcn_bytes']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        print(f"\n=== {mesh}-pod mesh ({len(cells)} cells) ===")
+        print(fmt_table(cells))

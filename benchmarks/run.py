@@ -1,0 +1,37 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the slower coordinator-resource bench "
+                         "sizes")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_collectives, bench_costmodel, bench_fig3,
+                            bench_fig4, bench_kernels, bench_table1,
+                            bench_table2, roofline)
+    print("name,us_per_call,derived")
+    mods = [bench_costmodel, bench_table1, bench_fig3, bench_fig4,
+            bench_table2, bench_collectives, bench_kernels, roofline]
+    failed = 0
+    for mod in mods:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},0,ERROR {type(e).__name__}: {e}",
+                  file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

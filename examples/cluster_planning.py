@@ -1,0 +1,36 @@
+"""Lovelock cluster planning from real dry-run rooflines.
+
+Reads the dry-run artifacts, converts each cell's roofline terms into a
+WorkloadProfile, and runs the paper's cost model to pick phi per workload.
+
+    PYTHONPATH=src python examples/cluster_planning.py
+"""
+import json
+import pathlib
+
+from repro.core.cluster import WorkloadProfile, plan
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main():
+    cells = []
+    for f in sorted(ART.glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok":
+            cells.append(rec)
+    if not cells:
+        print("no dry-run artifacts; run: python -m repro.launch.dryrun")
+        return
+    print(f"{'workload':40s} {'phi':>4s} {'mu':>6s} {'cost':>6s} "
+          f"{'energy':>7s} bottleneck")
+    for rec in cells[:20]:
+        prof = WorkloadProfile.from_roofline(rec["roofline"])
+        p = plan(prof, n_servers=64)
+        print(f"{rec['arch'] + '/' + rec['shape']:40s} {p.phi:4.0f} "
+              f"{p.mu:6.2f} {p.cost_ratio:5.2f}x {p.power_ratio:6.2f}x "
+              f"{rec['roofline']['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: train a tiny model for a few steps, then generate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.models import model as M
+from repro.optim import OptimizerConfig, adamw_init
+from repro.train import make_prefill, make_serve_step, make_train_step
+
+
+def main():
+    cfg = smoke_variant(get_config("qwen3-32b"))
+    print(f"model: {cfg.name}  params={cfg.param_count()[0]/1e6:.1f}M")
+    oc = OptimizerConfig(lr=1e-3)
+    params = M.init_params(jax.random.PRNGKey(0), cfg, tp=1)
+    state = adamw_init(params, oc)
+    step = jax.jit(make_train_step(cfg, oc))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 65), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    for i in range(10):
+        state, m = step(state, batch)
+        if i % 3 == 0:
+            print(f"step {i}: loss={float(m['loss']):.4f}")
+
+    # generation: prefill a prompt, decode 12 tokens greedily
+    B, P, G = 2, 16, 12
+    caches = M.init_caches(cfg, B, P + G, tp=1)
+    prefill = jax.jit(make_prefill(cfg))
+    decode = jax.jit(make_serve_step(cfg))
+    logits, caches = prefill(state.params, caches,
+                             {"tokens": toks[:B, :P]})
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    for _ in range(G - 1):
+        tok, caches = decode(state.params, caches, tok)
+        outs.append(tok)
+    gen = jnp.concatenate(outs, axis=1)
+    print("generated token ids:", gen.tolist())
+
+
+if __name__ == "__main__":
+    main()

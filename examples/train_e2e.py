@@ -1,0 +1,36 @@
+"""End-to-end training driver for the ~100M reference model (deliverable b).
+
+Full run (a few hundred steps; produces artifacts/train_100m.jsonl):
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 250
+
+Quick check:
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 10 --batch 4 --seq 128
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_100m")
+    args = ap.parse_args()
+    cfg = get_config("lovelock-100m")
+    total, _ = cfg.param_count()
+    print(f"training {cfg.name}: {total/1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+    state, info = train_loop(cfg, steps=args.steps, batch=args.batch,
+                             seq=args.seq, ckpt_dir=args.ckpt_dir,
+                             log_path="artifacts/train_100m.jsonl")
+    l = info["losses"]
+    print(f"loss {l[0]:.3f} -> {l[-1]:.3f} over {len(l)} steps")
+
+
+if __name__ == "__main__":
+    main()

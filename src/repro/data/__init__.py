@@ -1,0 +1,1 @@
+from repro.data.pipeline import StorageNodeDataset, Prefetcher  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel package has <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper + custom_vjp) and ref.py (pure-jnp oracle).
+Validated with interpret=True on CPU; interpret=False on real TPUs.
+"""

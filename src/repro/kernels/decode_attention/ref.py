@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, bias):
+    """q (B,1,H,d), k/v (B,W,K,d), bias (B,W) additive fp32 (mask).
+
+    Returns (B,1,H,d).
+    """
+    B, _, H, d = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(B, 1, K, g, d)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(d) + bias[:, None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return o.reshape(B, 1, H, d)

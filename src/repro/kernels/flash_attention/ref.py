@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (causal/windowed GQA)."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q (B,S,H,d), k/v (B,S,K,d) with H % K == 0. fp32 softmax."""
+    B, S, H, d = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(B, S, K, g, d)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    pos = jnp.arange(S)
+    dlt = pos[:, None] - pos[None, :]
+    ok = jnp.full((S, S), True)
+    if causal:
+        ok = ok & (dlt >= 0)
+    if window is not None:
+        ok = ok & (dlt < window)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return o.reshape(B, S, H, d)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence — per-token scan.
+
+S_t = diag(w_t) S_{t-1} + k_t v_t^T
+o_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+"""
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, S0):
+    """r,k,v,logw (B,H,S,d); u (H,d); S0 (B,H,d,d). Returns (o, S_final)."""
+    B, H, S, d = r.shape
+
+    def step(Sm, t):
+        rt, kt, vt, wt = r[:, :, t], k[:, :, t], v[:, :, t], logw[:, :, t]
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,d,d)
+        o = jnp.einsum("bhd,bhde->bhe", rt, Sm) \
+            + jnp.einsum("bhd,hd,bhd,bhe->bhe", rt, u, kt, vt)
+        S1 = jnp.exp(wt)[..., :, None] * Sm + kv
+        return S1, o
+
+    S_fin, outs = jax.lax.scan(step, S0, jnp.arange(S))
+    return outs.transpose(1, 2, 0, 3), S_fin

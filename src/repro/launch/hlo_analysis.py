@@ -1,0 +1,199 @@
+"""Parse compiled HLO text for collective traffic and roofline terms.
+
+cost_analysis() gives per-device FLOPs/bytes; collective bytes are NOT in
+cost_analysis, so we parse the (SPMD-partitioned, per-device) HLO module:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op's *output* bytes are summed, and each op is
+attributed to the ICI tier (within a pod) or DCN tier (crossing the `pod`
+axis) from its replica groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of 'bf16[4,128]{1,0}' or tuple '(f32[2], f32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def _parse_replica_groups(line: str, n_dev: int) -> Optional[list]:
+    """Return list of groups (lists of device ids) or None."""
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", line)
+    if m:
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+    # iota format: replica_groups=[8,64]<=[512]  or  <=[16,32]T(1,0)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?",
+                  line)
+    if m:
+        g0, g1 = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(reshape))).reshape(reshape)
+        if m.group(5):
+            perm = [int(x) for x in m.group(5).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(g0, g1).tolist()
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    ici_bytes: int = 0
+    dcn_bytes: int = 0
+    n_ops: int = 0
+
+    @property
+    def total_bytes(self):
+        return sum(self.bytes_by_kind.values())
+
+
+def analyze_collectives(hlo_text: str, *, pod_size: Optional[int] = None,
+                        n_dev: int = 1) -> CollectiveStats:
+    stats = CollectiveStats(bytes_by_kind={})
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:      # avoid double count of async pairs
+            continue
+        b = _shape_bytes(type_str)
+        if kind == "all-gather" or kind == "all-reduce":
+            pass                   # output bytes ~ moved bytes per device
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.n_ops += 1
+        crosses = False
+        if pod_size:
+            groups = _parse_replica_groups(line, n_dev)
+            if groups:
+                for g in groups:
+                    pods = {d // pod_size for d in g}
+                    if len(pods) > 1:
+                        crosses = True
+                        break
+            else:
+                crosses = True     # unknown groups: assume global
+        if crosses:
+            stats.dcn_bytes += b
+        else:
+            stats.ici_bytes += b
+    return stats
+
+
+# ---- TPU v5e hardware constants (roofline targets) -------------------------
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9 * 4                 # ~50 GB/s/link, 4 links per chip (2D torus)
+DCN_BW = 25e9                     # per-chip share of the cross-pod fabric
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    ici_bytes: float
+    dcn_bytes: float
+    model_flops: float = 0.0      # 6*N*D useful flops, per device
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.ici_bytes / ICI_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def bottleneck(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self):          # perfectly-overlapped lower bound
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """Fraction of the chip's peak sustained on *useful* model flops
+        assuming perfect overlap — the headline §Perf score."""
+        t = self.step_time
+        return (self.model_flops / t / PEAK_FLOPS_BF16) if t else 0.0
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "ici_bytes": self.ici_bytes, "dcn_bytes": self.dcn_bytes,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """6*N*D for train, 2*N_active per token for decode/prefill (global)."""
+    total, active = cfg.param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        base = 6.0 * active * tokens
+    else:
+        base = 2.0 * active * tokens
+    # attention flops (not in param count): 2*2*S_kv*D_attn per token
+    hd = cfg.head_dim_()
+    n_attn = (cfg.num_layers // cfg.attn_every) if cfg.num_heads else 0
+    if cfg.rwkv:
+        n_attn = 0   # attention-free; wkv flops are ~included in 2*N*D
+    s_kv = shape.seq_len if shape.kind != "decode" else shape.seq_len
+    if cfg.sliding_window:
+        s_kv = min(s_kv, cfg.sliding_window)
+    att = 4.0 * cfg.num_heads * hd * s_kv * n_attn
+    if shape.kind == "train":
+        att_total = 3.0 * att * tokens * 0.5     # causal halves, fwd+bwd=3x
+    elif shape.kind == "prefill":
+        att_total = att * tokens * 0.5
+    else:
+        att_total = att * tokens
+    return base + att_total

@@ -1,0 +1,295 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+so any lax.scan-stacked model under-reports FLOPs/bytes/collectives by a
+factor of ~num_layers.  This module re-derives the three roofline inputs
+from the optimized HLO text:
+
+  * builds the computation call graph (while bodies, fusions, calls),
+  * extracts each while loop's trip count from the constant bound in its
+    condition computation (lax.scan lowers to `compare(i, constant(T))`),
+  * multiplies nested body costs by the product of enclosing trip counts,
+  * counts dot FLOPs exactly (2 * out_elems * contracted_size), elementwise
+    ops at 1 flop/elt, bytes as operands+outputs of non-free ops, and
+    collective bytes per tier (ICI vs DCN from replica groups).
+
+Approximations (documented in EXPERIMENTS.md §Roofline):
+  * fusion bytes may double-count an inner dot's operands (small),
+  * dynamic trip counts default to 1 (none in this codebase's HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HDR_RE = re.compile(r"^(?:ENTRY )?(%[\w.\-]+) \((.*)\) -> (.+) \{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?(%[\w.\-]+) = (\([^)]*\)|\S+) ([\w\-]+)\((.*)$")
+_FREE_OPS = {"bitcast", "reshape", "tuple", "get-tuple-element",
+             "parameter", "constant", "after-all", "partition-id",
+             "replica-id", "iota", "broadcast",
+             # CPU-backend bf16 legalization inserts whole-tensor
+             # f32<->bf16 converts that do not exist on TPU; treating them
+             # as free keeps the memory term TPU-faithful (DESIGN.md §5)
+             "convert"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_elems_bytes(type_str: str):
+    elems, nbytes = 0, 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DT_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list
+    params: dict               # %name -> type string
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_ici: float = 0.0
+    coll_dcn: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    n_coll_ops: int = 0
+    trip_counts: dict = dataclasses.field(default_factory=dict)
+    # HBM bytes of attention-score-shaped tensors (two dims == seq_hint).
+    # On TPU these live in VMEM inside the Pallas flash kernel; the
+    # flash-modeled memory term is (bytes - 2*score_bytes) / HBM_BW.
+    score_bytes: float = 0.0
+
+
+def _parse_computations(text: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, Computation] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        m = _HDR_RE.match(line)
+        if m:
+            name = m.group(1)
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+): (\([^)]*\)|[^,)]+)",
+                                  m.group(2)):
+                params["%" + pm.group(1)] = pm.group(2)
+            cur = Computation(name, [], params)
+            comps[name] = cur
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur.lines.append(line)
+    return comps, entry
+
+
+def _symbol_table(comps: dict) -> dict:
+    table: dict[str, str] = {}
+    for c in comps.values():
+        table.update(c.params)
+        for line in c.lines:
+            m = _OP_RE.match(line)
+            if m:
+                table[m.group(1)] = m.group(2)
+    return table
+
+
+def _operands(rest: str) -> list:
+    # rest is everything after "opcode(" — cut at the matching close paren
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            out.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur.strip())
+    return [o for o in out if o.startswith("%")]
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition = the scan bound."""
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _parse_replica_groups(line: str):
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", line)
+    if m:
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?",
+        line)
+    if m:
+        g0, g1 = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(reshape))).reshape(reshape)
+        if m.group(5):
+            ids = ids.transpose([int(x) for x in m.group(5).split(",")])
+        return ids.reshape(g0, g1).tolist()
+    return None
+
+
+def analyze(text: str, *, pod_size: Optional[int] = None,
+            seq_hint: Optional[int] = None) -> HloCost:
+    comps, entry = _parse_computations(text)
+    table = _symbol_table(comps)
+    cost = HloCost()
+
+    # call-graph multipliers via DFS from entry
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name].lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            opcode = om.group(3)
+            if opcode == "while":
+                bm = re.search(r"body=([%\w.\-]+)", line)
+                cm = re.search(r"condition=([%\w.\-]+)", line)
+                trips = 1
+                if cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                    cost.trip_counts[cm.group(1)] = trips
+                if bm:
+                    visit(bm.group(1), m * trips)
+                if cm:
+                    visit(cm.group(1), m * trips)
+            else:
+                for attr in re.finditer(
+                        r"(?:calls|to_apply|branch_computations)="
+                        r"\{?([%\w.\-, ]+)\}?", line):
+                    for c in attr.group(1).split(","):
+                        visit(c.strip(), m)
+
+    if entry:
+        visit(entry, 1.0)
+    else:  # fallback: everything once
+        for name in comps:
+            mult[name] = 1.0
+
+    # per-computation direct costs.
+    #
+    # Byte model: every materialized tensor is written once and read once
+    # => HBM bytes ~= 2 * sum(effective output bytes) + entry args once.
+    # This avoids operand-side pathologies (e.g. a fusion that dynamic-
+    # slices a whole 126-layer stacked carry buffer must not be charged
+    # the full buffer per iteration).  dynamic-update-slice is in-place on
+    # TPU, so its effective output is the updated slice.
+    arg_bytes = 0
+    if entry:
+        for t in comps[entry].params.values():
+            arg_bytes += _shape_elems_bytes(t)[1]
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        is_fusion_body = name != entry and not name.startswith("%wide") \
+            and "region" not in name
+        for line in comp.lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            _, type_str, opcode, rest = om.groups()
+            out_elems, out_bytes = _shape_elems_bytes(type_str)
+            if opcode in _FREE_OPS or opcode == "while":
+                continue
+            opnds = _operands(rest)
+            eff_out = out_bytes
+            if opcode == "dynamic-update-slice":
+                eff_out = (_shape_elems_bytes(table.get(opnds[1], ""))[1]
+                           if len(opnds) > 1 else out_bytes)
+            if seq_hint and seq_hint >= 1024:
+                sm = _SHAPE_RE.search(type_str)
+                if sm and sm.group(2):
+                    ds = [int(x) for x in sm.group(2).split(",")]
+                    if ds.count(seq_hint) >= 2:   # (.., S, S) score shape
+                        cost.score_bytes += m * 2 * eff_out
+            if opcode == "dot":
+                lhs = table.get(opnds[0], "") if opnds else ""
+                dims = [int(x) for x in
+                        re.findall(r"\d+", re.search(
+                            r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                            .group(1))] if "lhs_contracting_dims" in line \
+                    else []
+                lhs_shape = []
+                sm = _SHAPE_RE.search(lhs)
+                if sm and sm.group(2):
+                    lhs_shape = [int(x) for x in sm.group(2).split(",")]
+                k = 1
+                for d in dims:
+                    if d < len(lhs_shape):
+                        k *= lhs_shape[d]
+                cost.flops += m * 2.0 * out_elems * max(k, 1)
+                cost.bytes += m * 2 * eff_out
+            elif opcode in _COLLECTIVES or (
+                    opcode.endswith("-start")
+                    and opcode[:-6] in _COLLECTIVES):
+                kind = opcode[:-6] if opcode.endswith("-start") else opcode
+                b = out_bytes
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0) \
+                    + m * b
+                cost.n_coll_ops += 1
+                crosses = False
+                if pod_size:
+                    groups = _parse_replica_groups(line)
+                    if groups:
+                        crosses = any(len({d // pod_size for d in g}) > 1
+                                      for g in groups)
+                    else:
+                        crosses = True
+                if crosses:
+                    cost.coll_dcn += m * b
+                else:
+                    cost.coll_ici += m * b
+                cost.bytes += m * 2 * eff_out
+            else:
+                # inner ops of kLoop fusion bodies are not materialized —
+                # only the fusion op itself (in its caller) writes HBM
+                if not is_fusion_body:
+                    cost.bytes += m * 2 * eff_out
+                cost.flops += m * out_elems
+    cost.bytes += arg_bytes
+    return cost

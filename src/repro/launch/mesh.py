@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The single-pod production mesh
+is 16x16 = 256 chips (one TPU v5e pod-slice); the multi-pod mesh adds a
+leading "pod" axis (2 pods = 512 chips) whose collectives ride DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axes(mesh) -> dict:
+    names = mesh.axis_names
+    return {
+        "batch": tuple(n for n in ("pod", "data") if n in names),
+        "model": ("model",) if "model" in names else (),
+        "fsdp": tuple(n for n in ("pod", "data") if n in names),
+    }

@@ -1,0 +1,43 @@
+"""Re-derive roofline records from dumped HLO (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+import gzip
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import Roofline, model_flops_per_step
+from repro.launch.hlo_cost import analyze
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def main():
+    for gz in sorted((ART / "hlo").glob("*.txt.gz")):
+        name = gz.name[:-7]
+        jf = ART / "dryrun" / f"{name}.json"
+        if not jf.exists():
+            continue
+        rec = json.loads(jf.read_text())
+        n_dev = rec["n_devices"]
+        pod_size = 256 if rec["mesh"] == "multi" else None
+        with gzip.open(gz, "rt") as f:
+            cost = analyze(f.read(), pod_size=pod_size)
+        cfg = get_config(rec["arch"])
+        mf = model_flops_per_step(cfg, SHAPES[rec["shape"]]) / n_dev
+        roof = Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                        ici_bytes=cost.coll_ici, dcn_bytes=cost.coll_dcn,
+                        model_flops=mf)
+        rec["roofline"] = roof.to_dict()
+        rec["collectives"] = {"by_kind": cost.coll_by_kind,
+                              "ici_bytes": cost.coll_ici,
+                              "dcn_bytes": cost.coll_dcn,
+                              "n_ops": cost.n_coll_ops}
+        jf.write_text(json.dumps(rec, indent=1))
+        print(name, roof.bottleneck,
+              f"roof={roof.roofline_fraction:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,558 @@
+"""Pure-functional model layers (params are plain dict pytrees).
+
+Conventions
+-----------
+* Weights carry TP-aligned padded head counts (see ModelConfig.padded_heads):
+  padded q heads have zero Wq columns / zero Wo rows, so the function equals
+  the unpadded architecture exactly.
+* `rules` is an optional `ShardingRules`; `rules.cs(x, logical)` applies a
+  with_sharding_constraint, or is a no-op on a single device.
+* Layers are written with jnp/lax only (scan/associative_scan for SSMs) so
+  they lower under GSPMD; attention can be swapped for the Pallas kernel
+  with cfg.use_pallas (TPU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Small pieces
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, d). positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mask_bias(q_pos, k_pos, causal, window):
+    """(..., Sq, Sk) additive bias; q_pos (...,Sq), k_pos (...,Sk)."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = d >= 0 if causal else jnp.full(d.shape, True)
+    if window is not None:
+        ok = ok & (d < window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE + qk-norm + SWA + cross-attn)
+# ---------------------------------------------------------------------------
+
+
+def _attn_core_chunked(q, k, v, q_pos, k_pos, causal, window, block=512):
+    """Online-softmax attention scanned over key blocks (XLA-native flash).
+
+    Never materializes the (Sq, Sk) score tensor: peak activation memory
+    is O(Sq * block) instead of O(Sq * Sk) — the same insight as the
+    Pallas kernel, expressed in lax.scan so it lowers on every backend.
+    q (B,Sq,H,d), k/v (B,Sk,K,d), *_pos (B,S). fp32 accumulation.
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    group = Hq // Kv
+    nb = max(1, Sk // block)
+    block = Sk // nb
+    assert nb * block == Sk, (Sk, block)
+    qg = (q.reshape(B, Sq, Kv, group, dh).astype(jnp.float32)
+          / math.sqrt(dh))
+    ks = k.reshape(B, nb, block, Kv, dh).swapaxes(0, 1)
+    vs = v.reshape(B, nb, block, Kv, dh).swapaxes(0, 1)
+    kps = k_pos.reshape(B, nb, block).swapaxes(0, 1)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, kp = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.float32))
+        d = q_pos[:, None, None, :, None] - kp[:, None, None, None, :]
+        ok = d >= 0 if causal else jnp.full(d.shape, True)
+        if window is not None:
+            ok = ok & (d < window)
+        s = jnp.where(ok, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Kv, group, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Kv, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Kv, group, Sq, dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return (out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+            .astype(v.dtype))
+
+
+def _attn_core(q, k, v, bias, rules=None):
+    """q (B,Sq,H,d), k/v (B,Sk,K,d), bias (B,Sq,Sk) additive fp32."""
+    B, Sq, Hq, dh = q.shape
+    Kv = k.shape[2]
+    group = Hq // Kv
+    qg = q.reshape(B, Sq, Kv, group, dh)
+    scores = (jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+              / math.sqrt(dh))
+    scores = scores + bias[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(B, Sq, Hq, dh)
+    return o
+
+
+def _qkv(p, x, src, cfg, rules=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if rules is not None:
+        q, k, v = (rules.cs(t, "act_bshd") for t in (q, k, v))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def _proj_out(p, o, rules=None):
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if rules is not None:
+        out = rules.cs(out, "act_bsd")
+    return out
+
+
+def self_attention(p, x, cfg, rules=None, *, causal=None, use_rope=True,
+                   kv_cache=None, cache_index=None, use_pallas=False):
+    """Self-attention over a full sequence (train / prefill).
+
+    p: {wq (D,H',hd), wk/wv (D,K',hd), wo (H',hd,D), [qn, kn (hd,)]}
+    If kv_cache given, writes the (tail of the) new K/V into it at
+    cache_index and returns (out, new_cache); attention itself always runs
+    over the freshly computed full-sequence K/V.
+    """
+    causal = cfg.causal if causal is None else causal
+    B, S, D = x.shape
+    q, k, v = _qkv(p, x, x, cfg, rules)
+    positions = jnp.broadcast_to(
+        (0 if cache_index is None else cache_index)
+        + jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        W = ck.shape[1]
+        if S >= W:                       # ring smaller than prefill: keep tail
+            start = (cache_index + S - W) % W
+            widx = (start + jnp.arange(W)) % W
+            ck = ck.at[:, widx].set(k[:, -W:].astype(ck.dtype))
+            cv = cv.at[:, widx].set(v[:, -W:].astype(cv.dtype))
+        else:
+            widx = (cache_index + jnp.arange(S)) % W
+            ck = ck.at[:, widx].set(k.astype(ck.dtype))
+            cv = cv.at[:, widx].set(v.astype(cv.dtype))
+        new_cache = {"k": ck, "v": cv}
+    if use_pallas:
+        from repro.kernels.flash_attention import ops as fops
+        o = fops.flash_attention(q, k, v, causal=causal,
+                                 window=cfg.sliding_window)
+    elif getattr(cfg, "attn_block", None):
+        o = _attn_core_chunked(q, k, v, positions, positions, causal,
+                               cfg.sliding_window, block=cfg.attn_block)
+    else:
+        bias = _mask_bias(positions, positions, causal, cfg.sliding_window)
+        o = _attn_core(q, k, v, bias, rules)
+    return _proj_out(p, o, rules), new_cache
+
+
+def decode_attention(p, x, cfg, rules=None, *, cache, cache_index,
+                     use_rope=True, use_pallas=False):
+    """Single-token (Sq=1) self-attention over a KV cache (ring for SWA)."""
+    B, S, D = x.shape
+    assert S == 1
+    q, k, v = _qkv(p, x, x, cfg, rules)
+    pos = jnp.broadcast_to(cache_index[None, None]
+                           if jnp.ndim(cache_index) == 0 else cache_index,
+                           (B, 1)).astype(jnp.int32)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    ck, cv = cache["k"], cache["v"]
+    W = ck.shape[1]
+    slot = (cache_index % W).astype(jnp.int32)
+    ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    new_cache = {"k": ck, "v": cv}
+    slots = jnp.arange(W)[None, :]
+    # ring semantics hold for full caches too: unwritten future slots get
+    # negative positions and are masked invalid.
+    kv_pos = cache_index - ((cache_index - slots) % W)
+    kv_pos = jnp.broadcast_to(kv_pos, (B, W)).astype(jnp.int32)
+    valid = (kv_pos >= 0) & (kv_pos <= cache_index)
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, :]
+    if use_pallas:
+        from repro.kernels.decode_attention import ops as dops
+        o = dops.decode_attention(q, ck, cv, bias[:, 0])
+    else:
+        o = _attn_core(q, ck, cv, bias, rules)
+    return _proj_out(p, o, rules), new_cache
+
+
+def cross_attention(p, x, cfg, rules=None, *, kv=None, cache=None):
+    """Cross-attention to a fixed source (image tokens / encoder output).
+
+    Either `kv` (source activations (B,T,D), prefill — projects and returns
+    a cache) or `cache` ({k,v} precomputed, decode) must be given.
+    """
+    B, S, D = x.shape
+    if cache is None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", kv, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv, p["wv"])
+        if cfg.qk_norm:
+            q = rms_norm(q, p["qn"], cfg.norm_eps)
+            k = rms_norm(k, p["kn"], cfg.norm_eps)
+        new_cache = {"k": k, "v": v}
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qk_norm:
+            q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    if rules is not None:
+        q = rules.cs(q, "act_bshd")
+    T = k.shape[1]
+    bias = jnp.zeros((B, S, T), jnp.float32)
+    o = _attn_core(q, k, v, bias, rules)
+    out = _proj_out(p, o, rules)
+    if "gate" in p:                      # gated cross-attn (llama-3.2-vision)
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU dense + token-choice top-k MoE (GShard-style einsum dispatch)
+# ---------------------------------------------------------------------------
+
+
+def swiglu(p, x, rules=None):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    if rules is not None:
+        h = rules.cs(h, "act_bsf")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def _moe_route(p, xt, moe_cfg):
+    """Shared routing: returns (gate_vals, expert_ids, pos, keep, probs)."""
+    E, K = moe_cfg.num_experts, moe_cfg.top_k
+    N = xt.shape[0]
+    logits = jnp.einsum("nd,de->ne", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = lax.top_k(probs, K)               # (N,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    C = max(1, int(moe_cfg.capacity_factor * K * N / E))
+    # position of each (token, k) within its expert, in (k-major, token) order
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)   # (N,K,E)
+    flat = onehot.transpose(1, 0, 2).reshape(K * N, E)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat                # (K*N, E)
+    pos = (pos_flat.reshape(K, N, E).transpose(1, 0, 2)
+           * onehot).sum(-1)                                  # (N,K)
+    keep = (pos < C).astype(gate_vals.dtype)
+    return gate_vals * keep, expert_ids, pos, C, probs
+
+
+def _moe_aux(expert_ids, probs, moe_cfg):
+    E = moe_cfg.num_experts
+    f = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), 0)
+    pm = jnp.mean(probs, 0)
+    return E * jnp.sum(f * pm) * moe_cfg.aux_loss_weight
+
+
+def _expert_ffn(p, xe, rules=None):
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(g) * u
+    if rules is not None:
+        h = rules.cs(h, "moe_ecf")
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if rules is not None:
+        ye = rules.cs(ye, "moe_ecd")
+    return ye
+
+
+def moe_ffn(p, x, moe_cfg, rules=None):
+    """Token-choice top-k MoE.
+
+    p: {router (D,E), w_gate/w_up (E,D,F), w_down (E,F,D),
+        [shared: swiglu params]}
+    Returns (out, aux_loss).  Dispatch per moe_cfg.dispatch:
+      'einsum'  — GShard one-hot einsums (dense): 2*N*E*C*D dispatch flops.
+      'scatter' — scatter-add to expert slots / gather back: O(N*K*D) data
+                  movement, no dispatch matmuls (for very large E).
+    """
+    B, S, D = x.shape
+    E, K = moe_cfg.num_experts, moe_cfg.top_k
+    N = B * S
+    xt = x.reshape(N, D)
+    gate_vals, expert_ids, pos, C, probs = _moe_route(p, xt, moe_cfg)
+
+    if moe_cfg.dispatch == "scatter":
+        slot = expert_ids * C + pos                           # (N,K)
+        keep = gate_vals > 0
+        slot = jnp.where(keep, slot, E * C)                   # overflow bin
+        xe = jnp.zeros((E * C + 1, D), xt.dtype)
+        xe = xe.at[slot.reshape(-1)].add(
+            jnp.repeat(xt[:, None, :], K, 1).reshape(-1, D),
+            mode="drop")
+        xe = xe[:E * C].reshape(E, C, D)
+        if rules is not None:
+            xe = rules.cs(xe, "moe_ecd")
+        ye = _expert_ffn(p, xe, rules)
+        flat = ye.reshape(E * C, D)
+        back = jnp.take(flat, jnp.clip(slot, 0, E * C - 1).reshape(-1),
+                        axis=0).reshape(N, K, D)
+        out = jnp.sum(back * gate_vals[..., None].astype(back.dtype), axis=1)
+    else:
+        # dispatch/combine tensors (N,E,C) factored per k to bound memory
+        xe = jnp.zeros((E, C, D), xt.dtype)
+        combine = jnp.zeros((N, E, C), jnp.float32)
+        for k in range(K):
+            d_k = (jax.nn.one_hot(expert_ids[:, k], E,
+                                  dtype=xt.dtype)[:, :, None]
+                   * jax.nn.one_hot(pos[:, k], C, dtype=xt.dtype)[:, None, :])
+            d_k = d_k * (gate_vals[:, k] > 0)[:, None, None].astype(xt.dtype)
+            xe = xe + jnp.einsum("nec,nd->ecd", d_k, xt)
+            combine = combine + (d_k.astype(jnp.float32)
+                                 * gate_vals[:, k, None, None])
+        if rules is not None:
+            xe = rules.cs(xe, "moe_ecd")
+        ye = _expert_ffn(p, xe, rules)
+        out = jnp.einsum("nec,ecd->nd", combine.astype(ye.dtype), ye)
+
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        out = out + swiglu(p["shared"], x, rules)
+    return out, _moe_aux(expert_ids, probs, moe_cfg)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — chunked associative-scan, decode single-step
+# ---------------------------------------------------------------------------
+
+MAMBA_CHUNK = 256
+
+
+def _mamba_ssm_chunked(dt, A, Bm, Cm, xin, h0):
+    """h_t = exp(dt_t*A) h_{t-1} + dt_t*B_t*x_t ; y_t = C_t . h_t.
+
+    dt,xin: (B,S,I)  Bm,Cm: (B,S,Nst)  A: (I,Nst)  h0: (B,I,Nst)
+    Returns y (B,S,I), h_final.
+    """
+    Bsz, S, I = xin.shape
+    Nst = A.shape[1]
+    nchunk = max(1, S // MAMBA_CHUNK)
+    c = S // nchunk
+    dA = jnp.exp(dt[..., None] * A)                          # (B,S,I,N)
+    dBx = (dt * xin)[..., None] * Bm[:, :, None, :]          # (B,S,I,N)
+
+    def chunk_step(h, inp):
+        dA_c, dBx_c, C_c = inp                               # (B,c,I,N),(B,c,N)
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        aa, bb = lax.associative_scan(comb, (dA_c, dBx_c), axis=1)
+        h_all = aa * h[:, None] + bb                          # (B,c,I,N)
+        y = jnp.einsum("bcin,bcn->bci", h_all, C_c)
+        return h_all[:, -1], y
+
+    dA_s = dA.reshape(Bsz, nchunk, c, I, Nst).swapaxes(0, 1)
+    dBx_s = dBx.reshape(Bsz, nchunk, c, I, Nst).swapaxes(0, 1)
+    C_s = Cm.reshape(Bsz, nchunk, c, Nst).swapaxes(0, 1)
+    h_last, ys = lax.scan(chunk_step, h0, (dA_s, dBx_s, C_s))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, I)
+    return y, h_last
+
+
+def mamba(p, x, cfg, rules=None, *, state=None):
+    """Mamba-1 selective SSM block.
+
+    p: {in_proj (D, 2I), conv_w (dc, I), conv_b (I,), x_proj (I, R+2N),
+        dt_proj (R, I), dt_bias (I,), A_log (I,N), Dskip (I,), out_proj (I,D)}
+    state: {conv: (B, dc-1, I), ssm: (B,I,N)} for decode.
+    """
+    m = cfg.mamba
+    B, S, D = x.shape
+    I = m.expand * D
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = xz[..., :I], xz[..., I:]
+    if rules is not None:
+        xin = rules.cs(xin, "act_bsf")
+        z = rules.cs(z, "act_bsf")
+    # depthwise causal conv over seq (dc taps)
+    dc = m.d_conv
+    if state is not None:
+        ctx = jnp.concatenate([state["conv"], xin], axis=1)   # (B,dc-1+S,I)
+    else:
+        ctx = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(ctx[:, i:i + S] * p["conv_w"][i] for i in range(dc))
+    xin_c = jax.nn.silu(conv + p["conv_b"])
+    new_conv = ctx[:, -(dc - 1):] if dc > 1 else ctx[:, :0]
+
+    R = p["dt_proj"].shape[0]
+    N = m.d_state
+    dbc = jnp.einsum("bsi,ir->bsr", xin_c, p["x_proj"])
+    dt_r, Bm, Cm = dbc[..., :R], dbc[..., R:R + N], dbc[..., R + N:]
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"])
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = state["ssm"] if state is not None else jnp.zeros(
+        (B, I, N), jnp.float32)
+    y, h_last = _mamba_ssm_chunked(
+        dt.astype(jnp.float32), A, Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32), xin_c.astype(jnp.float32), h0)
+    y = y.astype(x.dtype) + xin_c * p["Dskip"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssm": h_last}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay WKV, chunked parallel form
+# ---------------------------------------------------------------------------
+
+RWKV_CHUNK = 64
+
+
+def _wkv6_chunked(r, k, v, logw, u, S0):
+    """out_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1}
+    + k_t v_t^T,  w_t = exp(logw_t) in (0,1].
+
+    r,k,v,logw: (B,H,S,d)  u: (H,d)  S0: (B,H,d,d)  ->  (out, S_final)
+    All decay exponents are differences of a running cumsum and are <= 0,
+    so the chunked form is overflow-free by construction.
+    """
+    B, H, S, d = r.shape
+    c = min(RWKV_CHUNK, S)
+    nch = S // c
+    assert S % c == 0
+    rs = r.reshape(B, H, nch, c, d).transpose(2, 0, 1, 3, 4)
+    ks = k.reshape(B, H, nch, c, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, H, nch, c, d).transpose(2, 0, 1, 3, 4)
+    lws = logw.reshape(B, H, nch, c, d).transpose(2, 0, 1, 3, 4)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)               # i < t strictly
+
+    def step(S0_, inp):
+        rc, kc, vc, lw = inp                                  # (B,H,c,d)
+        clw = jnp.cumsum(lw, axis=2)                          # (B,H,c,d)
+        clw_prev = clw - lw                                   # sum_{i<t}
+        # intra-chunk scores: P[t,i,d] = exp(clw_prev[t] - clw[i]),  i < t
+        diff = clw_prev[:, :, :, None, :] - clw[:, :, None, :, :]
+        P = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -jnp.inf))
+        att = jnp.einsum("bhtd,bhtid,bhid->bhti", rc, P, kc)
+        out = jnp.einsum("bhti,bhie->bhte", att, vc)
+        # bonus diagonal term: (r_t . (u * k_t)) v_t
+        out = out + jnp.einsum("bhtd,hd,bhtd,bhte->bhte", rc, u, kc, vc)
+        # inter-chunk: r~_t = r_t * exp(clw_prev[t])
+        out = out + jnp.einsum("bhtd,bhde->bhte", rc * jnp.exp(clw_prev), S0_)
+        # state update: S = exp(clw[-1]) S0 + sum_i exp(clw[-1]-clw[i]) k_i v_i
+        wtot = clw[:, :, -1:, :]
+        Kdec = kc * jnp.exp(wtot - clw)
+        S1 = (jnp.exp(wtot.squeeze(2))[..., None] * S0_
+              + jnp.einsum("bhid,bhie->bhde", Kdec, vc))
+        return S1, out
+
+    S_fin, outs = lax.scan(step, S0, (rs, ks, vs, lws))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, d)
+    return out, S_fin
+
+
+def _lora(x, p, act=jnp.tanh):
+    return jnp.einsum("bsr,rd->bsd", act(jnp.einsum("bsd,dr->bsr", x, p["a"])),
+                      p["b"])
+
+
+def rwkv_time_mix(p, x, cfg, rules=None, *, state=None, use_pallas=False):
+    """RWKV6 time-mix with data-dependent decay.
+
+    p: {mu_r/k/v/g/w (D,), w0 (D,), w_lora {a (D,r), b (r,D)},
+        wr/wk/wv/wg (D,H,hd), wo (H,hd,D), u (H,hd), ln_x (H*hd,)}
+    state: {shift (B,1,D), wkv (B,H,hd,hd)}
+    """
+    B, S, D = x.shape
+    H, hd = p["u"].shape
+    if state is not None:
+        prev = jnp.concatenate([state["shift"], x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    def mix(mu):
+        return x + (prev - x) * mu
+    xr, xk, xv, xg, xw = (mix(p[f"mu_{n}"]) for n in "rkvgw")
+    r = jnp.einsum("bsd,dhk->bhsk", xr, p["wr"])
+    k = jnp.einsum("bsd,dhk->bhsk", xk, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", xv, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bhsk", xg, p["wg"]))
+    # data-dependent decay (the Finch contribution)
+    wdyn = p["w0"] + _lora(xw, p["w_lora"])                   # (B,S,D)
+    logw = -jnp.exp(wdyn.astype(jnp.float32))                 # <= 0
+    logw = logw.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    S0 = state["wkv"] if state is not None else jnp.zeros(
+        (B, H, hd, hd), jnp.float32)
+    if use_pallas and state is None:
+        from repro.kernels.rwkv6 import wkv6
+        out, S_fin = wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), logw,
+                          p["u"].astype(jnp.float32))
+    else:
+        out, S_fin = _wkv6_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), logw, p["u"].astype(jnp.float32), S0)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    # group norm per head
+    out = out.reshape(B, S, H, hd)
+    mu_ = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu_) * lax.rsqrt(var + 64e-5)
+    out = (out.reshape(B, S, H * hd) * p["ln_x"]).astype(x.dtype)
+    out = out * g.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = jnp.einsum("bshk,hkd->bsd", out.reshape(B, S, H, hd), p["wo"])
+    new_state = {"shift": x[:, -1:], "wkv": S_fin}
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, *, state=None):
+    """p: {mu_k, mu_r (D,), wk (D,F), wv (F,D), wr (D,D)}"""
+    if state is not None:
+        prev = jnp.concatenate([state, x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = x + (prev - x) * p["mu_k"]
+    xr = x + (prev - x) * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return rr * vv, x[:, -1:]

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimizerConfig, adamw_init, adamw_update, TrainState,
+)
+from repro.optim.schedules import cosine_schedule  # noqa: F401

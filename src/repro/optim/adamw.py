@@ -1,0 +1,121 @@
+"""AdamW with optional blockwise-int8 quantized moments.
+
+Memory policy (Lovelock ethos: bounded, explicit memory):
+  state_dtype = 'float32'  — classic fp32 m/v (+ fp32 master when params bf16)
+  state_dtype = 'int8'     — blockwise int8 m/v with fp32 per-block scales
+                              (~4x smaller optimizer state; master in bf16
+                              i.e. the params themselves). Required to fit the
+                              1T-param arch on a 256-chip pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # 'float32' | 'int8'
+    master: bool = True               # fp32 master copy (float32 mode only)
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Pytree
+    m: Pytree
+    v: Pytree
+    master: Optional[Pytree]
+    ef: Optional[Pytree]              # error-feedback for compressed sync
+
+
+# ---- blockwise int8 quantization ------------------------------------------
+
+
+def _quant(x):
+    """Per-row (last-axis) int8 quantization.
+
+    scale has shape x.shape[:-1] so its sharding spec is exactly the param
+    spec with the last dim dropped — no resharding in the update step.
+    """
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(x / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return {"q": q, "scale": scale.squeeze(-1).astype(jnp.float32)}
+
+
+def _dequant(d, shape):
+    return d["q"].astype(jnp.float32) * d["scale"][..., None]
+
+
+def _zeros_like_state(p, dtype):
+    if dtype == "int8":
+        return _quant(jnp.zeros(p.shape, jnp.float32))
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def adamw_init(params: Pytree, cfg: OptimizerConfig, *,
+               with_ef: bool = False) -> TrainState:
+    m = jax.tree.map(lambda p: _zeros_like_state(p, cfg.state_dtype), params)
+    v = jax.tree.map(lambda p: _zeros_like_state(p, cfg.state_dtype), params)
+    master = None
+    if cfg.state_dtype == "float32" and cfg.master:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                      params) if with_ef else None
+    return TrainState(jnp.zeros((), jnp.int32), params, m, v, master, ef)
+
+
+def adamw_update(state: TrainState, grads: Pytree, cfg: OptimizerConfig,
+                 lr_fn: Callable) -> TrainState:
+    step = state.step + 1
+    lr = lr_fn(step)
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, mast):
+        g = g.astype(jnp.float32) * scale
+        m_f = _dequant(m, p.shape) if cfg.state_dtype == "int8" else m
+        v_f = _dequant(v, p.shape) if cfg.state_dtype == "int8" else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        u = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        base = mast if mast is not None else p.astype(jnp.float32)
+        new_master = base - lr * (u + cfg.weight_decay * base)
+        new_p = new_master.astype(p.dtype)
+        m_o = _quant(m_f) if cfg.state_dtype == "int8" else m_f
+        v_o = _quant(v_f) if cfg.state_dtype == "int8" else v_f
+        return new_p, m_o, v_o, (new_master if mast is not None else None)
+
+    p_leaves, tdef = jax.tree.flatten(state.params)
+    g_leaves = tdef.flatten_up_to(grads)
+    m_leaves = tdef.flatten_up_to(state.m)
+    v_leaves = tdef.flatten_up_to(state.v)
+    mast_leaves = (tdef.flatten_up_to(state.master)
+                   if state.master is not None else [None] * len(p_leaves))
+    outs = [upd(p, g, m, v, mm) for p, g, m, v, mm in
+            zip(p_leaves, g_leaves, m_leaves, v_leaves, mast_leaves)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    new_master = None
+    if state.master is not None:
+        new_master = jax.tree.unflatten(tdef, [o[3] for o in outs])
+    return TrainState(step, new_p, new_m, new_v, new_master, state.ef)

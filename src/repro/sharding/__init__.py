@@ -1,0 +1,1 @@
+from repro.sharding.rules import ShardingRules, param_specs  # noqa: F401

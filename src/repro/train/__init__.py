@@ -1,0 +1,4 @@
+from repro.train.steps import (  # noqa: F401
+    make_train_step, make_serve_step, make_prefill, input_specs,
+    cross_entropy,
+)

@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+multi-device behaviour is tested via subprocesses (test_distributed.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,78 @@
+"""Config-layer tests: registry, param counts, head padding properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, smoke_variant, \
+    supports_shape
+from repro.configs.base import ModelConfig
+
+
+def test_all_archs_registered():
+    assert len(ALL_ARCHS) == 10
+    for a in ALL_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a
+
+
+@pytest.mark.parametrize("arch,target,tol", [
+    ("qwen3-32b", 32e9, 0.35),
+    ("llama3-405b", 405e9, 0.10),
+    ("deepseek-coder-33b", 33e9, 0.10),
+    ("h2o-danube-1.8b", 1.8e9, 0.15),
+    ("kimi-k2-1t-a32b", 1.0e12, 0.10),
+    ("llama-3.2-vision-90b", 90e9, 0.25),
+    ("jamba-v0.1-52b", 52e9, 0.25),
+    ("rwkv6-7b", 7e9, 0.25),
+    ("whisper-large-v3", 1.5e9, 0.35),
+])
+def test_param_counts_near_nameplate(arch, target, tol):
+    total, active = get_config(arch).param_count()
+    assert abs(total - target) / target < tol, (arch, total)
+    assert active <= total
+
+
+def test_kimi_active_params():
+    total, active = get_config("kimi-k2-1t-a32b").param_count()
+    assert abs(active - 32e9) / 32e9 < 0.35, active
+
+
+def test_vocab_padding():
+    cfg = get_config("whisper-large-v3")
+    assert cfg.padded_vocab() % 128 == 0
+    assert cfg.padded_vocab() >= cfg.vocab_size
+
+
+@given(st.sampled_from(ALL_ARCHS), st.sampled_from([1, 2, 4, 8, 16, 32]))
+@settings(max_examples=60, deadline=None)
+def test_padded_heads_properties(arch, tp):
+    cfg = get_config(arch)
+    if cfg.num_heads == 0:
+        return
+    if cfg.num_kv_heads < tp and tp % cfg.num_kv_heads != 0:
+        return
+    Hp, Kp, Gp = cfg.padded_heads(tp)
+    # invariants used by the sharding rules
+    assert Hp >= cfg.num_heads
+    assert Hp % Kp == 0, "q heads must group evenly over stored kv"
+    assert Kp % tp == 0 or tp % Kp == 0 or Kp >= tp
+    if Kp >= tp:
+        assert Kp % tp == 0, "stored kv heads must shard evenly"
+    # every shard's q block maps to exactly one stored kv head
+    per_shard_q = Hp // tp if Hp % tp == 0 else None
+    if per_shard_q:
+        assert (Hp // Kp) % per_shard_q == 0 or per_shard_q % (Hp // Kp) == 0
+
+
+def test_long_context_skips():
+    runnable = [a for a in ALL_ARCHS
+                if supports_shape(get_config(a), SHAPES["long_500k"])[0]]
+    assert sorted(runnable) == sorted(
+        ["h2o-danube-1.8b", "jamba-v0.1-52b", "rwkv6-7b"])
+
+
+def test_smoke_variants_small():
+    for a in ALL_ARCHS:
+        s = smoke_variant(get_config(a))
+        assert s.d_model <= 64 and s.vocab_size <= 256
+        total, _ = s.param_count()
+        assert total < 5e6

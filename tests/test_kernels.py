@@ -1,0 +1,115 @@
+"""Per-kernel allclose vs the pure-jnp oracles, shape/dtype sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention, \
+    decode_attention_ref
+from repro.kernels.flash_attention import flash_attention, \
+    flash_attention_ref
+from repro.kernels.rwkv6 import wkv6, wkv6_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,K,d,causal,win", [
+    (2, 256, 4, 2, 64, True, None),
+    (1, 384, 8, 8, 128, True, None),
+    (2, 200, 4, 1, 80, True, 96),      # GQA + sliding window + padding
+    (1, 128, 2, 2, 32, False, None),   # non-causal (whisper encoder)
+    (1, 130, 6, 2, 112, True, None),   # ragged seq + kimi head_dim
+])
+def test_flash_attention_sweep(B, S, H, K, d, causal, win, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, d), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, d), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=win)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(ref, np.float32), atol=tol)
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 100, 192]),
+       st.sampled_from([(4, 2), (2, 2), (8, 1)]), st.sampled_from([32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(B, S, HK, d):
+    H, K = HK
+    ks = jax.random.split(jax.random.PRNGKey(B * S + d), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, K, d))
+    v = jax.random.normal(ks[2], (B, S, K, d))
+    o = flash_attention(q, k, v, causal=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref), atol=3e-5)
+    # causality: output at position t must not depend on tokens > t
+    t = S // 2
+    k2 = k.at[:, t + 1:].set(0.0)
+    v2 = v.at[:, t + 1:].set(9.9)
+    o2 = flash_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(o[:, :t + 1]),
+                               np.asarray(o2[:, :t + 1]), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,W,H,K,d", [
+    (2, 512, 4, 2, 64), (1, 300, 8, 8, 128), (2, 1000, 4, 1, 80),
+])
+def test_decode_attention_sweep(B, W, H, K, d, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, 1, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, W, K, d), dtype)
+    v = jax.random.normal(ks[2], (B, W, K, d), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.8, (B, W))
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+    o = decode_attention(q, k, v, bias)
+    ref = decode_attention_ref(q, k, v, bias)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,H,S,d", [
+    (2, 2, 128, 32), (1, 4, 100, 64), (2, 1, 64, 16), (1, 2, 65, 64),
+])
+def test_wkv6_sweep(B, H, S, d):
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, d)) * 0.5
+               for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, d)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, d)) * 0.5
+    o, sf = wkv6(r, k, v, logw, u)
+    oref, sref = wkv6_ref(r, k, v, logw, u, jnp.zeros((B, H, d, d)))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sref), atol=1e-4)
+
+
+def test_wkv6_strong_decay_stability():
+    """Extreme decays must not produce inf/nan (exponents <= 0 by design)."""
+    B, H, S, d = 1, 1, 128, 32
+    ks = jax.random.split(KEY, 4)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, d)) for i in range(3))
+    logw = jnp.full((B, H, S, d), -30.0)    # near-instant forgetting
+    u = jnp.zeros((H, d))
+    o, sf = wkv6(r, k, v, logw, u)
+    assert np.isfinite(np.asarray(o)).all()
+    logw = jnp.full((B, H, S, d), -1e-6)    # near-perfect memory
+    o, sf = wkv6(r, k, v, logw, u)
+    assert np.isfinite(np.asarray(o)).all()
+
+
+def test_kernel_grads_flow():
+    B, S, H, K, d = 1, 128, 2, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, K, d))
+    v = jax.random.normal(ks[2], (B, S, K, d))
+    g = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v) ** 2))(q)
+    gref = jax.grad(lambda q: jnp.sum(
+        flash_attention_ref(q, k, v) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gref), atol=1e-3)
