@@ -1,0 +1,132 @@
+"""Simulator benchmark: per-scenario simulated step times -> BENCH_sim.json.
+
+Three scenarios (the paper's target applications) at a phi sweep, plus the
+closed-form cross-validation:
+
+    PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
+    PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
+
+Training replays a dry-run trace from artifacts/dryrun when present,
+falling back to a synthetic llama-scale trace so the benchmark runs on a
+clean checkout.
+"""
+import argparse
+import json
+import pathlib
+import time
+
+from repro.core import costmodel as cm
+from repro.core.cluster import WorkloadProfile
+from repro.sim import (cross_validate_bigquery, lovelock_cluster,
+                       scatter_gather, simulate_mu, summarize,
+                       synthetic_trace, trace_from_record,
+                       traditional_cluster, training_from_trace)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "dryrun"
+
+# physical-ish rates for the training scenario (bytes/s)
+NIC_BW = 25e9          # 200 Gb/s NIC
+ICI_BW = 45e9
+
+
+def _bigquery_profile():
+    return WorkloadProfile(cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
+                           network_fraction=cm.BIGQUERY_NETWORK_FRACTION)
+
+
+def scenario_shuffle(phis, n_servers):
+    out = {}
+    prof = _bigquery_profile()
+    for phi in phis:
+        r = simulate_mu(prof, phi, n_servers=n_servers)
+        out[str(phi)] = {"mu": r["mu"],
+                         "t_traditional_s": r["t_traditional"],
+                         "t_lovelock_s": r["t_lovelock"]}
+    return out
+
+
+def scenario_scatter_gather(phis, n_servers):
+    """Fan-out query: the incast at the root is NIC-bound, so phi helps
+    only the scatter/compute legs — a case the closed form cannot see."""
+    out = {}
+    kw = dict(request_bytes_total=0.2, response_bytes_total=2.0,
+              cpu_work_per_worker=0.5)
+    base = traditional_cluster(n_servers, cpu_rate=cm.MILAN_SYSTEM_SPEEDUP)
+    t0 = base.engine().run(scatter_gather(base, **kw)).makespan
+    for phi in phis:
+        topo = lovelock_cluster(n_servers, phi)
+        t1 = topo.engine().run(scatter_gather(topo, **kw)).makespan
+        out[str(phi)] = {"mu": t1 / t0, "t_traditional_s": t0,
+                         "t_lovelock_s": t1}
+    return out
+
+
+def _load_trace():
+    if ART.exists():
+        for f in sorted(ART.glob("*__single.json")):
+            rec = json.loads(f.read_text())
+            if rec.get("status") == "ok":
+                return f.stem, trace_from_record(rec)
+    return "synthetic", synthetic_trace()
+
+
+def scenario_training(phis, n_servers, steps):
+    name, trace = _load_trace()
+    out = {"trace": name}
+    for phi in phis:
+        # accel_rate=1: the trace is per device group and each node runs
+        # one; phi changes node count (and aggregate DCN load), not
+        # accelerator speed
+        topo = lovelock_cluster(n_servers, phi, nic_bw=NIC_BW,
+                                ici_bw=ICI_BW, accel_rate=1.0)
+        res = topo.engine().run(
+            training_from_trace(topo, trace, steps=steps))
+        s = summarize(res, name=f"training@phi={phi}")
+        out[str(phi)] = {"step_time_s": res.makespan / steps,
+                         "makespan_s": res.makespan,
+                         "utilization": s["utilization"]}
+    # failure scenario at phi=1: checkpoint/replay recovery cost
+    topo = lovelock_cluster(n_servers, 1, nic_bw=NIC_BW, ici_bw=ICI_BW,
+                            accel_rate=1.0)
+    fail = topo.engine().run(training_from_trace(
+        topo, trace, steps=steps, failures=[("nic0", steps // 2)]))
+    out["failure_recovery_overhead_s"] = (
+        fail.makespan - out["1"]["makespan_s"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for the CI lane")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_sim.json"))
+    args = ap.parse_args()
+
+    phis = (1, 2, 3) if args.smoke else (1, 2, 3, 4, 6, 8)
+    n_servers = 4 if args.smoke else 16
+    steps = 4 if args.smoke else 16
+
+    t0 = time.time()
+    bench = {
+        "bench": "sim",
+        "smoke": args.smoke,
+        "n_servers": n_servers,
+        "cross_validation": cross_validate_bigquery(
+            n_servers=max(n_servers, 4)),
+        "scenarios": {
+            "shuffle": scenario_shuffle(phis, n_servers),
+            "scatter_gather": scenario_scatter_gather(phis, n_servers),
+            "training": scenario_training(phis, n_servers, steps),
+        },
+    }
+    bench["wall_s"] = round(time.time() - t0, 3)
+    pathlib.Path(args.out).write_text(json.dumps(bench, indent=1))
+    print(json.dumps(bench, indent=1))
+    worst = max(r["rel_err"] for r in bench["cross_validation"])
+    print(f"\nwrote {args.out}  (cross-validation worst rel_err "
+          f"{worst:.2e}, wall {bench['wall_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,35 +1,53 @@
 """Lovelock cluster planning from real dry-run rooflines.
 
 Reads the dry-run artifacts, converts each cell's roofline terms into a
-WorkloadProfile, and runs the paper's cost model to pick phi per workload.
+WorkloadProfile, and picks phi per workload twice: with the paper's
+closed-form §5.2 projection, and with the trace-driven simulator
+(`repro.sim.simulate_plan`) which scores phi candidates against simulated
+makespans.  When no artifacts exist yet, falls back to the paper's
+BigQuery profile so the example always runs.
 
     PYTHONPATH=src python examples/cluster_planning.py
 """
 import json
 import pathlib
 
+from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile, plan
+from repro.sim import simulate_plan
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 
+def show(name, prof, bottleneck=""):
+    p_ana = plan(prof, n_servers=64)
+    p_sim = simulate_plan(prof, n_servers=64, sim_servers=4)
+    agree = "==" if p_ana.phi == p_sim.phi else "!="
+    print(f"{name:40s} {p_ana.phi:4.0f} {agree} {p_sim.phi:4.0f}  "
+          f"{p_ana.mu:6.2f}/{p_sim.mu:6.2f} {p_sim.cost_ratio:5.2f}x "
+          f"{p_sim.power_ratio:6.2f}x {bottleneck}")
+
+
 def main():
     cells = []
-    for f in sorted(ART.glob("*__single.json")):
-        rec = json.loads(f.read_text())
-        if rec.get("status") == "ok":
-            cells.append(rec)
+    if ART.exists():
+        for f in sorted(ART.glob("*__single.json")):
+            rec = json.loads(f.read_text())
+            if rec.get("status") == "ok":
+                cells.append(rec)
+    print(f"{'workload':40s} {'phi':>4s}    {'sim':>4s}  "
+          f"{'mu(ana/sim)':>13s} {'cost':>5s} {'energy':>7s} bottleneck")
     if not cells:
-        print("no dry-run artifacts; run: python -m repro.launch.dryrun")
+        print("(no dry-run artifacts; showing the paper's BigQuery "
+              "profile — run python -m repro.launch.dryrun for more)")
+        show("bigquery (paper §5.2)",
+             WorkloadProfile(cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
+                             network_fraction=cm.BIGQUERY_NETWORK_FRACTION))
         return
-    print(f"{'workload':40s} {'phi':>4s} {'mu':>6s} {'cost':>6s} "
-          f"{'energy':>7s} bottleneck")
     for rec in cells[:20]:
         prof = WorkloadProfile.from_roofline(rec["roofline"])
-        p = plan(prof, n_servers=64)
-        print(f"{rec['arch'] + '/' + rec['shape']:40s} {p.phi:4.0f} "
-              f"{p.mu:6.2f} {p.cost_ratio:5.2f}x {p.power_ratio:6.2f}x "
-              f"{rec['roofline']['bottleneck']}")
+        show(rec["arch"] + "/" + rec["shape"], prof,
+             rec["roofline"]["bottleneck"])
 
 
 if __name__ == "__main__":

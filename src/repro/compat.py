@@ -1,0 +1,36 @@
+"""jax version compatibility shims.
+
+The repo targets the jax 0.8-era API (``jax.shard_map`` with
+``axis_names``/``check_vma``) but must also run on the 0.4.x series,
+where shard_map lives in ``jax.experimental.shard_map`` and partial-manual
+mode is spelled ``auto=`` (the complement of ``axis_names``) and
+replication checking is ``check_rep=``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check=False):
+    """Dispatch to whichever shard_map this jax provides.
+
+    axis_names: axes the body is *manual* over (None => all mesh axes).
+    check: replication/VMA checking (off by default — the call sites use
+    psum-style collectives whose out-specs the checker mis-handles on
+    some versions).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        try:
+            return jax.shard_map(f, check_vma=check, **kw)
+        except TypeError:
+            return jax.shard_map(f, check_rep=check, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)

@@ -78,14 +78,20 @@ def predict_mu(profile: WorkloadProfile, phi: float,
 
 def plan(profile: WorkloadProfile, *, n_servers: int,
          accelerators_per_server: int = 4, storage_nodes: int = 0,
-         mu_max: float = 1.25, phi_candidates=(1, 2, 3, 4, 6, 8)) \
-        -> ClusterPlan:
-    """Pick the cost-optimal phi subject to mu <= mu_max."""
+         mu_max: float = 1.25, phi_candidates=(1, 2, 3, 4, 6, 8),
+         mu_fn=None) -> ClusterPlan:
+    """Pick the cost-optimal phi subject to mu <= mu_max.
+
+    mu_fn(profile, phi) -> mu overrides the closed-form §5.2 projection;
+    `repro.sim.simulate_plan` passes the trace-driven simulator here so
+    phi candidates are scored against simulated slowdown instead.
+    """
+    mu_fn = mu_fn or predict_mu
     c_p, p_p = (cm.pcie_ratios() if profile.pcie_fraction_of_cost
                 else (0.0, 0.0))
     best: Optional[ClusterPlan] = None
     for phi in phi_candidates:
-        mu = predict_mu(profile, phi)
+        mu = mu_fn(profile, phi)
         if mu > mu_max:
             continue
         cost = cm.cost_ratio(phi, c_p=c_p)
@@ -105,7 +111,7 @@ def plan(profile: WorkloadProfile, *, n_servers: int,
     if best is None:
         # nothing satisfies the slowdown budget: report phi with min mu
         phi = max(phi_candidates)
-        mu = predict_mu(profile, phi)
+        mu = mu_fn(profile, phi)
         best = ClusterPlan(phi=phi, mu=mu, nodes=(),
                            cost_ratio=cm.cost_ratio(phi, c_p=c_p),
                            power_ratio=cm.power_ratio(phi, mu, p_p=p_p),

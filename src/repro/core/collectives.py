@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 Pytree = Any
 
 
@@ -79,9 +81,11 @@ def flat_all_reduce(x, mesh, axes=("pod", "data")):
 
     def f(x):
         return lax.psum(x, axes)
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(axes),
-                                 out_specs=P(), axis_names=set(axes),
-                                 check_vma=False))(x)
+    # fully manual (not axis_names=axes): partial-manual mode aborts XLA's
+    # SPMD partitioner on jax 0.4.x, and the unused model axis simply
+    # replicates under manual mode with identical semantics
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P(axes),
+                             out_specs=P()))(x)
 
 
 def hierarchical_all_reduce(x, mesh):
@@ -99,9 +103,8 @@ def hierarchical_all_reduce(x, mesh):
         if "pod" in axes:
             shard = lax.psum(shard, "pod")
         return lax.all_gather(shard, "data", axis=0, tiled=True)[None]
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(axes),
-                                 out_specs=P(), axis_names=set(axes),
-                                 check_vma=False))(x)
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P(axes),
+                             out_specs=P()))(x)
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +136,34 @@ def allreduce_traffic_model(n_bytes: int, *, n_pods: int, data: int,
             cross /= 4.0          # fp32 -> int8 information content
         return {"ici_bytes": rs + ag, "dcn_bytes": cross}
     raise ValueError(schedule)
+
+
+class CollectiveTrafficComponent:
+    """Expands one gradient all-reduce into per-device (tier, bytes) phases.
+
+    The simulator (`repro.sim.workloads.training_from_trace`) replays each
+    phase as a `COLLECTIVE_PHASE` task on the matching interconnect
+    resource (ici vs dcn), so schedule choice (flat / hierarchical /
+    compressed) changes simulated traffic exactly as the analytical model
+    predicts — and stays validated against HLO byte counts by the
+    existing tests.
+    """
+
+    def __init__(self, schedule: str = "hierarchical"):
+        self.schedule = schedule
+
+    def phases(self, n_bytes: float, *, n_pods: int = 1,
+               data: int = 1) -> list[dict]:
+        t = allreduce_traffic_model(int(n_bytes), n_pods=n_pods, data=data,
+                                    schedule=self.schedule)
+        out = []
+        if t["ici_bytes"] > 0:
+            out.append({"kind": "collective_phase", "tier": "ici",
+                        "bytes": t["ici_bytes"]})
+        if t["dcn_bytes"] > 0:
+            out.append({"kind": "collective_phase", "tier": "dcn",
+                        "bytes": t["dcn_bytes"]})
+        return out
 
 
 def phi_traffic_scaling(n_bytes: int, phi: int, accel_per_host: int = 4)\

@@ -65,6 +65,40 @@ def _median(x):
     return (x[n // 2] + x[(n - 1) // 2]) / 2
 
 
+class ContentionComponent:
+    """Aggregate-throughput curve of one node under n concurrent tasks.
+
+    Plugs into a simulator resource (`repro.sim.engine.Resource.rate_fn`):
+    throughput scales linearly with active tasks until the memory system
+    saturates at the Figure-3 full-load aggregate, i.e.
+    ``rate(n) = min(n * solo, full_load_aggregate)``.  Normalised via
+    `multiplier`, which is 1.0 at full load, so a resource's nominal
+    capacity stays the full-load number the cost model is calibrated on.
+    """
+
+    def __init__(self, spec: HardwareSpec, *, smt: bool | None = None,
+                 intensity: float | None = None):
+        res = run_model(spec, smt=smt)
+        if intensity is None:
+            self.solo = _median(res.solo_perf)
+            self.full = _median(res.loaded_perf) * spec.cores
+        else:
+            i = min(range(len(TPCH_INTENSITIES)),
+                    key=lambda k: abs(TPCH_INTENSITIES[k] - intensity))
+            self.solo = res.solo_perf[i]
+            self.full = res.loaded_perf[i] * spec.cores
+        self.cores = spec.cores
+
+    def rate(self, n_active: int) -> float:
+        if n_active <= 0:
+            return 0.0
+        return min(n_active * self.solo, self.full)
+
+    def multiplier(self, n_active: int) -> float:
+        """rate(n) relative to the full-load aggregate, in (0, 1]."""
+        return self.rate(n_active) / self.full
+
+
 def figure3() -> dict:
     """Reproduce Figure 3's headline statistics."""
     e = run_model(E2000)

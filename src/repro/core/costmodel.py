@@ -126,6 +126,26 @@ SKYLAKE = HardwareSpec("Skylake (GCP N1)", 112, 100, 112 * 2.3, "host", 1.6)
 # ---------------------------------------------------------------------------
 
 
+class CostComponent:
+    """Pluggable Eq.1/Eq.2 scorer.
+
+    The planner (`core/cluster.py`) and the simulator report
+    (`repro.sim.report`) both score (phi, mu) points; this class fixes the
+    hardware ratios once so the two paths cannot drift apart.
+    """
+
+    def __init__(self, *, c_s: float = C_S, p_s: float = P_S,
+                 with_pcie: bool = False, c_f: Optional[float] = None):
+        self.c_s, self.p_s, self.c_f = c_s, p_s, c_f
+        self.c_p, self.p_p = (pcie_ratios(c_s, p_s) if with_pcie
+                              else (0.0, 0.0))
+
+    def score(self, phi: float, mu: float) -> dict:
+        return {"phi": phi, "mu": mu,
+                "cost_ratio": cost_ratio(phi, self.c_s, self.c_p, self.c_f),
+                "power_ratio": power_ratio(phi, mu, self.p_s, self.p_p)}
+
+
 def accelerator_cluster_savings(phi: float = 1.0, mu: float = 1.0) -> dict:
     """Lovelock driving accelerators: PCIe devices are 75% of system."""
     c_p, p_p = pcie_ratios()

@@ -60,6 +60,32 @@ def make_elastic_mesh(devices: Sequence, *, model: int = 16):
 
 
 # ---------------------------------------------------------------------------
+# Failure / recovery timeline (simulator component)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureComponent:
+    """Checkpoint/replay recovery timeline, mirroring ElasticRunner.
+
+    On a node failure at training step ``s`` the cluster restores the last
+    durable checkpoint (restore + mesh re-plan/re-jit latency) and replays
+    every step since it.  `repro.sim.workloads.training_from_trace` expands
+    this into explicit recovery + replay tasks on the event timeline.
+    """
+
+    ckpt_every: int = 10
+    restore_s: float = 30.0
+    replan_s: float = 5.0
+
+    def lost_steps(self, fail_step: int) -> int:
+        return fail_step - (fail_step // self.ckpt_every) * self.ckpt_every
+
+    def recovery_delay(self) -> float:
+        return self.restore_s + self.replan_s
+
+
+# ---------------------------------------------------------------------------
 # Straggler detection (coordinator-side)
 # ---------------------------------------------------------------------------
 

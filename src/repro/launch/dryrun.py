@@ -189,6 +189,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
                         "n_ops": cost.n_coll_ops},
         "scan_trip_counts": cost.trip_counts,
         "roofline": roof.to_dict(),
+        # consumed by repro.sim.workloads.training_from_trace
+        "sim_trace": {
+            "n_devices": n_dev,
+            "phases": [
+                {"kind": "compute", "flops": cost.flops,
+                 "hbm_bytes": cost.bytes},
+                {"kind": "collective_phase", "tier": "ici",
+                 "bytes": cost.coll_ici},
+                {"kind": "collective_phase", "tier": "dcn",
+                 "bytes": cost.coll_dcn},
+            ],
+        },
     }
     if save:
         ART.mkdir(parents=True, exist_ok=True)

@@ -10,6 +10,20 @@ from __future__ import annotations
 import jax
 
 
+def make_abstract_mesh(shape, axis_names):
+    """Version-tolerant AbstractMesh constructor.
+
+    jax >= 0.5 takes ``AbstractMesh(shape, axis_names)``; jax 0.4.x takes a
+    single tuple-of-(name, size) pairs.  Callers always pass the two-arg
+    form; we adapt.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

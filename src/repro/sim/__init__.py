@@ -1,0 +1,35 @@
+"""repro.sim — discrete-event, trace-driven Lovelock cluster simulator.
+
+Unifies the analytical pieces in `repro.core` (cost model, bandwidth
+contention, collective traffic, failure/recovery) as pluggable components
+of one event engine, so phi planning can be scored against *simulated*
+slowdown — with queueing, incast, and failures — instead of only the
+closed-form §5.2 projection (which it is cross-validated against in
+`validate.cross_validate_bigquery`).
+
+Quickstart::
+
+    from repro.core.cluster import WorkloadProfile
+    from repro.sim import simulate_plan
+    p = simulate_plan(WorkloadProfile(cpu_fraction=0.386,
+                                      network_fraction=0.614),
+                      n_servers=64, mu_max=1.0)
+    print(p.phi, p.mu, p.cost_ratio)
+"""
+from repro.sim.engine import (Engine, EventKind, Resource, SimEvent,
+                              SimResult, Task)
+from repro.sim.topology import (NodeModel, Topology, lovelock_cluster,
+                                traditional_cluster)
+from repro.sim.workloads import (scatter_gather, shuffle, synthetic_trace,
+                                 trace_from_record, training_from_trace)
+from repro.sim.validate import (cross_validate_bigquery, simulate_mu,
+                                simulate_plan)
+from repro.sim.report import attach_scores, render, summarize
+
+__all__ = [
+    "Engine", "EventKind", "Resource", "SimEvent", "SimResult", "Task",
+    "NodeModel", "Topology", "lovelock_cluster", "traditional_cluster",
+    "scatter_gather", "shuffle", "synthetic_trace", "trace_from_record",
+    "training_from_trace", "cross_validate_bigquery", "simulate_mu",
+    "simulate_plan", "attach_scores", "render", "summarize",
+]

@@ -1,0 +1,227 @@
+"""Discrete-event engine: typed events over processor-shared resources.
+
+The unit of work is a `Task` — compute (ops on a node's CPU or
+accelerator), DMA (bytes through NIC/fabric resources), or a collective
+phase (per-node bytes on an interconnect tier).  Tasks form a DAG via
+``deps``; a task holding several resources progresses at the minimum of
+its fair shares (progressive-filling approximation of max-min fairness,
+exact for the balanced traffic patterns the workload generators emit).
+
+Failures are first-class events: `inject_failure(node, at, recover_at)`
+takes every resource on the node offline, resets that node's in-flight
+tasks to full remaining work (lost progress), and re-admits them at
+recovery — the dynamic counterpart to the checkpoint/replay expansion in
+`core/elastic.FailureComponent`.
+
+No jax dependency: the engine is pure Python so planning/simulation runs
+on machines with no accelerator stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import math
+from typing import Callable, Iterable, Optional
+
+_EPS = 1e-12
+
+
+class EventKind(enum.Enum):
+    COMPUTE = "compute"
+    DMA = "dma"
+    COLLECTIVE_PHASE = "collective_phase"
+    NODE_FAIL = "node_fail"
+    NODE_RECOVER = "node_recover"
+
+
+TASK_KINDS = (EventKind.COMPUTE, EventKind.DMA, EventKind.COLLECTIVE_PHASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One schedulable unit.  ``work`` is ops for compute tasks and bytes
+    for DMA / collective phases; ``resources`` are held for its whole
+    runtime; ``node`` is the failure domain."""
+    tid: str
+    kind: EventKind
+    resources: tuple
+    work: float
+    deps: tuple = ()
+    node: str = ""
+
+
+@dataclasses.dataclass
+class Resource:
+    """Processor-shared resource.  ``capacity`` is work-units/second at
+    full load; ``rate_fn(n_active)`` (e.g. a bound
+    `core.contention.ContentionComponent.rate`) overrides the aggregate
+    throughput curve; ``node`` is the failure domain (empty = a fabric
+    resource that never fails)."""
+    name: str
+    capacity: float
+    rate_fn: Optional[Callable[[int], float]] = None
+    node: str = ""
+
+    def aggregate_rate(self, n_active: int) -> float:
+        if n_active <= 0:
+            return 0.0
+        if self.rate_fn is not None:
+            return self.rate_fn(n_active)
+        return self.capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class SimEvent:
+    time: float
+    kind: EventKind
+    subject: str          # task id or node name
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    finish_times: dict
+    events: list
+    busy_time: dict       # resource -> seconds with >=1 active task
+    complete: bool
+
+    def events_of(self, kind: EventKind) -> list:
+        return [e for e in self.events if e.kind == kind]
+
+
+class Engine:
+    def __init__(self, resources: Iterable[Resource]):
+        self.resources = {r.name: r for r in resources}
+        self._timed: list = []      # (time, seq, EventKind, node)
+        self._seq = 0
+
+    def inject_failure(self, node: str, at: float,
+                       recover_at: Optional[float] = None) -> None:
+        heapq.heappush(self._timed, (at, self._seq, EventKind.NODE_FAIL,
+                                     node))
+        self._seq += 1
+        if recover_at is not None:
+            heapq.heappush(self._timed, (recover_at, self._seq,
+                                         EventKind.NODE_RECOVER, node))
+            self._seq += 1
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, tasks: Iterable[Task]) -> SimResult:
+        tasks = list(tasks)
+        by_id = {t.tid: t for t in tasks}
+        if len(by_id) != len(tasks):
+            raise ValueError("duplicate task ids")
+        for t in tasks:
+            for r in t.resources:
+                if r not in self.resources:
+                    raise KeyError(f"task {t.tid}: unknown resource {r}")
+            for d in t.deps:
+                if d not in by_id:
+                    raise KeyError(f"task {t.tid}: unknown dep {d}")
+
+        n_deps = {t.tid: len(t.deps) for t in tasks}
+        dependents: dict = {t.tid: [] for t in tasks}
+        for t in tasks:
+            for d in t.deps:
+                dependents[d].append(t.tid)
+
+        remaining = {t.tid: float(t.work) for t in tasks}
+        scale = {t.tid: max(float(t.work), 1.0) for t in tasks}
+        ready = [t.tid for t in tasks if n_deps[t.tid] == 0]
+        running: dict = {}            # tid -> Task (insertion ordered)
+        held: list = []               # tasks whose node is down
+        down: set = set()
+        done: dict = {}
+        events: list = []
+        busy = {name: 0.0 for name in self.resources}
+        now = 0.0
+
+        def admit():
+            nonlocal ready
+            for tid in ready:
+                t = by_id[tid]
+                if t.node in down:
+                    held.append(tid)
+                else:
+                    running[tid] = t
+            ready = []
+
+        def rates() -> dict:
+            n_active = {name: 0 for name in self.resources}
+            for t in running.values():
+                for r in t.resources:
+                    n_active[r] += 1
+            share = {}
+            for name, n in n_active.items():
+                res = self.resources[name]
+                agg = 0.0 if res.node in down and res.node \
+                    else res.aggregate_rate(n)
+                share[name] = agg / n if n else 0.0
+            out = {}
+            for tid, t in running.items():
+                if not t.resources:       # pure delay task
+                    out[tid] = 1.0
+                else:
+                    out[tid] = min(share[r] for r in t.resources)
+            return out, n_active
+
+        admit()
+        while running or self._timed:
+            rate, n_active = rates() if running else ({}, {})
+            dt = math.inf
+            for tid, r in rate.items():
+                if r > _EPS:
+                    dt = min(dt, remaining[tid] / r)
+            if self._timed:
+                dt = min(dt, self._timed[0][0] - now)
+            if not math.isfinite(dt):
+                break                      # stalled: nodes down forever
+            dt = max(dt, 0.0)
+
+            for tid, r in rate.items():
+                remaining[tid] -= r * dt
+            if running:
+                for name, n in n_active.items():
+                    if n:
+                        busy[name] += dt
+            now += dt
+
+            # timed node events due now
+            while self._timed and self._timed[0][0] <= now + _EPS:
+                t_ev, _, kind, node = heapq.heappop(self._timed)
+                events.append(SimEvent(t_ev, kind, node))
+                if kind == EventKind.NODE_FAIL:
+                    down.add(node)
+                    lost = [tid for tid, t in running.items()
+                            if t.node == node]
+                    for tid in lost:
+                        del running[tid]
+                        remaining[tid] = float(by_id[tid].work)
+                        held.append(tid)
+                else:
+                    down.discard(node)
+                    back = [tid for tid in held
+                            if by_id[tid].node == node]
+                    for tid in back:
+                        held.remove(tid)
+                        running[tid] = by_id[tid]
+
+            # completions
+            finished = [tid for tid in running
+                        if remaining[tid] <= _EPS * scale[tid]]
+            for tid in finished:
+                t = running.pop(tid)
+                done[tid] = now
+                events.append(SimEvent(now, t.kind, tid))
+                for dep in dependents[tid]:
+                    n_deps[dep] -= 1
+                    if n_deps[dep] == 0:
+                        ready.append(dep)
+            if ready:
+                admit()
+
+        complete = len(done) == len(tasks)
+        return SimResult(makespan=now, finish_times=done, events=events,
+                         busy_time=busy, complete=complete)

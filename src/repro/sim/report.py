@@ -1,0 +1,59 @@
+"""Summaries of simulation runs: makespan, event mix, utilization.
+
+`summarize` folds a `SimResult` into a JSON-ready dict (what
+`benchmarks/bench_sim.py` writes into BENCH_sim.json); `render` makes a
+terminal table.  When given a `CostComponent` and a mu it also attaches
+the paper's cost/power ratios so a scenario report reads end-to-end:
+"this workload, at this phi, is this much slower and this much cheaper".
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.sim.engine import SimResult
+
+_CLASSES = ("cpu", "tx", "rx", "accel", "ici")
+
+
+def summarize(result: SimResult, *, name: str = "") -> dict:
+    kinds = Counter(e.kind.value for e in result.events)
+    util: dict = {}
+    if result.makespan > 0:
+        per_class: dict = {c: [] for c in _CLASSES}
+        for rname, busy in result.busy_time.items():
+            cls = rname.rsplit(":", 1)[-1]
+            if cls in per_class:
+                per_class[cls].append(busy / result.makespan)
+        util = {c: round(sum(v) / len(v), 4)
+                for c, v in per_class.items() if v}
+    return {"name": name, "makespan_s": result.makespan,
+            "complete": result.complete,
+            "n_tasks": len(result.finish_times),
+            "events_by_kind": dict(kinds), "utilization": util}
+
+
+def attach_scores(summary: dict, cost_component, phi: float,
+                  mu: float) -> dict:
+    summary["scores"] = cost_component.score(phi, mu)
+    return summary
+
+
+def render(summary: dict) -> str:
+    lines = [f"scenario: {summary.get('name', '?')}",
+             f"  makespan      {summary['makespan_s']:.4g} s"
+             f"{'' if summary['complete'] else '  (INCOMPLETE)'}",
+             f"  tasks         {summary['n_tasks']}"]
+    ev = summary.get("events_by_kind", {})
+    if ev:
+        lines.append("  events        " + "  ".join(
+            f"{k}={v}" for k, v in sorted(ev.items())))
+    ut = summary.get("utilization", {})
+    if ut:
+        lines.append("  utilization   " + "  ".join(
+            f"{k}={v:.0%}" for k, v in ut.items()))
+    sc = summary.get("scores")
+    if sc:
+        lines.append(f"  phi={sc['phi']}  mu={sc['mu']:.3f}  "
+                     f"cost={sc['cost_ratio']:.2f}x  "
+                     f"power={sc['power_ratio']:.2f}x")
+    return "\n".join(lines)

@@ -1,0 +1,110 @@
+"""Cluster topologies: traditional servers vs Lovelock smart-NIC nodes.
+
+Each node contributes five engine resources (failure domain = the node):
+
+  ``{n}:cpu``    aggregate host/NIC-core compute, work unit = normalized ops
+  ``{n}:tx``     NIC egress, work unit = bytes
+  ``{n}:rx``     NIC ingress, work unit = bytes
+  ``{n}:accel``  attached accelerator time, work unit = device-seconds
+  ``{n}:ici``    intra-pod accelerator interconnect, work unit = bytes
+
+Rates are *relative* units calibrated to the paper's §5 measurements: a
+Lovelock NIC node's CPU is the 1.0 reference (E2000 full-load aggregate),
+a traditional server's is `MILAN_SYSTEM_SPEEDUP` (4.7); both node kinds
+get the same NIC bandwidth (the paper's premise: NICs are cheap on
+bandwidth), so phi NICs per replaced server means phi x aggregate
+bandwidth.  The fabric is non-blocking (contention lives at node NICs),
+matching the §5.2 projection; a finite fabric can be modelled by adding a
+shared Resource and listing it in DMA tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.costmodel import MILAN_SYSTEM_SPEEDUP
+from repro.sim.engine import Engine, Resource
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeModel:
+    name: str
+    kind: str                     # 'server' | 'smartnic'
+    cpu_rate: float               # normalized ops/s (full-load aggregate)
+    nic_bw: float = 1.0           # bytes/s per direction (relative)
+    accel_rate: float = 1.0       # accelerator device-seconds per second
+    ici_bw: float = 1.0           # intra-pod interconnect bytes/s
+
+
+class Topology:
+    def __init__(self, nodes, *,
+                 cpu_rate_fn: Optional[Callable[[NodeModel],
+                                                Callable]] = None):
+        """cpu_rate_fn(node) -> rate_fn plugs a ContentionComponent-style
+        aggregate-throughput curve into every node CPU."""
+        self.nodes = {n.name: n for n in nodes}
+        self._cpu_rate_fn = cpu_rate_fn
+
+    @property
+    def node_names(self) -> list:
+        return list(self.nodes)
+
+    def resources(self) -> list:
+        out = []
+        for n in self.nodes.values():
+            rf = self._cpu_rate_fn(n) if self._cpu_rate_fn else None
+            out.append(Resource(f"{n.name}:cpu", n.cpu_rate, rate_fn=rf,
+                                node=n.name))
+            out.append(Resource(f"{n.name}:tx", n.nic_bw, node=n.name))
+            out.append(Resource(f"{n.name}:rx", n.nic_bw, node=n.name))
+            out.append(Resource(f"{n.name}:accel", n.accel_rate,
+                                node=n.name))
+            out.append(Resource(f"{n.name}:ici", n.ici_bw, node=n.name))
+        return out
+
+    def engine(self) -> Engine:
+        return Engine(self.resources())
+
+    # resource-name helpers (keep workload generators typo-proof)
+    def cpu(self, name):
+        return f"{name}:cpu"
+
+    def tx(self, name):
+        return f"{name}:tx"
+
+    def rx(self, name):
+        return f"{name}:rx"
+
+    def accel(self, name):
+        return f"{name}:accel"
+
+    def ici(self, name):
+        return f"{name}:ici"
+
+
+def traditional_cluster(n_servers: int, *,
+                        cpu_rate: float = MILAN_SYSTEM_SPEEDUP,
+                        nic_bw: float = 1.0, accel_rate: float = 1.0,
+                        ici_bw: float = 1.0,
+                        cpu_rate_fn=None) -> Topology:
+    """n_servers conventional hosts — the mu denominator."""
+    return Topology(
+        [NodeModel(f"srv{i}", "server", cpu_rate, nic_bw, accel_rate,
+                   ici_bw) for i in range(n_servers)],
+        cpu_rate_fn=cpu_rate_fn)
+
+
+def lovelock_cluster(n_servers: int, phi: int, *, cpu_rate: float = 1.0,
+                     nic_bw: float = 1.0, accel_rate: float = None,
+                     ici_bw: float = 1.0, cpu_rate_fn=None) -> Topology:
+    """n_servers * phi headless smart-NIC nodes.
+
+    Each replaced server's accelerators are re-fronted across its phi
+    NICs, so per-node accel_rate defaults to 1/phi (same total silicon).
+    """
+    if accel_rate is None:
+        accel_rate = 1.0 / phi
+    return Topology(
+        [NodeModel(f"nic{i}", "smartnic", cpu_rate, nic_bw, accel_rate,
+                   ici_bw) for i in range(n_servers * phi)],
+        cpu_rate_fn=cpu_rate_fn)

@@ -1,0 +1,90 @@
+"""Cross-validation of the simulator against the §5.2 closed form.
+
+The analytical projection says mu(phi) = cpu_frac * slowdown / phi +
+net_frac / phi.  `simulate_mu` rebuilds the same workload as an explicit
+task DAG (map/shuffle/reduce over real topologies) and takes the ratio of
+simulated makespans, traditional vs Lovelock.  On balanced traffic the
+two must agree (tested to 10%); the simulator's value is that it keeps
+answering when the workload is *not* balanced — incast, stragglers,
+failures — where the closed form has nothing to say.
+"""
+from __future__ import annotations
+
+from repro.core import costmodel as cm
+from repro.core.cluster import WorkloadProfile, plan
+from repro.sim.topology import lovelock_cluster, traditional_cluster
+from repro.sim.workloads import shuffle
+from repro.sim.engine import EventKind, Task
+
+
+def _profile_workload(topo, profile: WorkloadProfile, *, n_servers: int,
+                      cpu_slowdown: float, tasks_per_node: int) -> list:
+    """Total work is fixed by the profile (fractions of one baseline step
+    on n_servers traditional hosts); the topology decides how many nodes
+    spread it."""
+    n = len(topo.node_names)
+    total_cpu = n_servers * profile.cpu_fraction * cpu_slowdown
+    total_bytes = n_servers * profile.network_fraction * 1.0
+    total_accel = n_servers * profile.accelerator_fraction
+    tasks = shuffle(topo, cpu_work_per_node=total_cpu / n,
+                    bytes_per_node=total_bytes / n,
+                    tasks_per_node=tasks_per_node)
+    if total_accel > 0:
+        for u in topo.node_names:
+            tasks.append(Task(f"accel:{u}", EventKind.COMPUTE,
+                              (topo.accel(u),), total_accel / n,
+                              deps=(f"reduce:{u}",), node=u))
+    return tasks
+
+
+def simulate_mu(profile: WorkloadProfile, phi: int, *, n_servers: int = 8,
+                cpu_slowdown: float = cm.MILAN_SYSTEM_SPEEDUP,
+                tasks_per_node: int = 2) -> dict:
+    """Simulated slowdown mu = T_lovelock / T_traditional for one phi."""
+    if phi != int(phi) or phi < 1:
+        raise ValueError(f"simulated phi must be a positive integer "
+                         f"(node counts are discrete), got {phi!r}")
+    results = {}
+    for name, topo in (
+            ("traditional",
+             traditional_cluster(n_servers, cpu_rate=cpu_slowdown)),
+            ("lovelock", lovelock_cluster(n_servers, int(phi)))):
+        tasks = _profile_workload(topo, profile, n_servers=n_servers,
+                                  cpu_slowdown=cpu_slowdown,
+                                  tasks_per_node=tasks_per_node)
+        res = topo.engine().run(tasks)
+        if not res.complete:
+            raise RuntimeError(f"{name} simulation stalled")
+        results[name] = res
+    t0 = results["traditional"].makespan
+    t1 = results["lovelock"].makespan
+    return {"phi": phi, "mu": t1 / t0, "t_traditional": t0,
+            "t_lovelock": t1,
+            "n_events": {k: len(v.events) for k, v in results.items()}}
+
+
+def cross_validate_bigquery(phis=(1, 2, 3), *, n_servers: int = 8) -> list:
+    """Simulated vs closed-form mu for the paper's BigQuery profile."""
+    profile = WorkloadProfile(
+        cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
+        network_fraction=cm.BIGQUERY_NETWORK_FRACTION)
+    out = []
+    for phi in phis:
+        sim = simulate_mu(profile, phi, n_servers=n_servers)
+        ana = cm.project_bigquery(float(phi))["mu"]
+        out.append({"phi": phi, "simulated_mu": sim["mu"],
+                    "analytic_mu": ana,
+                    "rel_err": abs(sim["mu"] - ana) / ana})
+    return out
+
+
+def simulate_plan(profile: WorkloadProfile, *, n_servers: int = 8,
+                  sim_servers: int = 8, **plan_kw):
+    """`core.cluster.plan`, scoring phi candidates with the simulator.
+
+    sim_servers bounds the simulated cluster size (cost grows with
+    phi * sim_servers); the plan's node layout still uses n_servers.
+    """
+    def mu_fn(prof, phi):
+        return simulate_mu(prof, phi, n_servers=sim_servers)["mu"]
+    return plan(profile, n_servers=n_servers, mu_fn=mu_fn, **plan_kw)

@@ -1,0 +1,216 @@
+"""Trace-driven workload generators: task DAGs for the event engine.
+
+Three scenario families from the paper's target applications (§1: "data
+intensive applications, such as analytics, query processing and ML
+training"):
+
+  * `shuffle`            — distributed shuffle: embarrassingly parallel
+                           map, all-to-all exchange, reduce (analytics).
+  * `scatter_gather`     — query fan-out: root scatters sub-queries,
+                           workers respond, root aggregates (incast at
+                           the root's ingress — the pattern closed-form
+                           models miss).
+  * `training_from_trace`— one or more synchronous training steps
+                           replayed from a dry-run roofline record
+                           (`launch/dryrun.py` emits the ``sim_trace``
+                           block), with optional checkpoint/replay
+                           failure expansion via
+                           `core.elastic.FailureComponent`.
+
+All generators return plain lists of `Task`; compose freely before
+`Engine.run`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.sim.engine import EventKind, Task
+from repro.sim.topology import Topology
+
+# TPU v5e-ish defaults for converting trace FLOPs/bytes to device-seconds
+DEFAULT_ACCEL_FLOPS = 1.97e14     # bf16 FLOP/s
+DEFAULT_HBM_BW = 8.19e11          # bytes/s
+
+
+def shuffle(topo: Topology, *, cpu_work_per_node: float,
+            bytes_per_node: float, tasks_per_node: int = 2,
+            reduce_work_per_node: float = 0.0, tag: str = "") -> list:
+    """Map -> all-to-all exchange -> reduce over every node in ``topo``.
+
+    ``bytes_per_node`` is the egress volume per node (bytes that actually
+    cross its NIC); each node starts sending as soon as its own map tasks
+    finish — no global barrier, like a real pipelined shuffle.
+    """
+    nodes = topo.node_names
+    n = len(nodes)
+    tasks = []
+    maps: dict = {}
+    for u in nodes:
+        maps[u] = tuple(f"map{tag}:{u}:{i}" for i in range(tasks_per_node))
+        for tid in maps[u]:
+            tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
+                              cpu_work_per_node / tasks_per_node, node=u))
+    inbound: dict = {v: [] for v in nodes}
+    if n > 1:
+        per_peer = bytes_per_node / (n - 1)
+        for u in nodes:
+            for v in nodes:
+                if v == u:
+                    continue
+                tid = f"xfer{tag}:{u}:{v}"
+                inbound[v].append(tid)
+                tasks.append(Task(tid, EventKind.DMA,
+                                  (topo.tx(u), topo.rx(v)), per_peer,
+                                  deps=maps[u], node=u))
+    for v in nodes:
+        deps = tuple(inbound[v]) or maps[v]
+        tasks.append(Task(f"reduce{tag}:{v}", EventKind.COMPUTE,
+                          (topo.cpu(v),), reduce_work_per_node, deps=deps,
+                          node=v))
+    return tasks
+
+
+def scatter_gather(topo: Topology, *, request_bytes_total: float,
+                   response_bytes_total: float, cpu_work_per_worker: float,
+                   root_work: float = 0.0, root: Optional[str] = None,
+                   tag: str = "") -> list:
+    """Query fan-out: root scatters, workers compute, root gathers.
+
+    The gather leg concentrates ``response_bytes_total`` on the root's
+    ingress — the incast bottleneck that makes wide fan-outs
+    root-NIC-bound regardless of worker count.
+    """
+    nodes = topo.node_names
+    root = root or nodes[0]
+    workers = [u for u in nodes if u != root]
+    if not workers:
+        raise ValueError("scatter_gather needs >= 2 nodes")
+    tasks = []
+    resp = []
+    for w in workers:
+        req = f"req{tag}:{w}"
+        wk = f"work{tag}:{w}"
+        rp = f"resp{tag}:{w}"
+        resp.append(rp)
+        tasks.append(Task(req, EventKind.DMA, (topo.tx(root), topo.rx(w)),
+                          request_bytes_total / len(workers), node=root))
+        tasks.append(Task(wk, EventKind.COMPUTE, (topo.cpu(w),),
+                          cpu_work_per_worker, deps=(req,), node=w))
+        tasks.append(Task(rp, EventKind.DMA, (topo.tx(w), topo.rx(root)),
+                          response_bytes_total / len(workers), deps=(wk,),
+                          node=w))
+    tasks.append(Task(f"agg{tag}", EventKind.COMPUTE, (topo.cpu(root),),
+                      root_work, deps=tuple(resp), node=root))
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# Training-step replay from dry-run traces
+# ---------------------------------------------------------------------------
+
+
+def synthetic_trace(*, flops: float = 3.0e13, hbm_bytes: float = 1.0e11,
+                    ici_bytes: float = 2.0e9, dcn_bytes: float = 5.0e8,
+                    n_devices: int = 8) -> dict:
+    """A llama-scale stand-in when no artifacts/dryrun records exist."""
+    return {
+        "n_devices": n_devices,
+        "phases": [
+            {"kind": "compute", "flops": flops, "hbm_bytes": hbm_bytes},
+            {"kind": "collective_phase", "tier": "ici", "bytes": ici_bytes},
+            {"kind": "collective_phase", "tier": "dcn", "bytes": dcn_bytes},
+        ],
+    }
+
+
+def trace_from_record(rec: dict) -> dict:
+    """Build a sim trace from a dry-run artifact record (new records carry
+    a ready-made ``sim_trace``; older ones are reconstructed from the
+    collectives block)."""
+    if "sim_trace" in rec:
+        return rec["sim_trace"]
+    roof = rec["roofline"]
+    coll = rec.get("collectives", {})
+    return {
+        "n_devices": rec.get("n_devices", 1),
+        "phases": [
+            {"kind": "compute", "flops": roof.get("flops", 0.0),
+             "hbm_bytes": roof.get("hbm_bytes", 0.0)},
+            {"kind": "collective_phase", "tier": "ici",
+             "bytes": coll.get("ici_bytes", 0.0)},
+            {"kind": "collective_phase", "tier": "dcn",
+             "bytes": coll.get("dcn_bytes", 0.0)},
+        ],
+    }
+
+
+def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
+                        accel_flops: float = DEFAULT_ACCEL_FLOPS,
+                        hbm_bw: float = DEFAULT_HBM_BW,
+                        failures: Optional[Sequence] = None,
+                        failure_model=None) -> list:
+    """Replay ``steps`` synchronous training steps over every node.
+
+    Trace numbers are per-device; each node runs one device group.  A
+    step is: compute (roofline max of FLOP and HBM time, on ``accel``),
+    then its collective phases (``ici``/``dcn`` tiers; dcn rides the
+    node's NIC tx+rx), then a global barrier — the §6 synchronous-SGD
+    gradient sync.
+
+    failures: [(node, step), ...] expands, per failure, into a recovery
+    delay plus replay of the steps since the last checkpoint
+    (`FailureComponent`), inserted after the failed step's barrier.
+    """
+    if failures and failure_model is None:
+        from repro.core.elastic import FailureComponent
+        failure_model = FailureComponent()
+    fail_at = {int(s): str(n) for n, s in (failures or [])}
+
+    nodes = topo.node_names
+    compute_s = 0.0
+    coll = []                     # (tier, bytes)
+    for ph in trace["phases"]:
+        if ph["kind"] == "compute":
+            compute_s += max(ph.get("flops", 0.0) / accel_flops,
+                             ph.get("hbm_bytes", 0.0) / hbm_bw)
+        else:
+            if ph.get("bytes", 0.0) > 0:
+                coll.append((ph.get("tier", "dcn"), float(ph["bytes"])))
+
+    tasks = []
+
+    def emit_step(tag: str, prev_barrier: Optional[str]) -> str:
+        dep = (prev_barrier,) if prev_barrier else ()
+        phase_ids = []
+        for u in nodes:
+            cid = f"fwd:{tag}:{u}"
+            tasks.append(Task(cid, EventKind.COMPUTE, (topo.accel(u),),
+                              compute_s, deps=dep, node=u))
+            last = cid
+            for k, (tier, nbytes) in enumerate(coll):
+                gid = f"sync:{tag}:{u}:{k}"
+                res = ((topo.ici(u),) if tier == "ici"
+                       else (topo.tx(u), topo.rx(u)))
+                tasks.append(Task(gid, EventKind.COLLECTIVE_PHASE, res,
+                                  nbytes, deps=(last,), node=u))
+                last = gid
+            phase_ids.append(last)
+        bid = f"step:{tag}"
+        tasks.append(Task(bid, EventKind.COMPUTE, (), 0.0,
+                          deps=tuple(phase_ids)))
+        return bid
+
+    barrier = None
+    for s in range(steps):
+        barrier = emit_step(str(s), barrier)
+        if s in fail_at:
+            node = fail_at[s]
+            rid = f"recover:{node}:{s}"
+            # resource-less => pure wall-clock delay
+            tasks.append(Task(rid, EventKind.COMPUTE, (),
+                              failure_model.recovery_delay(),
+                              deps=(barrier,), node=node))
+            barrier = rid
+            for r in range(failure_model.lost_steps(s)):
+                barrier = emit_step(f"{s}r{r}", barrier)
+    return tasks

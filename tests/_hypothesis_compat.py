@@ -1,0 +1,70 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+The seed environment has no network and no ``hypothesis`` wheel, which
+used to kill collection of 4 of 11 test modules at import time.  Test
+modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis``; when the real package is present we re-export it
+verbatim, otherwise a tiny deterministic sampler stands in: each
+``@given`` test runs ``max_examples`` times over seeded draws from the
+declared strategies (a fixed subset instead of adaptive search — weaker,
+but the properties still execute).
+"""
+from __future__ import annotations
+
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = getattr(fn, "_max_examples", 20)
+
+            # No functools.wraps: __wrapped__ would expose fn's signature
+            # and pytest would treat the drawn parameters as fixtures.
+            def runner():
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    fn(*drawn)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

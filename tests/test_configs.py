@@ -1,6 +1,6 @@
 """Config-layer tests: registry, param counts, head padding properties."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ALL_ARCHS, SHAPES, get_config, smoke_variant, \
     supports_shape

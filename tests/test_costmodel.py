@@ -1,6 +1,6 @@
 """Paper reproduction: every §4/§5 number + Fig 3 medians + planner."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile, plan, predict_mu

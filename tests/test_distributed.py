@@ -5,9 +5,14 @@ import pathlib
 import subprocess
 import sys
 
+import jax
 import pytest
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
+
+pytestmark = pytest.mark.slow          # each case compiles for minutes
+
+_JAX_04 = tuple(int(x) for x in jax.__version__.split(".")[:2]) < (0, 5)
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 420) -> str:
@@ -46,13 +51,13 @@ def test_quantized_psum_error_feedback_converges():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.collectives import quantized_psum_pod
+from repro.compat import shard_map
 mesh = jax.make_mesh((2,4), ("pod","data"))
 g = jax.random.normal(jax.random.PRNGKey(0), (2, 256))  # per-pod grads
 def sync(g, ef):
     return quantized_psum_pod(g, ef)
-f = jax.jit(jax.shard_map(sync, mesh=mesh, in_specs=(P('pod'), P('pod')),
-                          out_specs=(P('pod'), P('pod')),
-                          axis_names={'pod'}, check_vma=False))
+f = jax.jit(shard_map(sync, mesh=mesh, in_specs=(P('pod'), P('pod')),
+                      out_specs=(P('pod'), P('pod'))))
 ef = jnp.zeros_like(g)
 true_mean = jnp.mean(g, axis=0, keepdims=True)
 # single shot: quantization error bounded by scale/2
@@ -72,6 +77,14 @@ print("OK", err1, rel)
 """)
 
 
+@pytest.mark.xfail(
+    _JAX_04, strict=False,
+    reason="the compressed_pod step needs partial-manual shard_map "
+           "(manual over 'pod', auto over data/model for GSPMD layout "
+           "propagation); on jax 0.4.x XLA's SPMD partitioner hard-aborts "
+           "on partial-manual shardings (Check failed: "
+           "sharding.IsManualSubgroup(), xla/hlo/utils/"
+           "hlo_sharding_util.cc:2750) — fixed in the jax>=0.5 era XLA")
 def test_compressed_pod_train_step_matches_gspmd():
     run_py("""
 import jax, jax.numpy as jnp, numpy as np

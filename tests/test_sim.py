@@ -1,0 +1,253 @@
+"""repro.sim: engine semantics, workload generators, and the acceptance
+cross-validation of simulated mu against the closed-form §5.2 projection."""
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.cluster import WorkloadProfile, plan
+from repro.core.collectives import (CollectiveTrafficComponent,
+                                    allreduce_traffic_model)
+from repro.core.contention import ContentionComponent
+from repro.core.costmodel import E2000, CostComponent
+from repro.core.elastic import FailureComponent
+from repro.sim import (Engine, EventKind, Resource, Task,
+                       cross_validate_bigquery, lovelock_cluster,
+                       scatter_gather, shuffle, simulate_mu, simulate_plan,
+                       summarize, render, synthetic_trace,
+                       trace_from_record, traditional_cluster,
+                       training_from_trace)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_single_task():
+    res = Engine([Resource("r", 2.0)]).run(
+        [Task("a", EventKind.COMPUTE, ("r",), 10.0)])
+    assert res.makespan == pytest.approx(5.0)
+    assert res.complete
+
+
+def test_engine_processor_sharing():
+    """Two equal jobs on one resource each get half the capacity."""
+    res = Engine([Resource("r", 2.0)]).run(
+        [Task("a", EventKind.COMPUTE, ("r",), 10.0),
+         Task("b", EventKind.COMPUTE, ("r",), 10.0)])
+    assert res.makespan == pytest.approx(10.0)
+    assert res.finish_times["a"] == pytest.approx(10.0)
+
+
+def test_engine_unequal_jobs_release_share():
+    """When the short job finishes, the long one speeds up:
+    t1 = 2/ (1) ... shared until t=4 (2 each done), then solo."""
+    res = Engine([Resource("r", 1.0)]).run(
+        [Task("a", EventKind.COMPUTE, ("r",), 2.0),
+         Task("b", EventKind.COMPUTE, ("r",), 6.0)])
+    assert res.finish_times["a"] == pytest.approx(4.0)
+    assert res.makespan == pytest.approx(8.0)
+
+
+def test_engine_dependencies_and_zero_work_barrier():
+    res = Engine([Resource("r", 1.0)]).run([
+        Task("a", EventKind.COMPUTE, ("r",), 1.0),
+        Task("bar", EventKind.COMPUTE, (), 0.0, deps=("a",)),
+        Task("b", EventKind.COMPUTE, ("r",), 1.0, deps=("bar",)),
+    ])
+    assert res.makespan == pytest.approx(2.0)
+    assert res.finish_times["bar"] == pytest.approx(1.0)
+
+
+def test_engine_multi_resource_task_takes_min_share():
+    """A DMA holding a busy tx and an idle rx runs at the tx share."""
+    res = Engine([Resource("tx", 1.0), Resource("rx", 1.0)]).run([
+        Task("d1", EventKind.DMA, ("tx", "rx"), 1.0),
+        Task("d2", EventKind.DMA, ("tx",), 1.0),
+    ])
+    assert res.makespan == pytest.approx(2.0)
+
+
+def test_engine_failure_resets_inflight_work():
+    eng = Engine([Resource("n0:r", 1.0, node="n0")])
+    eng.inject_failure("n0", at=0.5, recover_at=2.0)
+    res = eng.run([Task("a", EventKind.COMPUTE, ("n0:r",), 1.0,
+                        node="n0")])
+    # 0.5 of progress lost; restarts at t=2 with full work
+    assert res.makespan == pytest.approx(3.0)
+    assert res.complete
+    assert len(res.events_of(EventKind.NODE_FAIL)) == 1
+    assert len(res.events_of(EventKind.NODE_RECOVER)) == 1
+
+
+def test_engine_unrecovered_failure_reports_incomplete():
+    eng = Engine([Resource("n0:r", 1.0, node="n0")])
+    eng.inject_failure("n0", at=0.5)
+    res = eng.run([Task("a", EventKind.COMPUTE, ("n0:r",), 1.0,
+                        node="n0")])
+    assert not res.complete
+
+
+def test_engine_rate_fn_contention_curve():
+    """E2000 contention component: full-load aggregate equals nominal
+    capacity; a single task gets only its solo share."""
+    comp = ContentionComponent(E2000)
+    cap = comp.full
+    res1 = Engine([Resource("r", cap, rate_fn=comp.rate)]).run(
+        [Task("a", EventKind.COMPUTE, ("r",), comp.solo)])
+    assert res1.makespan == pytest.approx(1.0)      # solo rate, not cap
+    tasks = [Task(f"t{i}", EventKind.COMPUTE, ("r",), cap / 16)
+             for i in range(16)]
+    res2 = Engine([Resource("r", cap, rate_fn=comp.rate)]).run(tasks)
+    assert res2.makespan == pytest.approx(1.0, rel=1e-6)  # saturated
+
+
+def test_engine_deterministic():
+    def build():
+        topo = traditional_cluster(4, cpu_rate=1.0)
+        return topo, shuffle(topo, cpu_work_per_node=1.0,
+                             bytes_per_node=2.0)
+    t1, w1 = build()
+    t2, w2 = build()
+    assert t1.engine().run(w1).makespan == t2.engine().run(w2).makespan
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+
+def test_shuffle_matches_closed_form_on_balanced_cluster():
+    """cpu then network, both perfectly divisible: makespan is the sum of
+    the two phase times."""
+    topo = traditional_cluster(4, cpu_rate=2.0, nic_bw=4.0)
+    res = topo.engine().run(shuffle(topo, cpu_work_per_node=6.0,
+                                    bytes_per_node=8.0))
+    assert res.complete
+    assert res.makespan == pytest.approx(6.0 / 2.0 + 8.0 / 4.0)
+
+
+def test_scatter_gather_incast_is_root_rx_bound():
+    topo = traditional_cluster(9, cpu_rate=1.0)
+    res = topo.engine().run(scatter_gather(
+        topo, request_bytes_total=0.8, response_bytes_total=8.0,
+        cpu_work_per_worker=0.5))
+    # scatter 0.8/1 + work 0.5 + gather 8/1 through the root's single rx
+    assert res.makespan == pytest.approx(0.8 + 0.5 + 8.0)
+
+
+def test_training_trace_replay_and_failure_expansion():
+    topo = lovelock_cluster(4, 1, nic_bw=25e9, ici_bw=45e9,
+                            accel_rate=1.0)
+    trace = synthetic_trace()
+    steps = 10
+    base = topo.engine().run(training_from_trace(topo, trace, steps=steps))
+    assert base.complete
+    step_time = base.makespan / steps
+    fm = FailureComponent(ckpt_every=4, restore_s=10.0, replan_s=2.0)
+    failed = topo.engine().run(training_from_trace(
+        topo, trace, steps=steps, failures=[("nic0", 6)],
+        failure_model=fm))
+    # failure at step 6, ckpt at 4 => replay 2 steps + 12s recovery
+    expected = base.makespan + fm.recovery_delay() + 2 * step_time
+    assert failed.makespan == pytest.approx(expected, rel=1e-6)
+    kinds = {e.kind for e in failed.events}
+    assert EventKind.COLLECTIVE_PHASE in kinds
+
+
+def test_trace_from_record_reconstructs_old_artifacts():
+    rec = {"n_devices": 8, "roofline": {"flops": 1e12, "hbm_bytes": 1e9},
+           "collectives": {"ici_bytes": 1e8, "dcn_bytes": 1e7}}
+    tr = trace_from_record(rec)
+    tiers = [p.get("tier") for p in tr["phases"]
+             if p["kind"] == "collective_phase"]
+    assert tiers == ["ici", "dcn"]
+    assert tr["n_devices"] == 8
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+
+
+def test_collective_traffic_component_matches_model():
+    comp = CollectiveTrafficComponent("hierarchical")
+    phases = comp.phases(1 << 20, n_pods=2, data=8)
+    ref = allreduce_traffic_model(1 << 20, n_pods=2, data=8,
+                                  schedule="hierarchical")
+    by_tier = {p["tier"]: p["bytes"] for p in phases}
+    assert by_tier["ici"] == pytest.approx(ref["ici_bytes"])
+    assert by_tier["dcn"] == pytest.approx(ref["dcn_bytes"])
+    # compressed moves 4x fewer DCN bytes
+    comp_c = CollectiveTrafficComponent("compressed")
+    dcn_c = {p["tier"]: p["bytes"]
+             for p in comp_c.phases(1 << 20, n_pods=2, data=8)}["dcn"]
+    assert dcn_c == pytest.approx(by_tier["dcn"] / 4.0)
+
+
+def test_cost_component_matches_module_functions():
+    c = CostComponent(with_pcie=True)
+    s = c.score(1.0, 1.0)
+    assert s["cost_ratio"] == pytest.approx(1.27, abs=0.01)
+    assert s["power_ratio"] == pytest.approx(1.30, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# cross-validation + planning (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def test_simulated_mu_matches_bigquery_projection_within_10pct():
+    for row in cross_validate_bigquery(phis=(1, 2, 3)):
+        assert row["rel_err"] < 0.10, row
+
+
+def test_simulated_mu_shrinks_with_phi():
+    prof = WorkloadProfile(cpu_fraction=0.4, network_fraction=0.6)
+    mus = [simulate_mu(prof, phi, n_servers=4)["mu"] for phi in (1, 2, 4)]
+    assert mus[0] > mus[1] > mus[2]
+
+
+def test_simulate_plan_agrees_with_analytic_plan_on_bigquery():
+    prof = WorkloadProfile(cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
+                           network_fraction=cm.BIGQUERY_NETWORK_FRACTION)
+    p_ana = plan(prof, n_servers=16, mu_max=1.0)
+    p_sim = simulate_plan(prof, n_servers=16, sim_servers=4, mu_max=1.0)
+    assert p_sim.phi == p_ana.phi
+    assert p_sim.mu == pytest.approx(p_ana.mu, rel=0.10)
+    assert p_sim.cost_ratio == pytest.approx(p_ana.cost_ratio, rel=1e-9)
+
+
+def test_plan_mu_fn_hook_is_used():
+    calls = []
+
+    def mu_fn(prof, phi):
+        calls.append(phi)
+        return 10.0          # nothing satisfies the budget
+
+    prof = WorkloadProfile(cpu_fraction=0.5, network_fraction=0.5)
+    p = plan(prof, n_servers=4, mu_fn=mu_fn)
+    assert calls                      # hook actually consulted
+    assert "best-effort" in p.notes
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def test_summarize_and_render():
+    topo = traditional_cluster(3, cpu_rate=1.0)
+    res = topo.engine().run(shuffle(topo, cpu_work_per_node=1.0,
+                                    bytes_per_node=1.0))
+    s = summarize(res, name="smoke")
+    assert s["complete"]
+    assert s["n_tasks"] == len(res.finish_times)
+    assert "compute" in s["events_by_kind"]
+    assert 0 < s["utilization"]["cpu"] <= 1
+    out = render(s)
+    assert "smoke" in out and "makespan" in out
+    from repro.sim import attach_scores
+    s2 = attach_scores(s, CostComponent(), phi=2, mu=1.2)
+    assert s2["scores"]["cost_ratio"] == pytest.approx(
+        cm.cost_ratio(2.0), rel=1e-9)
+    assert "cost=" in render(s2)

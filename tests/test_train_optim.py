@@ -10,7 +10,7 @@ from repro.optim import OptimizerConfig, adamw_init
 from repro.optim.adamw import _dequant, _quant
 from repro.optim.schedules import cosine_schedule
 from repro.train import cross_entropy, make_train_step
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 def test_loss_decreases_on_repeated_batch():
