@@ -1,7 +1,8 @@
 """Simulator benchmark: per-scenario simulated step times -> BENCH_sim.json.
 
-Three scenarios (the paper's target applications) at a phi sweep, plus the
-closed-form cross-validation:
+The paper's target-application scenarios at a phi sweep, a multi-tenant +
+fabric-contention cell (per-tenant slowdown at 1:1 vs 4:1
+oversubscription), plus the closed-form cross-validation:
 
     PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
     PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
@@ -17,7 +18,8 @@ import time
 
 from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile
-from repro.sim import (cross_validate_bigquery, lovelock_cluster,
+from repro.sim import (Fabric, cross_validate_bigquery, lovelock_cluster,
+                       measure_interference, reference_tenants,
                        scatter_gather, simulate_mu, summarize,
                        synthetic_trace, trace_from_record,
                        traditional_cluster, training_from_trace)
@@ -96,6 +98,29 @@ def scenario_training(phis, n_servers, steps):
     return out
 
 
+def scenario_multi_tenant(n_servers):
+    """Co-located shuffle + training + storage replay on a finite fabric:
+    per-tenant slowdown vs isolated runs at 1:1 and 4:1 oversubscription
+    — the disaggregation-claim stressor (§1/§5.2) the single-tenant
+    scenarios cannot see."""
+    tenants = reference_tenants(n_servers)
+    out = {}
+    rack = max(2, n_servers // 2)
+    for oversub in (1.0, 4.0):
+        rep = measure_interference(
+            lambda: lovelock_cluster(
+                n_servers, 1, accel_rate=1.0, storage_nodes=2,
+                fabric=Fabric(rack_size=rack, oversubscription=oversub)),
+            tenants)
+        out[f"{oversub:g}:1"] = {
+            "slowdown": {k: round(v, 4) for k, v in
+                         rep["slowdown"].items()},
+            "isolated_s": rep["isolated"],
+            "colocated_makespan_s": rep["makespan"],
+        }
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -118,6 +143,7 @@ def main():
             "shuffle": scenario_shuffle(phis, n_servers),
             "scatter_gather": scenario_scatter_gather(phis, n_servers),
             "training": scenario_training(phis, n_servers, steps),
+            "multi_tenant": scenario_multi_tenant(n_servers),
         },
     }
     bench["wall_s"] = round(time.time() - t0, 3)

@@ -7,6 +7,12 @@ closed-form §5.2 projection, and with the trace-driven simulator
 makespans.  When no artifacts exist yet, falls back to the paper's
 BigQuery profile so the example always runs.
 
+It then stresses the winning plan the way the §1 disaggregation claim
+gets stressed in practice: instantiate the planned layout (accelerator +
+storage nodes) as a simulable topology, co-locate analytics, training
+and storage-replay tenants on a finite fabric, and report per-tenant
+slowdown at 1:1 vs 4:1 oversubscription.
+
     PYTHONPATH=src python examples/cluster_planning.py
 """
 import json
@@ -14,7 +20,8 @@ import pathlib
 
 from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile, plan
-from repro.sim import simulate_plan
+from repro.sim import (Fabric, measure_interference, reference_tenants,
+                       simulate_plan, topology_from_plan)
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
@@ -28,6 +35,24 @@ def show(name, prof, bottleneck=""):
           f"{p_sim.power_ratio:6.2f}x {bottleneck}")
 
 
+def show_interference(prof):
+    """Multi-tenant stress of the chosen plan: per-tenant slowdown on a
+    finite fabric, isolated vs co-located."""
+    p = plan(prof, n_servers=8, storage_nodes=2, mu_max=100.0)
+    tenants = reference_tenants()
+    print(f"\nmulti-tenant interference on the phi={p.phi:.0f} plan "
+          f"({len(p.nodes)} nodes, 2 storage):")
+    print(f"{'fabric':>8s}  " + "  ".join(f"{n:>12s}"
+                                          for n, _ in tenants))
+    for oversub in (1.0, 4.0):
+        rep = measure_interference(
+            lambda: topology_from_plan(
+                p, fabric=Fabric(rack_size=8, oversubscription=oversub)),
+            tenants)
+        print(f"{oversub:>6.0f}:1  " + "  ".join(
+            f"{rep['slowdown'][n]:>11.2f}x" for n, _ in tenants))
+
+
 def main():
     cells = []
     if ART.exists():
@@ -37,17 +62,19 @@ def main():
                 cells.append(rec)
     print(f"{'workload':40s} {'phi':>4s}    {'sim':>4s}  "
           f"{'mu(ana/sim)':>13s} {'cost':>5s} {'energy':>7s} bottleneck")
+    bq = WorkloadProfile(cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
+                         network_fraction=cm.BIGQUERY_NETWORK_FRACTION)
     if not cells:
         print("(no dry-run artifacts; showing the paper's BigQuery "
               "profile — run python -m repro.launch.dryrun for more)")
-        show("bigquery (paper §5.2)",
-             WorkloadProfile(cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
-                             network_fraction=cm.BIGQUERY_NETWORK_FRACTION))
+        show("bigquery (paper §5.2)", bq)
+        show_interference(bq)
         return
     for rec in cells[:20]:
         prof = WorkloadProfile.from_roofline(rec["roofline"])
         show(rec["arch"] + "/" + rec["shape"], prof,
              rec["roofline"]["bottleneck"])
+    show_interference(bq)
 
 
 if __name__ == "__main__":

@@ -46,6 +46,10 @@ class ClusterPlan:
     def n_accelerator_nodes(self):
         return sum(1 for n in self.nodes if n.role == NodeRole.ACCELERATOR)
 
+    @property
+    def total_accelerators(self):
+        return sum(n.accelerators for n in self.nodes)
+
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadProfile:
@@ -98,9 +102,14 @@ def plan(profile: WorkloadProfile, *, n_servers: int,
         power = cm.power_ratio(phi, mu, p_p=p_p)
         if best is None or cost > best.cost_ratio:
             n_nic = int(math.ceil(n_servers * phi))
-            acc_per_nic = max(1, accelerators_per_server // max(int(phi), 1))
+            # conserve silicon: phi re-fronts the same chips across more
+            # NICs, so distribute the true total (remainder spread over
+            # the first nodes) instead of flooring per-node counts
+            total_acc = n_servers * accelerators_per_server
+            base, extra = divmod(total_acc, n_nic)
             nodes = tuple(
-                [Node(NodeRole.ACCELERATOR, i, accelerators=acc_per_nic)
+                [Node(NodeRole.ACCELERATOR, i,
+                      accelerators=base + (1 if i < extra else 0))
                  for i in range(n_nic)]
                 + [Node(NodeRole.STORAGE, n_nic + i, ssds=8)
                    for i in range(storage_nodes)]

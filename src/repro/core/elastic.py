@@ -102,15 +102,36 @@ class StragglerDetector:
         self.policy = policy or StragglerPolicy()
         self.est = np.zeros(n_hosts)
         self.strikes = np.zeros(n_hosts, dtype=int)
+        self.active = np.ones(n_hosts, dtype=bool)
+
+    def deactivate(self, host: int) -> None:
+        """Drop an evicted host from the median and strike counting, so
+        detection keeps working on the survivors (the simulator's
+        detection->eviction loop calls this after each eviction)."""
+        self.active[host] = False
+        self.strikes[host] = 0
 
     def observe(self, step_times: Sequence[float]) -> list[int]:
-        """Feed per-host times for one step; returns hosts to evict."""
+        """Feed per-host times for one step; returns hosts to evict.
+        Entries for deactivated hosts (or NaN placeholders) are ignored.
+        """
         t = np.asarray(step_times, dtype=float)
         a = self.policy.ewma
-        self.est = np.where(self.est == 0, t, a * t + (1 - a) * self.est)
-        med = float(np.median(self.est))
-        slow = self.est > self.policy.deadline_factor * med
-        self.strikes = np.where(slow, self.strikes + 1, 0)
+        upd = self.active & np.isfinite(t)
+        est = np.where(self.est == 0, t, a * t + (1 - a) * self.est)
+        self.est = np.where(upd, est, self.est)
+        if not upd.any():
+            return []
+        # median over hosts that have actually reported: the 0-valued
+        # est sentinel of a never-measured host must not drag the
+        # median to 0 and flag every real measurement as slow
+        live = self.active & (self.est > 0)
+        med = float(np.median(self.est[live]))
+        slow = upd & (self.est > self.policy.deadline_factor * med)
+        # a host with no measurement this step keeps its strikes (ignored,
+        # not absolved); a measured-fast host resets to 0
+        self.strikes = np.where(slow, self.strikes + 1,
+                                np.where(upd, 0, self.strikes))
         return list(np.nonzero(self.strikes >= self.policy.patience)[0])
 
 

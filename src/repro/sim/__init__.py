@@ -7,6 +7,16 @@ slowdown — with queueing, incast, and failures — instead of only the
 closed-form §5.2 projection (which it is cross-validated against in
 `validate.cross_validate_bigquery`).
 
+Beyond single-tenant replay the stack models the effects that stress the
+paper's §1 disaggregation claim: a finite-capacity fabric (`Fabric`:
+per-rack uplinks + core at a configurable oversubscription ratio),
+storage-node traffic (`storage_replay` against `NodeRole.STORAGE`
+nodes), multi-tenant co-location (`multi_tenant` +
+`measure_interference`), and straggler-driven eviction
+(`training_with_stragglers` feeds simulated step times to
+`core.elastic.StragglerDetector` and injects its evictions back into
+the timeline).
+
 Quickstart::
 
     from repro.core.cluster import WorkloadProfile
@@ -18,18 +28,29 @@ Quickstart::
 """
 from repro.sim.engine import (Engine, EventKind, Resource, SimEvent,
                               SimResult, Task)
-from repro.sim.topology import (NodeModel, Topology, lovelock_cluster,
+from repro.sim.topology import (Fabric, NodeModel, Topology,
+                                lovelock_cluster, topology_from_plan,
                                 traditional_cluster)
-from repro.sim.workloads import (scatter_gather, shuffle, synthetic_trace,
-                                 trace_from_record, training_from_trace)
-from repro.sim.validate import (cross_validate_bigquery, simulate_mu,
+from repro.sim.workloads import (MultiTenantWorkload, multi_tenant,
+                                 reference_tenants, scatter_gather,
+                                 shuffle, storage_replay, synthetic_trace,
+                                 trace_from_record, training_from_trace,
+                                 training_with_stragglers)
+from repro.sim.validate import (cross_validate_bigquery,
+                                measure_interference, simulate_mu,
                                 simulate_plan)
-from repro.sim.report import attach_scores, render, summarize
+from repro.sim.report import (attach_scores, attach_tenants, per_tenant,
+                              render, summarize)
 
 __all__ = [
     "Engine", "EventKind", "Resource", "SimEvent", "SimResult", "Task",
-    "NodeModel", "Topology", "lovelock_cluster", "traditional_cluster",
-    "scatter_gather", "shuffle", "synthetic_trace", "trace_from_record",
-    "training_from_trace", "cross_validate_bigquery", "simulate_mu",
-    "simulate_plan", "attach_scores", "render", "summarize",
+    "Fabric", "NodeModel", "Topology", "lovelock_cluster",
+    "topology_from_plan", "traditional_cluster",
+    "MultiTenantWorkload", "multi_tenant", "reference_tenants",
+    "scatter_gather", "shuffle",
+    "storage_replay", "synthetic_trace", "trace_from_record",
+    "training_from_trace", "training_with_stragglers",
+    "cross_validate_bigquery", "measure_interference", "simulate_mu",
+    "simulate_plan", "attach_scores", "attach_tenants", "per_tenant",
+    "render", "summarize",
 ]

@@ -93,22 +93,25 @@ class SimResult:
 class Engine:
     def __init__(self, resources: Iterable[Resource]):
         self.resources = {r.name: r for r in resources}
-        self._timed: list = []      # (time, seq, EventKind, node)
-        self._seq = 0
+        self._injected: list = []   # (time, EventKind, node), insert order
 
     def inject_failure(self, node: str, at: float,
                        recover_at: Optional[float] = None) -> None:
-        heapq.heappush(self._timed, (at, self._seq, EventKind.NODE_FAIL,
-                                     node))
-        self._seq += 1
+        self._injected.append((at, EventKind.NODE_FAIL, node))
         if recover_at is not None:
-            heapq.heappush(self._timed, (recover_at, self._seq,
-                                         EventKind.NODE_RECOVER, node))
-            self._seq += 1
+            self._injected.append((recover_at, EventKind.NODE_RECOVER,
+                                   node))
 
     # -- main loop ----------------------------------------------------------
 
     def run(self, tasks: Iterable[Task]) -> SimResult:
+        # timed node events are replayed from `_injected` on every call, so
+        # a second run() sees the same failure schedule instead of the
+        # stale, half-consumed heap it used to inherit
+        timed: list = []
+        for seq, (at, kind, node) in enumerate(self._injected):
+            heapq.heappush(timed, (at, seq, kind, node))
+
         tasks = list(tasks)
         by_id = {t.tid: t for t in tasks}
         if len(by_id) != len(tasks):
@@ -168,14 +171,14 @@ class Engine:
             return out, n_active
 
         admit()
-        while running or self._timed:
+        while running or timed:
             rate, n_active = rates() if running else ({}, {})
             dt = math.inf
             for tid, r in rate.items():
                 if r > _EPS:
                     dt = min(dt, remaining[tid] / r)
-            if self._timed:
-                dt = min(dt, self._timed[0][0] - now)
+            if timed:
+                dt = min(dt, timed[0][0] - now)
             if not math.isfinite(dt):
                 break                      # stalled: nodes down forever
             dt = max(dt, 0.0)
@@ -184,13 +187,16 @@ class Engine:
                 remaining[tid] -= r * dt
             if running:
                 for name, n in n_active.items():
-                    if n:
+                    # a resource on a down node delivers zero rate, so it
+                    # is idle, not busy, even with tasks still holding it
+                    if n and not (self.resources[name].node in down
+                                  and self.resources[name].node):
                         busy[name] += dt
             now += dt
 
             # timed node events due now
-            while self._timed and self._timed[0][0] <= now + _EPS:
-                t_ev, _, kind, node = heapq.heappop(self._timed)
+            while timed and timed[0][0] <= now + _EPS:
+                t_ev, _, kind, node = heapq.heappop(timed)
                 events.append(SimEvent(t_ev, kind, node))
                 if kind == EventKind.NODE_FAIL:
                     down.add(node)

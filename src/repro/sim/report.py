@@ -19,17 +19,47 @@ def summarize(result: SimResult, *, name: str = "") -> dict:
     kinds = Counter(e.kind.value for e in result.events)
     util: dict = {}
     if result.makespan > 0:
-        per_class: dict = {c: [] for c in _CLASSES}
+        per_class: dict = {}
         for rname, busy in result.busy_time.items():
-            cls = rname.rsplit(":", 1)[-1]
-            if cls in per_class:
-                per_class[cls].append(busy / result.makespan)
+            cls = ("fabric" if rname.startswith("fabric:")
+                   else rname.rsplit(":", 1)[-1])
+            if cls in _CLASSES or cls == "fabric":
+                per_class.setdefault(cls, []).append(
+                    busy / result.makespan)
         util = {c: round(sum(v) / len(v), 4)
                 for c, v in per_class.items() if v}
     return {"name": name, "makespan_s": result.makespan,
             "complete": result.complete,
             "n_tasks": len(result.finish_times),
             "events_by_kind": dict(kinds), "utilization": util}
+
+
+def per_tenant(result: SimResult, workload) -> dict:
+    """Per-tenant makespans out of one co-located run.
+
+    ``workload`` is a `workloads.MultiTenantWorkload`; a tenant's
+    makespan is the latest finish time over its own tasks (NaN when the
+    run stalled before the tenant completed).
+    """
+    out = {}
+    for name, tids in workload.tenants.items():
+        done = [result.finish_times[t] for t in tids
+                if t in result.finish_times]
+        out[name] = max(done) if len(done) == len(tids) else float("nan")
+    return out
+
+
+def attach_tenants(summary: dict, result: SimResult, workload, *,
+                   isolated: dict = None) -> dict:
+    """Attach per-tenant makespans — and, when ``isolated`` baselines are
+    given, slowdowns (co-located / isolated, the interference metric)."""
+    co = per_tenant(result, workload)
+    summary["tenants"] = {n: {"makespan_s": v} for n, v in co.items()}
+    if isolated:
+        for n, base in isolated.items():
+            if n in co:
+                summary["tenants"][n]["slowdown"] = co[n] / base
+    return summary
 
 
 def attach_scores(summary: dict, cost_component, phi: float,
@@ -51,6 +81,13 @@ def render(summary: dict) -> str:
     if ut:
         lines.append("  utilization   " + "  ".join(
             f"{k}={v:.0%}" for k, v in ut.items()))
+    tn = summary.get("tenants")
+    if tn:
+        for name, row in sorted(tn.items()):
+            slow = (f"  slowdown={row['slowdown']:.3f}x"
+                    if "slowdown" in row else "")
+            lines.append(f"  tenant {name:12s}"
+                         f" makespan={row['makespan_s']:.4g} s{slow}")
     sc = summary.get("scores")
     if sc:
         lines.append(f"  phi={sc['phi']}  mu={sc['mu']:.3f}  "

@@ -13,15 +13,25 @@ Lovelock NIC node's CPU is the 1.0 reference (E2000 full-load aggregate),
 a traditional server's is `MILAN_SYSTEM_SPEEDUP` (4.7); both node kinds
 get the same NIC bandwidth (the paper's premise: NICs are cheap on
 bandwidth), so phi NICs per replaced server means phi x aggregate
-bandwidth.  The fabric is non-blocking (contention lives at node NICs),
-matching the §5.2 projection; a finite fabric can be modelled by adding a
-shared Resource and listing it in DMA tasks.
+bandwidth.
+
+The fabric is non-blocking by default (contention lives at node NICs),
+matching the §5.2 projection.  Passing a `Fabric` makes it finite: nodes
+are grouped into racks of ``rack_size`` (insertion order) and every
+cross-rack flow additionally holds three shared resources — the source
+rack's uplink, the core, and the destination rack's downlink — whose
+capacities shrink by the oversubscription ratio.  At 1:1 the fair share
+on every fabric hop is at least the NIC share for the balanced traffic
+the generators emit, so results match the non-blocking model exactly;
+at k:1 the fabric becomes the bottleneck the §1 disaggregation claim
+has to absorb.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional
 
+from repro.core.cluster import ClusterPlan, NodeRole
 from repro.core.costmodel import MILAN_SYSTEM_SPEEDUP
 from repro.sim.engine import Engine, Resource
 
@@ -29,25 +39,94 @@ from repro.sim.engine import Engine, Resource
 @dataclasses.dataclass(frozen=True)
 class NodeModel:
     name: str
-    kind: str                     # 'server' | 'smartnic'
+    kind: str                     # 'server' | 'smartnic' | 'storage'
     cpu_rate: float               # normalized ops/s (full-load aggregate)
     nic_bw: float = 1.0           # bytes/s per direction (relative)
-    accel_rate: float = 1.0       # accelerator device-seconds per second
+    accel_rate: float = 1.0      # accelerator device-seconds per second
     ici_bw: float = 1.0           # intra-pod interconnect bytes/s
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Finite-capacity fabric tier (per-rack uplinks + shared core).
+
+    ``rack_size`` nodes share one ToR; intra-rack traffic stays
+    non-blocking, cross-rack traffic rides ``rack uplink -> core ->
+    rack downlink``.  An uplink/downlink carries ``sum(rack nic_bw) /
+    oversubscription``; the core carries the sum of all uplinks divided
+    by ``core_oversubscription``.  1:1 everywhere reproduces the
+    non-blocking model.
+    """
+    rack_size: int = 8
+    oversubscription: float = 1.0
+    core_oversubscription: float = 1.0
+
+    def __post_init__(self):
+        if self.rack_size < 1:
+            raise ValueError("rack_size must be >= 1")
+        if self.oversubscription < 1.0 or self.core_oversubscription < 1.0:
+            raise ValueError("oversubscription ratios must be >= 1.0")
 
 
 class Topology:
     def __init__(self, nodes, *,
                  cpu_rate_fn: Optional[Callable[[NodeModel],
-                                                Callable]] = None):
+                                                Callable]] = None,
+                 fabric: Optional[Fabric] = None):
         """cpu_rate_fn(node) -> rate_fn plugs a ContentionComponent-style
-        aggregate-throughput curve into every node CPU."""
+        aggregate-throughput curve into every node CPU; fabric (optional)
+        adds the finite rack/core tier."""
         self.nodes = {n.name: n for n in nodes}
         self._cpu_rate_fn = cpu_rate_fn
+        self.fabric = fabric
+        self._rack = {name: i // fabric.rack_size if fabric else 0
+                      for i, name in enumerate(self.nodes)}
 
     @property
     def node_names(self) -> list:
         return list(self.nodes)
+
+    @property
+    def compute_node_names(self) -> list:
+        return [n.name for n in self.nodes.values() if n.kind != "storage"]
+
+    @property
+    def storage_node_names(self) -> list:
+        return [n.name for n in self.nodes.values() if n.kind == "storage"]
+
+    @property
+    def accelerator_node_names(self) -> list:
+        """Compute nodes that front accelerator silicon (excludes
+        lite-compute nodes, whose accel_rate is 0)."""
+        return [n.name for n in self.nodes.values()
+                if n.kind != "storage" and n.accel_rate > 0]
+
+    @property
+    def n_racks(self) -> int:
+        return max(self._rack.values()) + 1 if self._rack else 0
+
+    def rack_of(self, name: str) -> int:
+        return self._rack[name]
+
+    def _rack_nic_bw(self, rack: int) -> float:
+        return sum(n.nic_bw for n in self.nodes.values()
+                   if self._rack[n.name] == rack)
+
+    def fabric_resources(self) -> list:
+        """Shared rack uplink/downlink + core resources (node='' — the
+        fabric is not a failure domain)."""
+        if self.fabric is None:
+            return []
+        out = []
+        total_up = 0.0
+        for r in range(self.n_racks):
+            cap = self._rack_nic_bw(r) / self.fabric.oversubscription
+            total_up += cap
+            out.append(Resource(f"fabric:rack{r}:up", cap))
+            out.append(Resource(f"fabric:rack{r}:down", cap))
+        out.append(Resource("fabric:core",
+                            total_up / self.fabric.core_oversubscription))
+        return out
 
     def resources(self) -> list:
         out = []
@@ -60,6 +139,7 @@ class Topology:
             out.append(Resource(f"{n.name}:accel", n.accel_rate,
                                 node=n.name))
             out.append(Resource(f"{n.name}:ici", n.ici_bw, node=n.name))
+        out.extend(self.fabric_resources())
         return out
 
     def engine(self) -> Engine:
@@ -81,23 +161,66 @@ class Topology:
     def ici(self, name):
         return f"{name}:ici"
 
+    def fabric_path(self, src: str, dst: str) -> tuple:
+        """Fabric hops a src->dst flow must hold: () when the fabric is
+        non-blocking or both endpoints share a rack."""
+        if self.fabric is None:
+            return ()
+        ru, rv = self._rack[src], self._rack[dst]
+        if ru == rv:
+            return ()
+        return (f"fabric:rack{ru}:up", "fabric:core",
+                f"fabric:rack{rv}:down")
+
+    def dcn_path(self, name: str, participants=None) -> tuple:
+        """Fabric hops for node-aggregate DCN traffic (collective phases
+        modelled as per-node bytes rather than point-to-point flows):
+        the node's rack uplink, the core, and its rack downlink.
+
+        When the collective's ``participants`` all share one rack the
+        bytes never leave the ToR and no fabric hop is charged; a
+        collective spanning racks charges each node's full volume to its
+        rack links (ring/all-reduce neighbours land in other racks —
+        exact for 2 racks, slightly pessimistic beyond)."""
+        if self.fabric is None:
+            return ()
+        if participants is not None and \
+                len({self._rack[u] for u in participants}) <= 1:
+            return ()
+        r = self._rack[name]
+        return (f"fabric:rack{r}:up", "fabric:core",
+                f"fabric:rack{r}:down")
+
+
+def _storage_models(n_storage: int, nic_bw: float,
+                    cpu_rate: float = 1.0) -> list:
+    """Storage nodes are NIC-class nodes fronting SSD shelves: full NIC
+    bandwidth, E2000-class CPU, no accelerators, no ICI."""
+    return [NodeModel(f"st{i}", "storage", cpu_rate, nic_bw,
+                      accel_rate=0.0, ici_bw=0.0)
+            for i in range(n_storage)]
+
 
 def traditional_cluster(n_servers: int, *,
                         cpu_rate: float = MILAN_SYSTEM_SPEEDUP,
                         nic_bw: float = 1.0, accel_rate: float = 1.0,
-                        ici_bw: float = 1.0,
-                        cpu_rate_fn=None) -> Topology:
+                        ici_bw: float = 1.0, storage_nodes: int = 0,
+                        cpu_rate_fn=None,
+                        fabric: Optional[Fabric] = None) -> Topology:
     """n_servers conventional hosts — the mu denominator."""
     return Topology(
         [NodeModel(f"srv{i}", "server", cpu_rate, nic_bw, accel_rate,
-                   ici_bw) for i in range(n_servers)],
-        cpu_rate_fn=cpu_rate_fn)
+                   ici_bw) for i in range(n_servers)]
+        + _storage_models(storage_nodes, nic_bw),
+        cpu_rate_fn=cpu_rate_fn, fabric=fabric)
 
 
 def lovelock_cluster(n_servers: int, phi: int, *, cpu_rate: float = 1.0,
                      nic_bw: float = 1.0, accel_rate: float = None,
-                     ici_bw: float = 1.0, cpu_rate_fn=None) -> Topology:
-    """n_servers * phi headless smart-NIC nodes.
+                     ici_bw: float = 1.0, storage_nodes: int = 0,
+                     cpu_rate_fn=None,
+                     fabric: Optional[Fabric] = None) -> Topology:
+    """n_servers * phi headless smart-NIC nodes (+ optional storage).
 
     Each replaced server's accelerators are re-fronted across its phi
     NICs, so per-node accel_rate defaults to 1/phi (same total silicon).
@@ -106,5 +229,33 @@ def lovelock_cluster(n_servers: int, phi: int, *, cpu_rate: float = 1.0,
         accel_rate = 1.0 / phi
     return Topology(
         [NodeModel(f"nic{i}", "smartnic", cpu_rate, nic_bw, accel_rate,
-                   ici_bw) for i in range(n_servers * phi)],
-        cpu_rate_fn=cpu_rate_fn)
+                   ici_bw) for i in range(n_servers * phi)]
+        + _storage_models(storage_nodes, nic_bw),
+        cpu_rate_fn=cpu_rate_fn, fabric=fabric)
+
+
+def topology_from_plan(cluster_plan: ClusterPlan, *, cpu_rate: float = 1.0,
+                       nic_bw: float = 1.0, ici_bw: float = 1.0,
+                       accel_rate_per_chip: float = 0.25,
+                       cpu_rate_fn=None,
+                       fabric: Optional[Fabric] = None) -> Topology:
+    """Instantiate a `core.cluster.plan` layout as a simulable topology.
+
+    ACCELERATOR nodes front ``accelerators * accel_rate_per_chip`` device
+    throughput (0.25/chip = a 4-chip traditional server is 1.0), STORAGE
+    nodes become traffic sinks/sources for `workloads.storage_replay`,
+    LITE_COMPUTE nodes are NIC-only."""
+    models = []
+    for n in cluster_plan.nodes:
+        if n.role == NodeRole.STORAGE:
+            models.append(NodeModel(f"st{n.index}", "storage", cpu_rate,
+                                    nic_bw, accel_rate=0.0, ici_bw=0.0))
+        elif n.role == NodeRole.ACCELERATOR:
+            models.append(NodeModel(
+                f"nic{n.index}", "smartnic", cpu_rate, nic_bw,
+                accel_rate=n.accelerators * accel_rate_per_chip,
+                ici_bw=ici_bw))
+        else:
+            models.append(NodeModel(f"lite{n.index}", "smartnic", cpu_rate,
+                                    nic_bw, accel_rate=0.0, ici_bw=0.0))
+    return Topology(models, cpu_rate_fn=cpu_rate_fn, fabric=fabric)

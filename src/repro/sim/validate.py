@@ -78,6 +78,44 @@ def cross_validate_bigquery(phis=(1, 2, 3), *, n_servers: int = 8) -> list:
     return out
 
 
+def measure_interference(make_topo, tenants) -> dict:
+    """Isolated-vs-co-located slowdown per tenant (the multi-tenant
+    interference metric the ROADMAP asks for).
+
+    ``make_topo()`` builds a fresh topology per run (isolation means a
+    private cluster); ``tenants`` is the same ``(name, build)`` sequence
+    `workloads.multi_tenant` takes.  Each tenant first runs alone, then
+    all run co-located from t=0 on one instance of the same topology;
+    ``slowdown[name]`` is co-located makespan / isolated makespan —
+    1.0 means a perfectly absorbed tenant, anything above it is
+    cross-workload interference (fabric, NIC, or CPU contention).
+    """
+    from repro.sim.report import per_tenant
+    from repro.sim.workloads import multi_tenant
+
+    tenants = list(tenants)       # consumed twice: isolated + co-located
+    isolated = {}
+    for name, build in tenants:
+        topo = make_topo()
+        res = topo.engine().run(build(topo, tag=f":{name}"))
+        if not res.complete:
+            raise RuntimeError(f"isolated run for tenant {name!r} stalled")
+        isolated[name] = res.makespan
+    topo = make_topo()
+    wl = multi_tenant(topo, tenants)
+    res = topo.engine().run(list(wl.tasks))
+    if not res.complete:
+        raise RuntimeError("co-located run stalled")
+    colocated = per_tenant(res, wl)
+    return {
+        "isolated": isolated,
+        "colocated": colocated,
+        "slowdown": {n: colocated[n] / isolated[n] for n in isolated},
+        "makespan": res.makespan,
+        "complete": res.complete,
+    }
+
+
 def simulate_plan(profile: WorkloadProfile, *, n_servers: int = 8,
                   sim_servers: int = 8, **plan_kw):
     """`core.cluster.plan`, scoring phi candidates with the simulator.

@@ -1,6 +1,6 @@
 """Trace-driven workload generators: task DAGs for the event engine.
 
-Three scenario families from the paper's target applications (§1: "data
+Scenario families from the paper's target applications (§1: "data
 intensive applications, such as analytics, query processing and ML
 training"):
 
@@ -16,12 +16,25 @@ training"):
                            block), with optional checkpoint/replay
                            failure expansion via
                            `core.elastic.FailureComponent`.
+  * `storage_replay`     — disaggregated storage: per-step dataset-shard
+                           reads and streaming-checkpoint writes between
+                           compute nodes and STORAGE-role nodes.
+
+`multi_tenant` composes any of the above on one topology with per-tenant
+tags (see `validate.measure_interference` for the isolated-vs-co-located
+slowdown harness), and `training_with_stragglers` closes the
+detection->eviction loop: simulated per-node step times feed
+`core.elastic.StragglerDetector`, whose evictions come back as
+`Engine.inject_failure` events plus a re-planned survivor timeline.
 
 All generators return plain lists of `Task`; compose freely before
-`Engine.run`.
+`Engine.run`.  When the topology carries a finite `Fabric`, every
+cross-rack flow additionally holds its rack-uplink/core/downlink
+resources.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence
 
 from repro.sim.engine import EventKind, Task
@@ -35,13 +48,13 @@ DEFAULT_HBM_BW = 8.19e11          # bytes/s
 def shuffle(topo: Topology, *, cpu_work_per_node: float,
             bytes_per_node: float, tasks_per_node: int = 2,
             reduce_work_per_node: float = 0.0, tag: str = "") -> list:
-    """Map -> all-to-all exchange -> reduce over every node in ``topo``.
+    """Map -> all-to-all exchange -> reduce over every compute node.
 
     ``bytes_per_node`` is the egress volume per node (bytes that actually
     cross its NIC); each node starts sending as soon as its own map tasks
     finish — no global barrier, like a real pipelined shuffle.
     """
-    nodes = topo.node_names
+    nodes = topo.compute_node_names
     n = len(nodes)
     tasks = []
     maps: dict = {}
@@ -59,8 +72,8 @@ def shuffle(topo: Topology, *, cpu_work_per_node: float,
                     continue
                 tid = f"xfer{tag}:{u}:{v}"
                 inbound[v].append(tid)
-                tasks.append(Task(tid, EventKind.DMA,
-                                  (topo.tx(u), topo.rx(v)), per_peer,
+                res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
+                tasks.append(Task(tid, EventKind.DMA, res, per_peer,
                                   deps=maps[u], node=u))
     for v in nodes:
         deps = tuple(inbound[v]) or maps[v]
@@ -80,7 +93,7 @@ def scatter_gather(topo: Topology, *, request_bytes_total: float,
     ingress — the incast bottleneck that makes wide fan-outs
     root-NIC-bound regardless of worker count.
     """
-    nodes = topo.node_names
+    nodes = topo.compute_node_names
     root = root or nodes[0]
     workers = [u for u in nodes if u != root]
     if not workers:
@@ -92,16 +105,152 @@ def scatter_gather(topo: Topology, *, request_bytes_total: float,
         wk = f"work{tag}:{w}"
         rp = f"resp{tag}:{w}"
         resp.append(rp)
-        tasks.append(Task(req, EventKind.DMA, (topo.tx(root), topo.rx(w)),
+        tasks.append(Task(req, EventKind.DMA,
+                          (topo.tx(root), topo.rx(w))
+                          + topo.fabric_path(root, w),
                           request_bytes_total / len(workers), node=root))
         tasks.append(Task(wk, EventKind.COMPUTE, (topo.cpu(w),),
                           cpu_work_per_worker, deps=(req,), node=w))
-        tasks.append(Task(rp, EventKind.DMA, (topo.tx(w), topo.rx(root)),
+        tasks.append(Task(rp, EventKind.DMA,
+                          (topo.tx(w), topo.rx(root))
+                          + topo.fabric_path(w, root),
                           response_bytes_total / len(workers), deps=(wk,),
                           node=w))
     tasks.append(Task(f"agg{tag}", EventKind.COMPUTE, (topo.cpu(root),),
                       root_work, deps=tuple(resp), node=root))
     return tasks
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated-storage replay
+# ---------------------------------------------------------------------------
+
+
+def storage_replay(topo: Topology, *, shard_bytes: float,
+                   ckpt_bytes: float, steps: int = 1,
+                   compute_s: float = 0.0,
+                   ckpt_every: Optional[int] = None, failure_model=None,
+                   tag: str = "") -> list:
+    """Disaggregated storage traffic against `NodeRole.STORAGE` nodes.
+
+    Every step, each compute node streams a ``shard_bytes`` dataset shard
+    from a storage node (round-robin across storage nodes, rotating per
+    step) and processes it on its accelerator for ``compute_s``
+    device-seconds; shard reads prefetch one step ahead (read s+1 is
+    released with compute s, never earlier).
+    Every ``ckpt_every`` steps — `core.elastic.FailureComponent`'s
+    checkpoint cadence by default — it streams a ``ckpt_bytes``
+    checkpoint shard back (asynchronously: nothing depends on the write,
+    it only has to finish before the run is over), the
+    `core/streaming_checkpoint.py` pattern on the fabric.
+    """
+    storage = topo.storage_node_names
+    if not storage:
+        raise ValueError("storage_replay needs a topology with storage "
+                         "nodes (storage_nodes=... or NodeRole.STORAGE)")
+    if ckpt_every is None:
+        if failure_model is None:
+            from repro.core.elastic import FailureComponent
+            failure_model = FailureComponent()
+        ckpt_every = failure_model.ckpt_every
+    compute = topo.accelerator_node_names
+    tasks = []
+    for i, u in enumerate(compute):
+        prev_read = None
+        prev_proc = None
+        prev_prev_proc = None
+        for s in range(steps):
+            st = storage[(i + s) % len(storage)]
+            rid = f"read{tag}:{u}:{s}"
+            # one-shard prefetch: read s is released together with
+            # compute s-1 (after read s-1 and compute s-2), so the
+            # dataset stream stays one step ahead instead of
+            # front-loading every shard at t=0
+            deps = tuple(d for d in (prev_read, prev_prev_proc) if d)
+            tasks.append(Task(rid, EventKind.DMA,
+                              (topo.tx(st), topo.rx(u))
+                              + topo.fabric_path(st, u),
+                              shard_bytes, deps=deps, node=st))
+            pid = f"proc{tag}:{u}:{s}"
+            pdeps = (rid,) + ((prev_proc,) if prev_proc else ())
+            tasks.append(Task(pid, EventKind.COMPUTE, (topo.accel(u),),
+                              compute_s, deps=pdeps, node=u))
+            if ckpt_bytes > 0 and (s + 1) % ckpt_every == 0:
+                tasks.append(Task(f"ckpt{tag}:{u}:{s}", EventKind.DMA,
+                                  (topo.tx(u), topo.rx(st))
+                                  + topo.fabric_path(u, st),
+                                  ckpt_bytes, deps=(pid,), node=u))
+            prev_prev_proc = prev_proc
+            prev_read, prev_proc = rid, pid
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant composition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantWorkload:
+    """Co-located tenant DAGs plus the tid->tenant attribution needed to
+    read per-tenant finish times out of one `SimResult`."""
+    tasks: tuple
+    tenants: dict                 # name -> tuple of task ids
+
+    def tenant_of(self, tid: str) -> Optional[str]:
+        for name, tids in self.tenants.items():
+            if tid in tids:
+                return name
+        return None
+
+
+def multi_tenant(topo: Topology, tenants) -> MultiTenantWorkload:
+    """Interleave several tenants' DAGs on one topology.
+
+    ``tenants``: iterable of ``(name, build)`` where ``build(topo,
+    tag=...)`` returns a task list (any generator in this module,
+    usually via `functools.partial`/lambda).  Each tenant is built with
+    ``tag=":{name}"`` so task ids never collide and reports can
+    attribute makespans per tenant; all tenants are released at t=0 —
+    the co-location the ROADMAP's interference item asks about.
+    """
+    tasks: list = []
+    owner: dict = {}
+    seen: set = set()
+    for name, build in tenants:
+        if name in owner:
+            raise ValueError(f"duplicate tenant name {name!r}")
+        tts = build(topo, tag=f":{name}")
+        ids = tuple(t.tid for t in tts)
+        clash = seen.intersection(ids)
+        if clash:
+            raise ValueError(f"tenant {name!r} reuses task ids {clash}")
+        seen.update(ids)
+        tasks.extend(tts)
+        owner[name] = ids
+    return MultiTenantWorkload(tasks=tuple(tasks), tenants=owner)
+
+
+def reference_tenants(n_devices: int = 8) -> list:
+    """The repo's reference multi-tenant mix, in relative units: an
+    analytics shuffle, a network-heavy training job (0.5 s compute + 3
+    bytes of gradient sync per step at accel_flops=hbm_bw=1), and a
+    storage replay.  Shared by `benchmarks/bench_sim.py`'s tracked
+    interference cell and `examples/cluster_planning.py` so the two
+    cannot drift; pass straight to `multi_tenant` /
+    `validate.measure_interference`."""
+    trace = {"n_devices": n_devices, "phases": [
+        {"kind": "compute", "flops": 0.5},
+        {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+    return [
+        ("analytics", lambda topo, tag="": shuffle(
+            topo, cpu_work_per_node=0.5, bytes_per_node=7.0, tag=tag)),
+        ("training", lambda topo, tag="": training_from_trace(
+            topo, trace, steps=4, accel_flops=1.0, hbm_bw=1.0, tag=tag)),
+        ("storage", lambda topo, tag="": storage_replay(
+            topo, shard_bytes=2.0, ckpt_bytes=4.0, steps=4, ckpt_every=2,
+            compute_s=0.25, tag=tag)),
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -144,73 +293,198 @@ def trace_from_record(rec: dict) -> dict:
     }
 
 
-def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
-                        accel_flops: float = DEFAULT_ACCEL_FLOPS,
-                        hbm_bw: float = DEFAULT_HBM_BW,
-                        failures: Optional[Sequence] = None,
-                        failure_model=None) -> list:
-    """Replay ``steps`` synchronous training steps over every node.
-
-    Trace numbers are per-device; each node runs one device group.  A
-    step is: compute (roofline max of FLOP and HBM time, on ``accel``),
-    then its collective phases (``ici``/``dcn`` tiers; dcn rides the
-    node's NIC tx+rx), then a global barrier — the §6 synchronous-SGD
-    gradient sync.
-
-    failures: [(node, step), ...] expands, per failure, into a recovery
-    delay plus replay of the steps since the last checkpoint
-    (`FailureComponent`), inserted after the failed step's barrier.
-    """
-    if failures and failure_model is None:
-        from repro.core.elastic import FailureComponent
-        failure_model = FailureComponent()
-    fail_at = {int(s): str(n) for n, s in (failures or [])}
-
-    nodes = topo.node_names
+def _trace_costs(trace: dict, accel_flops: float, hbm_bw: float):
+    """Per-step per-device compute seconds + [(tier, bytes), ...]."""
     compute_s = 0.0
-    coll = []                     # (tier, bytes)
+    coll = []
     for ph in trace["phases"]:
         if ph["kind"] == "compute":
             compute_s += max(ph.get("flops", 0.0) / accel_flops,
                              ph.get("hbm_bytes", 0.0) / hbm_bw)
-        else:
-            if ph.get("bytes", 0.0) > 0:
-                coll.append((ph.get("tier", "dcn"), float(ph["bytes"])))
+        elif ph.get("bytes", 0.0) > 0:
+            coll.append((ph.get("tier", "dcn"), float(ph["bytes"])))
+    return compute_s, coll
+
+
+def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
+                        accel_flops: float = DEFAULT_ACCEL_FLOPS,
+                        hbm_bw: float = DEFAULT_HBM_BW,
+                        failures: Optional[Sequence] = None,
+                        failure_model=None, tag: str = "",
+                        nodes: Optional[Sequence[str]] = None,
+                        compute_scale: float = 1.0, first_step: int = 0,
+                        after: Optional[str] = None) -> list:
+    """Replay ``steps`` synchronous training steps over compute nodes.
+
+    Trace numbers are per-device; each node runs one device group.  A
+    step is: compute (roofline max of FLOP and HBM time, on ``accel``),
+    then its collective phases (``ici``/``dcn`` tiers; dcn rides the
+    node's NIC tx+rx plus its fabric path when the topology has a finite
+    fabric), then a global barrier — the §6 synchronous-SGD gradient
+    sync.
+
+    failures: [(node, step), ...] expands, per failure, into a recovery
+    delay plus replay of the steps since the last checkpoint
+    (`FailureComponent`), inserted after the failed step's barrier.
+    Several nodes failing at the same step each contribute their own
+    recovery delay (restores are serialized by the coordinator) followed
+    by one shared replay of the lost steps.
+
+    The elastic hooks — ``tag`` (namespace task ids per tenant),
+    ``nodes`` (run on a subset, e.g. post-eviction survivors),
+    ``compute_scale`` (per-node work growth after re-sharding),
+    ``first_step`` (step numbering offset) and ``after`` (external
+    task id the first step's compute depends on) — let
+    `training_with_stragglers` splice segments into one timeline.
+    """
+    if failures and failure_model is None:
+        from repro.core.elastic import FailureComponent
+        failure_model = FailureComponent()
+    fail_at: dict = {}
+    for n, s in (failures or []):
+        fail_at.setdefault(int(s), []).append(str(n))
+
+    # training lives on accelerator-bearing nodes (a lite-compute node's
+    # accel resource has zero rate and would stall the step)
+    nodes = (list(nodes) if nodes is not None
+             else topo.accelerator_node_names)
+    compute_s, coll = _trace_costs(trace, accel_flops, hbm_bw)
+    compute_s *= compute_scale
 
     tasks = []
 
-    def emit_step(tag: str, prev_barrier: Optional[str]) -> str:
+    def emit_step(stag: str, prev_barrier: Optional[str]) -> str:
         dep = (prev_barrier,) if prev_barrier else ()
         phase_ids = []
         for u in nodes:
-            cid = f"fwd:{tag}:{u}"
+            cid = f"fwd{tag}:{stag}:{u}"
             tasks.append(Task(cid, EventKind.COMPUTE, (topo.accel(u),),
                               compute_s, deps=dep, node=u))
             last = cid
             for k, (tier, nbytes) in enumerate(coll):
-                gid = f"sync:{tag}:{u}:{k}"
+                gid = f"sync{tag}:{stag}:{u}:{k}"
                 res = ((topo.ici(u),) if tier == "ici"
-                       else (topo.tx(u), topo.rx(u)))
+                       else (topo.tx(u), topo.rx(u))
+                       + topo.dcn_path(u, nodes))
                 tasks.append(Task(gid, EventKind.COLLECTIVE_PHASE, res,
                                   nbytes, deps=(last,), node=u))
                 last = gid
             phase_ids.append(last)
-        bid = f"step:{tag}"
+        bid = f"step{tag}:{stag}"
         tasks.append(Task(bid, EventKind.COMPUTE, (), 0.0,
                           deps=tuple(phase_ids)))
         return bid
 
-    barrier = None
-    for s in range(steps):
+    barrier = after
+    for s in range(first_step, first_step + steps):
         barrier = emit_step(str(s), barrier)
         if s in fail_at:
-            node = fail_at[s]
-            rid = f"recover:{node}:{s}"
-            # resource-less => pure wall-clock delay
-            tasks.append(Task(rid, EventKind.COMPUTE, (),
-                              failure_model.recovery_delay(),
-                              deps=(barrier,), node=node))
-            barrier = rid
+            for node in fail_at[s]:
+                rid = f"recover{tag}:{node}:{s}"
+                # resource-less => pure wall-clock delay
+                tasks.append(Task(rid, EventKind.COMPUTE, (),
+                                  failure_model.recovery_delay(),
+                                  deps=(barrier,), node=node))
+                barrier = rid
             for r in range(failure_model.lost_steps(s)):
                 barrier = emit_step(f"{s}r{r}", barrier)
     return tasks
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection -> eviction closed loop
+# ---------------------------------------------------------------------------
+
+
+def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
+                             policy=None, failure_model=None,
+                             accel_flops: float = DEFAULT_ACCEL_FLOPS,
+                             hbm_bw: float = DEFAULT_HBM_BW,
+                             tag: str = "") -> dict:
+    """Close the detection->eviction loop the ROADMAP asks for.
+
+    Simulate the training DAG, feed each step's per-node durations
+    (finish of the node's last phase minus the previous barrier) to
+    `core.elastic.StragglerDetector.observe`, and when it fires: inject
+    the eviction back as an `Engine.inject_failure` event just after the
+    offending step's barrier, charge `FailureComponent.replan_s` for the
+    mesh re-plan, and continue the remaining steps on the survivors with
+    per-node compute scaled by ``n_original / n_survivors`` (the evicted
+    node's data shard is redistributed; gradient-sync bytes are
+    model-sized and stay put).  Repeats until no further eviction fires.
+
+    Returns ``{"result": SimResult, "evictions": [(node, step, time)],
+    "baseline_makespan": float, "active_nodes": [...],
+    "step_times": [[...], ...]}`` — ``baseline_makespan`` is the
+    detector-disabled counterfactual from the first probe run.
+    """
+    from repro.core.elastic import FailureComponent, StragglerDetector
+
+    failure_model = failure_model or FailureComponent()
+    all_nodes = topo.accelerator_node_names
+    det = StragglerDetector(len(all_nodes), policy)
+    idx = {u: i for i, u in enumerate(all_nodes)}
+    _, coll = _trace_costs(trace, accel_flops, hbm_bw)
+    n_coll = len(coll)
+
+    def last_phase(u: str, stag: str) -> str:
+        return (f"sync{tag}:{stag}:{u}:{n_coll - 1}" if n_coll
+                else f"fwd{tag}:{stag}:{u}")
+
+    def segment(n_steps, active, first, dep):
+        return training_from_trace(
+            topo, trace, steps=n_steps, accel_flops=accel_flops,
+            hbm_bw=hbm_bw, tag=tag, nodes=active,
+            compute_scale=len(all_nodes) / len(active), first_step=first,
+            after=dep)
+
+    prefix: list = []             # frozen segments (steps already scored)
+    prefix_barrier: Optional[str] = None
+    evictions: list = []          # (node, step, time)
+    step_times: list = []
+    active = list(all_nodes)
+    start = 0
+    baseline = None
+    while True:
+        tasks = prefix + segment(steps - start, active, start,
+                                 prefix_barrier)
+        eng = topo.engine()
+        for node, _s, t_ev in evictions:
+            eng.inject_failure(node, at=t_ev)
+        result = eng.run(tasks)
+        if baseline is None:
+            baseline = result.makespan
+        ft = result.finish_times
+        prev = ft[prefix_barrier] if prefix_barrier else 0.0
+        evicted, estep = [], None
+        for s in range(start, steps):
+            stag = str(s)
+            times = [ft[last_phase(u, stag)] - prev if u in active
+                     else float("nan") for u in all_nodes]
+            step_times.append(times)
+            prev = ft[f"step{tag}:{stag}"]
+            hits = det.observe(times)
+            if hits:
+                evicted = [all_nodes[i] for i in hits]
+                estep = s
+                break
+        if (not evicted or estep >= steps - 1
+                or len(active) <= len(evicted)):
+            return {"result": result, "evictions": evictions,
+                    "baseline_makespan": baseline,
+                    "active_nodes": active, "step_times": step_times}
+        # freeze steps start..estep, splice in the eviction + re-plan
+        prefix += segment(estep - start + 1, active, start, prefix_barrier)
+        bar = f"step{tag}:{estep}"
+        # nudge past the barrier so the engine's fail event can never
+        # clobber the step's own (already finished) tasks
+        t_evict = ft[bar] + 1e-9
+        rid = f"evict{tag}:{estep}"
+        prefix.append(Task(rid, EventKind.COMPUTE, (),
+                           failure_model.replan_s, deps=(bar,)))
+        prefix_barrier = rid
+        for u in evicted:
+            evictions.append((u, estep, t_evict))
+            det.deactivate(idx[u])
+            active.remove(u)
+        start = estep + 1

@@ -62,6 +62,21 @@ def test_planner_scales_phi_for_network_bound():
     assert p.mu <= 1.0
 
 
+@given(st.integers(1, 32), st.integers(1, 8), st.sampled_from(
+    [1, 2, 3, 4, 6, 8]))
+@settings(max_examples=40, deadline=None)
+def test_plan_conserves_accelerators(n_servers, acc_per_server, phi):
+    """phi re-fronts the same chips across more NICs: the planned layout
+    must carry exactly n_servers * accelerators_per_server chips (the old
+    per-node floor leaked 3n of 4n chips at phi=3, acc/server=4)."""
+    prof = WorkloadProfile(cpu_fraction=0.4, network_fraction=0.6)
+    p = plan(prof, n_servers=n_servers,
+             accelerators_per_server=acc_per_server, mu_max=100.0,
+             phi_candidates=(phi,))
+    assert p.total_accelerators == n_servers * acc_per_server
+    assert p.n_accelerator_nodes == n_servers * phi
+
+
 def test_predict_mu_matches_paper():
     prof = WorkloadProfile(cpu_fraction=cm.BIGQUERY_CPU_FRACTION,
                            network_fraction=cm.BIGQUERY_NETWORK_FRACTION)

@@ -1,20 +1,32 @@
-"""repro.sim: engine semantics, workload generators, and the acceptance
-cross-validation of simulated mu against the closed-form §5.2 projection."""
+"""repro.sim: engine semantics, workload generators, the acceptance
+cross-validation of simulated mu against the closed-form §5.2 projection,
+and the multi-tenant / finite-fabric / storage / straggler extensions."""
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import costmodel as cm
-from repro.core.cluster import WorkloadProfile, plan
+from repro.core.cluster import NodeRole, WorkloadProfile, plan
 from repro.core.collectives import (CollectiveTrafficComponent,
                                     allreduce_traffic_model)
 from repro.core.contention import ContentionComponent
 from repro.core.costmodel import E2000, CostComponent
-from repro.core.elastic import FailureComponent
-from repro.sim import (Engine, EventKind, Resource, Task,
-                       cross_validate_bigquery, lovelock_cluster,
-                       scatter_gather, shuffle, simulate_mu, simulate_plan,
+from repro.core.elastic import FailureComponent, StragglerPolicy
+from repro.sim import (Engine, EventKind, Fabric, NodeModel, Resource,
+                       Task, Topology, cross_validate_bigquery,
+                       lovelock_cluster, measure_interference,
+                       multi_tenant, per_tenant, scatter_gather, shuffle,
+                       simulate_mu, simulate_plan, storage_replay,
                        summarize, render, synthetic_trace,
-                       trace_from_record, traditional_cluster,
-                       training_from_trace)
+                       topology_from_plan, trace_from_record,
+                       traditional_cluster, training_from_trace,
+                       training_with_stragglers)
+
+# relative-unit trace (accel_flops=1, hbm_bw=1): 0.5 s compute + 3 bytes
+# of gradient sync per step — network-heavy, like the paper's targets
+REL_TRACE = {"n_devices": 8, "phases": [
+    {"kind": "compute", "flops": 0.5},
+    {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+REL = dict(accel_flops=1.0, hbm_bw=1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +123,34 @@ def test_engine_deterministic():
     assert t1.engine().run(w1).makespan == t2.engine().run(w2).makespan
 
 
+def test_engine_busy_time_skips_down_node_resources():
+    """A down node's resources deliver zero rate, so they must not accrue
+    busy_time while other nodes' tasks stall on them."""
+    eng = Engine([Resource("a:tx", 1.0, node="a"),
+                  Resource("b:rx", 1.0, node="b")])
+    eng.inject_failure("b", at=0.5, recover_at=1.5)
+    res = eng.run([Task("d", EventKind.DMA, ("a:tx", "b:rx"), 1.0,
+                        node="a")])
+    assert res.complete
+    assert res.makespan == pytest.approx(2.0)
+    # rx transferred for 1.0s total; the 1.0s outage is idle, not busy
+    assert res.busy_time["b:rx"] == pytest.approx(1.0)
+
+
+def test_engine_rerun_replays_failure_schedule():
+    """run() must not consume injected failures: a second run on the same
+    engine sees the identical schedule (it used to silently reuse the
+    half-drained heap and simulate a failure-free timeline)."""
+    eng = Engine([Resource("n0:r", 1.0, node="n0")])
+    eng.inject_failure("n0", at=0.5, recover_at=2.0)
+    tasks = [Task("a", EventKind.COMPUTE, ("n0:r",), 1.0, node="n0")]
+    first = eng.run(tasks)
+    second = eng.run(tasks)
+    assert first.makespan == pytest.approx(3.0)
+    assert second.makespan == pytest.approx(first.makespan)
+    assert len(second.events_of(EventKind.NODE_FAIL)) == 1
+
+
 # ---------------------------------------------------------------------------
 # workloads
 # ---------------------------------------------------------------------------
@@ -152,6 +192,351 @@ def test_training_trace_replay_and_failure_expansion():
     assert failed.makespan == pytest.approx(expected, rel=1e-6)
     kinds = {e.kind for e in failed.events}
     assert EventKind.COLLECTIVE_PHASE in kinds
+
+
+def test_training_concurrent_failures_each_expand():
+    """Two nodes failing at the same step used to collapse into one
+    recovery; each must contribute its own recovery delay (restores are
+    serialized) ahead of the shared replay."""
+    topo = lovelock_cluster(4, 1, nic_bw=25e9, ici_bw=45e9,
+                            accel_rate=1.0)
+    trace = synthetic_trace()
+    fm = FailureComponent(ckpt_every=4, restore_s=10.0, replan_s=2.0)
+    base = topo.engine().run(
+        training_from_trace(topo, trace, steps=10)).makespan
+    step_time = base / 10
+    two = topo.engine().run(training_from_trace(
+        topo, trace, steps=10, failures=[("nic0", 6), ("nic1", 6)],
+        failure_model=fm)).makespan
+    expected = base + 2 * fm.recovery_delay() + 2 * step_time
+    assert two == pytest.approx(expected, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# finite fabric
+# ---------------------------------------------------------------------------
+
+
+def _rel_training(topo, tag=""):
+    return training_from_trace(topo, REL_TRACE, steps=3, tag=tag, **REL)
+
+
+FABRIC_WORKLOADS = (
+    ("shuffle", lambda t, tag="": shuffle(t, cpu_work_per_node=0.5,
+                                          bytes_per_node=7.0, tag=tag)),
+    ("scatter_gather",
+     lambda t, tag="": scatter_gather(t, request_bytes_total=0.8,
+                                      response_bytes_total=8.0,
+                                      cpu_work_per_worker=0.5, tag=tag)),
+    ("training", _rel_training),
+)
+
+
+def test_fabric_one_to_one_reproduces_nonblocking_exactly():
+    """Acceptance: a 1:1 fabric must reproduce existing single-tenant
+    makespans to <1e-6 relative error on every generator."""
+    for name, build in FABRIC_WORKLOADS:
+        base = lovelock_cluster(8, 1, accel_rate=1.0)
+        fab = lovelock_cluster(8, 1, accel_rate=1.0,
+                               fabric=Fabric(rack_size=4,
+                                             oversubscription=1.0))
+        m0 = base.engine().run(build(base)).makespan
+        m1 = fab.engine().run(build(fab)).makespan
+        assert abs(m1 - m0) <= 1e-6 * m0, (name, m0, m1)
+
+
+def test_fabric_oversubscription_slows_cross_rack_traffic():
+    for name, build in FABRIC_WORKLOADS:
+        base = lovelock_cluster(8, 1, accel_rate=1.0)
+        fab = lovelock_cluster(8, 1, accel_rate=1.0,
+                               fabric=Fabric(rack_size=4,
+                                             oversubscription=4.0))
+        m0 = base.engine().run(build(base)).makespan
+        m1 = fab.engine().run(build(fab)).makespan
+        if name == "scatter_gather":
+            # incast is root-NIC-bound: a 4:1 fabric adds nothing on top
+            # of the node bottleneck — it must never *help*, though
+            assert m1 >= m0 - 1e-9, (name, m0, m1)
+        else:
+            assert m1 > m0 * 1.05, (name, m0, m1)
+
+
+def test_fabric_intra_rack_traffic_stays_nonblocking():
+    """All nodes in one rack => no flow holds a fabric hop — for
+    point-to-point DMAs and for collective phases alike."""
+    topo = lovelock_cluster(4, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=8,
+                                          oversubscription=8.0))
+    tasks = (shuffle(topo, cpu_work_per_node=0.5, bytes_per_node=3.0)
+             + _rel_training(topo, tag=":t"))
+    assert not any(r.startswith("fabric:")
+                   for t in tasks for r in t.resources)
+    base = lovelock_cluster(4, 1, accel_rate=1.0)
+    m0 = base.engine().run(_rel_training(base)).makespan
+    m1 = topo.engine().run(_rel_training(topo)).makespan
+    assert m1 == pytest.approx(m0)
+
+
+def test_fabric_validates_parameters():
+    with pytest.raises(ValueError):
+        Fabric(rack_size=0)
+    with pytest.raises(ValueError):
+        Fabric(oversubscription=0.5)
+
+
+@given(st.integers(2, 10), st.integers(1, 4), st.floats(1.0, 8.0),
+       st.floats(0.5, 8.0))
+@settings(max_examples=15, deadline=None)
+def test_fabric_core_capacity_lower_bounds_makespan(n_nodes, rack_size,
+                                                    oversub, bytes_per):
+    """Property: every cross-fabric byte passes the core, so makespan >=
+    cross-fabric bytes / core capacity."""
+    topo = lovelock_cluster(n_nodes, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=rack_size,
+                                          oversubscription=oversub))
+    tasks = shuffle(topo, cpu_work_per_node=0.1, bytes_per_node=bytes_per)
+    res = topo.engine().run(tasks)
+    assert res.complete
+    cross = sum(t.work for t in tasks if "fabric:core" in t.resources)
+    core_cap = n_nodes * 1.0 / oversub
+    assert res.makespan >= cross / core_cap - 1e-9
+
+
+@given(st.integers(2, 8), st.integers(1, 5), st.floats(0.5, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_fabric_one_to_one_property(n_nodes, rack_size, bytes_per):
+    """Property: 1:1 oversubscription is indistinguishable from the
+    non-blocking fabric for balanced traffic, at any rack size."""
+    base = lovelock_cluster(n_nodes, 1, accel_rate=1.0)
+    fab = lovelock_cluster(n_nodes, 1, accel_rate=1.0,
+                           fabric=Fabric(rack_size=rack_size))
+    kw = dict(cpu_work_per_node=0.3, bytes_per_node=bytes_per)
+    m0 = base.engine().run(shuffle(base, **kw)).makespan
+    m1 = fab.engine().run(shuffle(fab, **kw)).makespan
+    assert abs(m1 - m0) <= 1e-6 * m0
+
+
+# ---------------------------------------------------------------------------
+# storage replay
+# ---------------------------------------------------------------------------
+
+
+def test_storage_replay_checkpoints_land_on_storage_rx():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0, storage_nodes=2)
+    tasks = storage_replay(topo, shard_bytes=1.0, ckpt_bytes=2.0,
+                           steps=4, compute_s=0.5, ckpt_every=2)
+    res = topo.engine().run(tasks)
+    assert res.complete
+    # 4 compute nodes x 2 checkpoints x 2.0 bytes, split across st0/st1
+    ckpt_rx = {}
+    for t in tasks:
+        if t.tid.startswith("ckpt"):
+            (rx,) = [r for r in t.resources if r.endswith(":rx")]
+            ckpt_rx[rx] = ckpt_rx.get(rx, 0.0) + t.work
+    assert set(ckpt_rx) == {"st0:rx", "st1:rx"}
+    assert sum(ckpt_rx.values()) == pytest.approx(4 * 2 * 2.0)
+    assert res.busy_time["st0:rx"] > 0 and res.busy_time["st1:rx"] > 0
+
+
+def test_storage_replay_uses_failure_component_cadence():
+    topo = lovelock_cluster(2, 1, accel_rate=1.0, storage_nodes=1)
+    fm = FailureComponent(ckpt_every=3)
+    tasks = storage_replay(topo, shard_bytes=1.0, ckpt_bytes=1.0,
+                           steps=9, failure_model=fm)
+    n_ckpt = sum(1 for t in tasks if t.tid.startswith("ckpt"))
+    assert n_ckpt == 2 * (9 // 3)
+
+
+def test_storage_replay_prefetch_is_bounded_to_one_shard():
+    """Reads stream one step ahead of compute — they must not all
+    front-load at t=0 when compute is the bottleneck."""
+    topo = lovelock_cluster(1, 1, accel_rate=1.0, storage_nodes=1)
+    tasks = storage_replay(topo, shard_bytes=1.0, ckpt_bytes=0.0,
+                           steps=4, compute_s=10.0, ckpt_every=100)
+    res = topo.engine().run(tasks)
+    assert res.complete
+    # read s (s>=2) is gated on compute s-2, so it lands after it
+    assert res.finish_times["read:nic0:2"] > \
+        res.finish_times["proc:nic0:0"]
+    assert res.finish_times["read:nic0:3"] > \
+        res.finish_times["proc:nic0:1"]
+
+
+def test_storage_replay_requires_storage_nodes():
+    topo = lovelock_cluster(4, 1)
+    with pytest.raises(ValueError):
+        storage_replay(topo, shard_bytes=1.0, ckpt_bytes=1.0)
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.floats(1.0, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_storage_replay_reads_bound_by_storage_tx(n_compute, n_storage,
+                                                  shard):
+    """Property: shard reads all leave storage-node NICs, so makespan >=
+    total shard bytes / aggregate storage tx bandwidth."""
+    topo = lovelock_cluster(n_compute, 1, accel_rate=1.0,
+                            storage_nodes=n_storage)
+    steps = 3
+    tasks = storage_replay(topo, shard_bytes=shard, ckpt_bytes=0.0,
+                           steps=steps, ckpt_every=10)
+    res = topo.engine().run(tasks)
+    assert res.complete
+    total_read = n_compute * steps * shard
+    assert res.makespan >= total_read / n_storage - 1e-9
+
+
+def test_topology_from_plan_maps_roles():
+    p = plan(WorkloadProfile(cpu_fraction=0.4, network_fraction=0.6),
+             n_servers=4, accelerators_per_server=4, storage_nodes=2,
+             mu_max=100.0, phi_candidates=(2,))
+    topo = topology_from_plan(p)
+    assert len(topo.storage_node_names) == 2
+    assert len(topo.compute_node_names) == len(p.nodes) - 2
+    # accelerator throughput is conserved: chips x rate-per-chip
+    acc = sum(topo.nodes[u].accel_rate for u in topo.compute_node_names)
+    assert acc == pytest.approx(p.total_accelerators * 0.25)
+    # storage nodes exist in the plan too
+    assert sum(1 for n in p.nodes if n.role == NodeRole.STORAGE) == 2
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant interference
+# ---------------------------------------------------------------------------
+
+
+TENANTS = (
+    ("analytics", lambda topo, tag="": shuffle(
+        topo, cpu_work_per_node=0.5, bytes_per_node=7.0, tag=tag)),
+    ("training", _rel_training),
+)
+
+
+def test_multi_tenant_tags_isolate_task_ids():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    wl = multi_tenant(topo, TENANTS)
+    assert set(wl.tenants) == {"analytics", "training"}
+    ids = [t.tid for t in wl.tasks]
+    assert len(ids) == len(set(ids))
+    assert wl.tenant_of(wl.tenants["training"][0]) == "training"
+    with pytest.raises(ValueError):
+        multi_tenant(topo, [("a", TENANTS[0][1]), ("a", TENANTS[0][1])])
+
+
+def test_multi_tenant_interference_acceptance():
+    """Acceptance: co-locating shuffle + training on a >=2:1 fabric slows
+    every tenant by >1.05x vs isolated runs on the same topology."""
+    rep = measure_interference(
+        lambda: lovelock_cluster(8, 1, accel_rate=1.0,
+                                 fabric=Fabric(rack_size=4,
+                                               oversubscription=2.0)),
+        TENANTS)
+    assert rep["complete"]
+    for name, slow in rep["slowdown"].items():
+        assert slow > 1.05, (name, slow)
+    # co-located tenants can never beat their isolated runs
+    for name in rep["isolated"]:
+        assert rep["colocated"][name] >= rep["isolated"][name] - 1e-9
+
+
+def test_per_tenant_attribution_matches_isolated_union():
+    """With no shared bottleneck (disjoint halves), co-location is free
+    and per-tenant makespans equal the isolated ones."""
+    def half(topo, lo, hi, tag):
+        sub = [u for u in topo.node_names[lo:hi]]
+        return [Task(f"c{tag}:{u}", EventKind.COMPUTE, (topo.cpu(u),),
+                     1.0, node=u) for u in sub]
+    topo = lovelock_cluster(4, 1)
+    wl = multi_tenant(topo, [
+        ("left", lambda t, tag="": half(t, 0, 2, tag)),
+        ("right", lambda t, tag="": half(t, 2, 4, tag))])
+    res = topo.engine().run(list(wl.tasks))
+    tenant = per_tenant(res, wl)
+    assert tenant["left"] == pytest.approx(1.0)
+    assert tenant["right"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# straggler detection -> eviction loop
+# ---------------------------------------------------------------------------
+
+
+def _straggler_topo(n=4, slow=0.3):
+    return Topology([NodeModel(f"n{i}", "smartnic", 1.0,
+                               accel_rate=(slow if i == 0 else 1.0))
+                     for i in range(n)])
+
+
+def test_straggler_eviction_changes_timeline():
+    """Acceptance: simulated step times drive a StragglerDetector
+    eviction that is injected back into the engine and changes the
+    simulated timeline (survivors finish faster without the straggler).
+    """
+    fm = FailureComponent(replan_s=2.0)
+    out = training_with_stragglers(
+        _straggler_topo(), {"n_devices": 4, "phases": [
+            {"kind": "compute", "flops": 1.0}]},
+        steps=8, failure_model=fm, **REL)
+    assert out["evictions"], "expected at least one eviction"
+    (node, step, t_evict) = out["evictions"][0]
+    assert node == "n0"
+    # default policy: patience=3 consecutive strikes -> evicted at step 2
+    assert step == 2
+    res = out["result"]
+    assert res.complete
+    fails = res.events_of(EventKind.NODE_FAIL)
+    assert [e.subject for e in fails] == ["n0"]
+    assert fails[0].time == pytest.approx(t_evict)
+    # timeline changed: before eviction every step waits ~1/0.3 s on the
+    # straggler; afterwards survivors run scaled-up shards at full rate
+    assert res.makespan < out["baseline_makespan"]
+    expected = (3 * (1.0 / 0.3) + fm.replan_s + 5 * (4.0 / 3.0))
+    assert res.makespan == pytest.approx(expected, rel=1e-6)
+    assert out["active_nodes"] == ["n1", "n2", "n3"]
+
+
+def test_straggler_no_eviction_on_homogeneous_cluster():
+    out = training_with_stragglers(
+        _straggler_topo(slow=1.0), {"n_devices": 4, "phases": [
+            {"kind": "compute", "flops": 1.0}]},
+        steps=6, **REL)
+    assert out["evictions"] == []
+    assert out["result"].makespan == pytest.approx(
+        out["baseline_makespan"])
+
+
+def test_straggler_detector_ignores_deactivated_hosts():
+    from repro.core.elastic import StragglerDetector
+    det = StragglerDetector(4, StragglerPolicy(patience=2))
+    det.deactivate(0)
+    hits = []
+    for _ in range(4):
+        hits = det.observe([float("nan"), 9.0, 1.0, 1.0])
+        if hits:
+            break
+    assert hits == [1]                  # host 0 never evicted twice
+    assert det.strikes[0] == 0
+
+
+def test_straggler_detector_unreported_hosts_do_not_skew_median():
+    """Hosts that have never produced a measurement must not drag the
+    median to 0 and get the only reporting host evicted."""
+    from repro.core.elastic import StragglerDetector
+    det = StragglerDetector(3)
+    for _ in range(5):
+        assert det.observe([5.0, float("nan"), float("nan")]) == []
+
+
+def test_straggler_detector_nan_gap_keeps_strikes():
+    """A missing measurement is ignored, not treated as 'fast': strikes
+    survive the gap so a persistently slow host still gets evicted."""
+    from repro.core.elastic import StragglerDetector
+    det = StragglerDetector(3, StragglerPolicy(patience=3))
+    det.observe([9.0, 1.0, 1.0])
+    det.observe([9.0, 1.0, 1.0])
+    assert det.strikes[0] == 2
+    det.observe([float("nan"), 1.0, 1.0])   # gap: no reading for host 0
+    assert det.strikes[0] == 2
+    assert det.observe([9.0, 1.0, 1.0]) == [0]
 
 
 def test_trace_from_record_reconstructs_old_artifacts():
