@@ -9,9 +9,12 @@ closed-form §5.2 projection (which it is cross-validated against in
 
 Beyond single-tenant replay the stack models the effects that stress the
 paper's §1 disaggregation claim: a finite-capacity fabric (`Fabric`:
-per-rack uplinks + core at a configurable oversubscription ratio),
-storage-node traffic (`storage_replay` against `NodeRole.STORAGE`
-nodes), multi-tenant co-location (`multi_tenant` +
+per-rack uplinks + core at a configurable oversubscription ratio)
+shared by true per-flow max-min water-filling (`Engine`'s allocator;
+`compare_allocators` scores it against the old progressive filling),
+multi-stage analytics DAGs with a configurable hot joiner
+(`analytics_dag`), storage-node traffic (`storage_replay` against
+`NodeRole.STORAGE` nodes), multi-tenant co-location (`multi_tenant` +
 `measure_interference`), and straggler-driven eviction
 (`training_with_stragglers` feeds simulated step times to
 `core.elastic.StragglerDetector` and injects its evictions back into
@@ -26,31 +29,38 @@ Quickstart::
                       n_servers=64, mu_max=1.0)
     print(p.phi, p.mu, p.cost_ratio)
 """
-from repro.sim.engine import (Engine, EventKind, Resource, SimEvent,
-                              SimResult, Task)
+from repro.sim.engine import (ALLOCATORS, Engine, EventKind, Resource,
+                              SimEvent, SimResult, Task,
+                              progressive_fill_rates, water_filling_rates)
 from repro.sim.topology import (Fabric, NodeModel, Topology,
                                 lovelock_cluster, topology_from_plan,
                                 traditional_cluster)
-from repro.sim.workloads import (MultiTenantWorkload, multi_tenant,
-                                 reference_tenants, scatter_gather,
-                                 shuffle, storage_replay, synthetic_trace,
-                                 trace_from_record, training_from_trace,
+from repro.sim.workloads import (MultiTenantWorkload, analytics_dag,
+                                 multi_tenant, reference_tenants,
+                                 scatter_gather, shuffle,
+                                 skewed_analytics_mix, storage_replay,
+                                 synthetic_trace, trace_from_record,
+                                 training_from_trace,
                                  training_with_stragglers)
-from repro.sim.validate import (cross_validate_bigquery,
+from repro.sim.validate import (compare_allocators,
+                                cross_validate_bigquery,
                                 measure_interference, simulate_mu,
                                 simulate_plan)
 from repro.sim.report import (attach_scores, attach_tenants, per_tenant,
                               render, summarize)
 
 __all__ = [
-    "Engine", "EventKind", "Resource", "SimEvent", "SimResult", "Task",
+    "ALLOCATORS", "Engine", "EventKind", "Resource", "SimEvent",
+    "SimResult", "Task", "progressive_fill_rates", "water_filling_rates",
     "Fabric", "NodeModel", "Topology", "lovelock_cluster",
     "topology_from_plan", "traditional_cluster",
-    "MultiTenantWorkload", "multi_tenant", "reference_tenants",
-    "scatter_gather", "shuffle",
+    "MultiTenantWorkload", "analytics_dag", "multi_tenant",
+    "reference_tenants", "scatter_gather", "shuffle",
+    "skewed_analytics_mix",
     "storage_replay", "synthetic_trace", "trace_from_record",
     "training_from_trace", "training_with_stragglers",
-    "cross_validate_bigquery", "measure_interference", "simulate_mu",
+    "compare_allocators", "cross_validate_bigquery",
+    "measure_interference", "simulate_mu",
     "simulate_plan", "attach_scores", "attach_tenants", "per_tenant",
     "render", "summarize",
 ]

@@ -3,15 +3,23 @@
 The unit of work is a `Task` — compute (ops on a node's CPU or
 accelerator), DMA (bytes through NIC/fabric resources), or a collective
 phase (per-node bytes on an interconnect tier).  Tasks form a DAG via
-``deps``; a task holding several resources progresses at the minimum of
-its fair shares (progressive-filling approximation of max-min fairness,
-exact for the balanced traffic patterns the workload generators emit).
+``deps``; a task holding several resources progresses at its **max-min
+water-filling** rate: the allocator iteratively finds the bottleneck
+resource, pins that resource's flows at their fair share, releases the
+pinned flows' unused capacity on their other resources, and repeats
+until every flow is pinned.  On balanced traffic this equals the older
+progressive-filling approximation (each flow at the min of its equal
+shares) exactly; on skewed traffic — incast + shuffle on a shared
+fabric — a limited flow's slack is reclaimed by its contenders instead
+of being wasted.  ``Engine(..., allocator="progressive")`` keeps the
+old allocator selectable for regression benchmarks.
 
 Failures are first-class events: `inject_failure(node, at, recover_at)`
-takes every resource on the node offline, resets that node's in-flight
-tasks to full remaining work (lost progress), and re-admits them at
-recovery — the dynamic counterpart to the checkpoint/replay expansion in
-`core/elastic.FailureComponent`.
+takes every resource on the node offline.  Any task *touching* the down
+node — running on it, or holding one of its resources remotely (a DMA's
+receiver, a storage node mid-read) — loses its progress: remaining work
+resets to full, the task is held, and it is re-admitted once every node
+it touches is back up.
 
 No jax dependency: the engine is pure Python so planning/simulation runs
 on machines with no accelerator stack.
@@ -22,9 +30,11 @@ import dataclasses
 import enum
 import heapq
 import math
-from typing import Callable, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 _EPS = 1e-12
+
+ALLOCATORS = ("waterfill", "progressive")
 
 
 class EventKind(enum.Enum):
@@ -85,14 +95,76 @@ class SimResult:
     events: list
     busy_time: dict       # resource -> seconds with >=1 active task
     complete: bool
+    # resource -> delivered work / nominal capacity: seconds-at-full-rate
+    # actually used, which (unlike busy_time) exposes capacity an
+    # allocator reclaims or wastes while flows are pinned elsewhere
+    utilized_time: dict = dataclasses.field(default_factory=dict)
 
     def events_of(self, kind: EventKind) -> list:
         return [e for e in self.events if e.kind == kind]
 
 
+def progressive_fill_rates(flows: Dict[str, tuple],
+                           cap: Dict[str, float],
+                           holds: Dict[str, int]) -> Dict[str, float]:
+    """Legacy allocator: every flow gets the min of its equal shares.
+
+    ``flows`` maps task id -> held resource names, ``cap`` the aggregate
+    rate each resource delivers at its current load, ``holds`` how many
+    flow-holds each resource carries.  A flow pinned below its share on
+    one resource never returns the slack on its other resources — exact
+    only for balanced traffic.
+    """
+    share = {name: cap[name] / n for name, n in holds.items() if n}
+    return {tid: min(share[r] for r in res) for tid, res in flows.items()}
+
+
+def water_filling_rates(flows: Dict[str, tuple],
+                        cap: Dict[str, float],
+                        holds: Dict[str, int]) -> Dict[str, float]:
+    """True per-flow max-min fairness by iterative water-filling.
+
+    Each round: compute every resource's fair share (remaining capacity
+    over unpinned holds), find the global minimum, pin every flow that
+    holds a min-share bottleneck at that share, and subtract the pinned
+    flows' consumption from all their resources.  Repeats until every
+    flow is pinned.  Ties are grouped exactly, so on balanced traffic
+    the first round pins everything at ``cap/n`` — bit-identical to
+    `progressive_fill_rates`.
+    """
+    rate: Dict[str, float] = {}
+    remaining = dict(cap)
+    live = dict(holds)            # unpinned holds per resource
+    pending = dict(flows)
+    while pending:
+        fair = {name: remaining[name] / n for name, n in live.items()
+                if n > 0}
+        m = min(fair.values())
+        bottleneck = {name for name, s in fair.items() if s == m}
+        pinned = [tid for tid, res in pending.items()
+                  if any(r in bottleneck for r in res)]
+        for tid in pinned:
+            rate[tid] = m
+            for r in pending[tid]:
+                remaining[r] = max(remaining[r] - m, 0.0)
+                live[r] -= 1
+            del pending[tid]
+    return rate
+
+
+_ALLOC_FNS = {"waterfill": water_filling_rates,
+              "progressive": progressive_fill_rates}
+
+
 class Engine:
-    def __init__(self, resources: Iterable[Resource]):
+    def __init__(self, resources: Iterable[Resource],
+                 allocator: str = "waterfill"):
         self.resources = {r.name: r for r in resources}
+        if allocator not in _ALLOC_FNS:
+            raise ValueError(f"unknown allocator {allocator!r}; "
+                             f"expected one of {ALLOCATORS}")
+        self.allocator = allocator
+        self._alloc = _ALLOC_FNS[allocator]
         self._injected: list = []   # (time, EventKind, node), insert order
 
     def inject_failure(self, node: str, at: float,
@@ -134,45 +206,57 @@ class Engine:
         scale = {t.tid: max(float(t.work), 1.0) for t in tasks}
         ready = [t.tid for t in tasks if n_deps[t.tid] == 0]
         running: dict = {}            # tid -> Task (insertion ordered)
-        held: list = []               # tasks whose node is down
+        held: list = []               # tasks touching a down node
         down: set = set()
         done: dict = {}
         events: list = []
         busy = {name: 0.0 for name in self.resources}
+        delivered = {name: 0.0 for name in self.resources}
         now = 0.0
+
+        def blocked(t: Task) -> bool:
+            """A task is blocked when any node it touches is down: its
+            own, or the node of any resource it holds (a DMA's remote
+            endpoint, a storage node mid-transfer)."""
+            if t.node and t.node in down:
+                return True
+            for r in t.resources:
+                rn = self.resources[r].node
+                if rn and rn in down:
+                    return True
+            return False
 
         def admit():
             nonlocal ready
             for tid in ready:
                 t = by_id[tid]
-                if t.node in down:
+                if blocked(t):
                     held.append(tid)
                 else:
                     running[tid] = t
             ready = []
 
-        def rates() -> dict:
-            n_active = {name: 0 for name in self.resources}
-            for t in running.values():
-                for r in t.resources:
-                    n_active[r] += 1
-            share = {}
-            for name, n in n_active.items():
-                res = self.resources[name]
-                agg = 0.0 if res.node in down and res.node \
-                    else res.aggregate_rate(n)
-                share[name] = agg / n if n else 0.0
-            out = {}
+        def rates() -> Tuple[Dict[str, float], Dict[str, int]]:
+            holds: Dict[str, int] = {}
+            flows: Dict[str, tuple] = {}
+            out: Dict[str, float] = {}
             for tid, t in running.items():
                 if not t.resources:       # pure delay task
                     out[tid] = 1.0
                 else:
-                    out[tid] = min(share[r] for r in t.resources)
-            return out, n_active
+                    flows[tid] = t.resources
+                    for r in t.resources:
+                        holds[r] = holds.get(r, 0) + 1
+            # blocked() keeps any task touching a down node out of
+            # `running`, so every held resource here is live
+            cap = {name: self.resources[name].aggregate_rate(n)
+                   for name, n in holds.items()}
+            out.update(self._alloc(flows, cap, holds))
+            return out, holds
 
         admit()
         while running or timed:
-            rate, n_active = rates() if running else ({}, {})
+            rate, holds = rates() if running else ({}, {})
             dt = math.inf
             for tid, r in rate.items():
                 if r > _EPS:
@@ -185,13 +269,10 @@ class Engine:
 
             for tid, r in rate.items():
                 remaining[tid] -= r * dt
-            if running:
-                for name, n in n_active.items():
-                    # a resource on a down node delivers zero rate, so it
-                    # is idle, not busy, even with tasks still holding it
-                    if n and not (self.resources[name].node in down
-                                  and self.resources[name].node):
-                        busy[name] += dt
+                for name in by_id[tid].resources:
+                    delivered[name] += r * dt
+            for name in holds:
+                busy[name] += dt
             now += dt
 
             # timed node events due now
@@ -201,7 +282,7 @@ class Engine:
                 if kind == EventKind.NODE_FAIL:
                     down.add(node)
                     lost = [tid for tid, t in running.items()
-                            if t.node == node]
+                            if blocked(t)]
                     for tid in lost:
                         del running[tid]
                         remaining[tid] = float(by_id[tid].work)
@@ -209,7 +290,7 @@ class Engine:
                 else:
                     down.discard(node)
                     back = [tid for tid in held
-                            if by_id[tid].node == node]
+                            if not blocked(by_id[tid])]
                     for tid in back:
                         held.remove(tid)
                         running[tid] = by_id[tid]
@@ -229,5 +310,9 @@ class Engine:
                 admit()
 
         complete = len(done) == len(tasks)
+        utilized = {name: (delivered[name] / res.capacity
+                           if res.capacity > 0 else 0.0)
+                    for name, res in self.resources.items()}
         return SimResult(makespan=now, finish_times=done, events=events,
-                         busy_time=busy, complete=complete)
+                         busy_time=busy, complete=complete,
+                         utilized_time=utilized)

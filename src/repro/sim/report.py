@@ -15,23 +15,33 @@ from repro.sim.engine import SimResult
 _CLASSES = ("cpu", "tx", "rx", "accel", "ici")
 
 
+def _per_class_fraction(seconds_by_resource: dict, makespan: float) -> dict:
+    per_class: dict = {}
+    for rname, secs in seconds_by_resource.items():
+        cls = ("fabric" if rname.startswith("fabric:")
+               else rname.rsplit(":", 1)[-1])
+        if cls in _CLASSES or cls == "fabric":
+            per_class.setdefault(cls, []).append(secs / makespan)
+    return {c: round(sum(v) / len(v), 4)
+            for c, v in per_class.items() if v}
+
+
 def summarize(result: SimResult, *, name: str = "") -> dict:
     kinds = Counter(e.kind.value for e in result.events)
     util: dict = {}
+    utilized: dict = {}
     if result.makespan > 0:
-        per_class: dict = {}
-        for rname, busy in result.busy_time.items():
-            cls = ("fabric" if rname.startswith("fabric:")
-                   else rname.rsplit(":", 1)[-1])
-            if cls in _CLASSES or cls == "fabric":
-                per_class.setdefault(cls, []).append(
-                    busy / result.makespan)
-        util = {c: round(sum(v) / len(v), 4)
-                for c, v in per_class.items() if v}
+        # busy = fraction of the run with >=1 active task; utilized =
+        # fraction of nominal capacity actually delivered — the gap is
+        # the stranded share max-min water-filling reclaims
+        util = _per_class_fraction(result.busy_time, result.makespan)
+        utilized = _per_class_fraction(result.utilized_time,
+                                       result.makespan)
     return {"name": name, "makespan_s": result.makespan,
             "complete": result.complete,
             "n_tasks": len(result.finish_times),
-            "events_by_kind": dict(kinds), "utilization": util}
+            "events_by_kind": dict(kinds), "utilization": util,
+            "utilized": utilized}
 
 
 def per_tenant(result: SimResult, workload) -> dict:
@@ -79,8 +89,12 @@ def render(summary: dict) -> str:
             f"{k}={v}" for k, v in sorted(ev.items())))
     ut = summary.get("utilization", {})
     if ut:
-        lines.append("  utilization   " + "  ".join(
+        lines.append("  busy          " + "  ".join(
             f"{k}={v:.0%}" for k, v in ut.items()))
+    uz = summary.get("utilized", {})
+    if uz:
+        lines.append("  utilized      " + "  ".join(
+            f"{k}={v:.0%}" for k, v in uz.items()))
     tn = summary.get("tenants")
     if tn:
         for name, row in sorted(tn.items()):

@@ -142,8 +142,8 @@ class Topology:
         out.extend(self.fabric_resources())
         return out
 
-    def engine(self) -> Engine:
-        return Engine(self.resources())
+    def engine(self, allocator: str = "waterfill") -> Engine:
+        return Engine(self.resources(), allocator=allocator)
 
     # resource-name helpers (keep workload generators typo-proof)
     def cpu(self, name):
@@ -216,7 +216,8 @@ def traditional_cluster(n_servers: int, *,
 
 
 def lovelock_cluster(n_servers: int, phi: int, *, cpu_rate: float = 1.0,
-                     nic_bw: float = 1.0, accel_rate: float = None,
+                     nic_bw: float = 1.0,
+                     accel_rate: Optional[float] = None,
                      ici_bw: float = 1.0, storage_nodes: int = 0,
                      cpu_rate_fn=None,
                      fabric: Optional[Fabric] = None) -> Topology:

@@ -116,6 +116,31 @@ def measure_interference(make_topo, tenants) -> dict:
     }
 
 
+def compare_allocators(make_topo, build) -> dict:
+    """Makespans of one workload under both rate allocators.
+
+    ``make_topo()`` builds a fresh topology per run; ``build(topo)``
+    returns the task list (any `workloads` generator, or a
+    `multi_tenant` composition via lambda).  Returns per-allocator
+    makespans plus ``speedup`` = progressive / waterfill — 1.0 on
+    balanced traffic (the allocators agree exactly there), > 1.0 when
+    water-filling reclaims capacity a pinned flow leaves stranded
+    (skewed incast + shuffle on a shared fabric).  ``results`` carries
+    the per-allocator `SimResult` so callers can summarize a run
+    without re-simulating it (pop it before JSON-serializing).
+    """
+    out: dict = {"results": {}}
+    for allocator in ("progressive", "waterfill"):
+        topo = make_topo()
+        res = topo.engine(allocator=allocator).run(build(topo))
+        if not res.complete:
+            raise RuntimeError(f"{allocator} run stalled")
+        out["results"][allocator] = res
+        out[allocator] = res.makespan
+    out["speedup"] = out["progressive"] / out["waterfill"]
+    return out
+
+
 def simulate_plan(profile: WorkloadProfile, *, n_servers: int = 8,
                   sim_servers: int = 8, **plan_kw):
     """`core.cluster.plan`, scoring phi candidates with the simulator.

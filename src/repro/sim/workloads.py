@@ -6,6 +6,13 @@ training"):
 
   * `shuffle`            — distributed shuffle: embarrassingly parallel
                            map, all-to-all exchange, reduce (analytics).
+  * `analytics_dag`      — multi-stage analytics: scan -> partitioned
+                           shuffle -> hash join -> output shuffle ->
+                           reduce, with configurable key skew that turns
+                           one joiner into the hot flow (incast on its
+                           ingress, a fat egress afterwards) — the mixed
+                           incast+shuffle pattern max-min water-filling
+                           sharpens.
   * `scatter_gather`     — query fan-out: root scatters sub-queries,
                            workers respond, root aggregates (incast at
                            the root's ingress — the pattern closed-form
@@ -80,6 +87,101 @@ def shuffle(topo: Topology, *, cpu_work_per_node: float,
         tasks.append(Task(f"reduce{tag}:{v}", EventKind.COMPUTE,
                           (topo.cpu(v),), reduce_work_per_node, deps=deps,
                           node=v))
+    return tasks
+
+
+def analytics_dag(topo: Topology, *, scan_work_per_node: float,
+                  shuffle_bytes_per_node: float, join_work_total: float,
+                  output_bytes_per_node: float = 0.0,
+                  reduce_work_per_node: float = 0.0, skew: float = 0.0,
+                  hot: Optional[str] = None, tasks_per_node: int = 2,
+                  tag: str = "") -> list:
+    """Multi-stage analytics DAG: scan -> partitioned shuffle -> hash
+    join -> output shuffle -> reduce.
+
+    Every node scans its local partition, then repartitions
+    ``shuffle_bytes_per_node`` of egress by join key.  ``skew`` in
+    [0, 1) is the fraction of every sender's bytes that hash to the
+    ``hot`` joiner's key range (default: the first compute node) *on
+    top of* the balanced spread — skew=0 is a balanced
+    all-to-all, skew→1 concentrates the whole exchange into
+    an incast on the hot joiner's ingress.  Join work is split
+    proportionally to received bytes, so the hot joiner also computes
+    longer and then emits proportionally more of the
+    ``output_bytes_per_node``-per-node second shuffle (its egress
+    becomes the hot tx flow) before the final balanced reduce.
+    """
+    if not 0.0 <= skew < 1.0:
+        raise ValueError(f"skew must be in [0, 1), got {skew!r}")
+    nodes = topo.compute_node_names
+    n = len(nodes)
+    if n < 2:
+        raise ValueError("analytics_dag needs >= 2 compute nodes")
+    hot = hot or nodes[0]
+    if hot not in nodes:
+        raise KeyError(f"hot joiner {hot!r} is not a compute node")
+    # receiver weights: balanced share plus the skewed key range
+    weight = {v: (1.0 - skew) / n + (skew if v == hot else 0.0)
+              for v in nodes}
+
+    tasks = []
+    scans: dict = {}
+    for u in nodes:
+        scans[u] = tuple(f"scan{tag}:{u}:{i}"
+                         for i in range(tasks_per_node))
+        for tid in scans[u]:
+            tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
+                              scan_work_per_node / tasks_per_node,
+                              node=u))
+
+    # stage 1: partition both relations by join key (pipelined: a
+    # sender starts as soon as its own scans finish)
+    inbound: dict = {v: [] for v in nodes}
+    received = {v: 0.0 for v in nodes}
+    for u in nodes:
+        peer_total = sum(weight[v] for v in nodes if v != u)
+        for v in nodes:
+            if v == u:                # local partition stays local
+                continue
+            nbytes = shuffle_bytes_per_node * weight[v] / peer_total
+            tid = f"part{tag}:{u}:{v}"
+            inbound[v].append(tid)
+            received[v] += nbytes
+            res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
+            tasks.append(Task(tid, EventKind.DMA, res, nbytes,
+                              deps=scans[u], node=u))
+
+    # stage 2: per-joiner hash join, work proportional to received bytes
+    total_recv = sum(received.values())
+    joins: dict = {}
+    for v in nodes:
+        frac = received[v] / total_recv if total_recv > 0 else 1.0 / n
+        joins[v] = f"join{tag}:{v}"
+        tasks.append(Task(joins[v], EventKind.COMPUTE, (topo.cpu(v),),
+                          join_work_total * frac,
+                          deps=tuple(inbound[v]) + scans[v], node=v))
+
+    # stage 3: output shuffle — join output scales with join input, so
+    # the hot joiner's egress is the fat flow; spread evenly over peers
+    out_in: dict = {v: [joins[v]] for v in nodes}
+    if output_bytes_per_node > 0:
+        total_out = output_bytes_per_node * n
+        for v in nodes:
+            frac = received[v] / total_recv if total_recv > 0 else 1.0 / n
+            per_peer = total_out * frac / (n - 1)
+            for w in nodes:
+                if w == v:
+                    continue
+                tid = f"out{tag}:{v}:{w}"
+                out_in[w].append(tid)
+                res = (topo.tx(v), topo.rx(w)) + topo.fabric_path(v, w)
+                tasks.append(Task(tid, EventKind.DMA, res, per_peer,
+                                  deps=(joins[v],), node=v))
+
+    for w in nodes:
+        tasks.append(Task(f"reduce{tag}:{w}", EventKind.COMPUTE,
+                          (topo.cpu(w),), reduce_work_per_node,
+                          deps=tuple(out_in[w]), node=w))
     return tasks
 
 
@@ -253,6 +355,25 @@ def reference_tenants(n_devices: int = 8) -> list:
     ]
 
 
+def skewed_analytics_mix(skew: float = 0.8) -> list:
+    """The skewed incast+shuffle tenant mix, in relative units: a
+    hot-joiner `analytics_dag` (the skewed key range turns one joiner's
+    ingress into an incast and its egress into the fat stage-2 flow)
+    co-located with a balanced background shuffle.  On an oversubscribed
+    fabric this is the pattern where progressive filling strands core
+    capacity behind rx-pinned incast flows; shared by
+    `benchmarks/bench_sim.py`'s allocator-regression cell and
+    `examples/cluster_planning.py` so the two cannot drift."""
+    return [
+        ("dag", lambda topo, tag="": analytics_dag(
+            topo, scan_work_per_node=0.25, shuffle_bytes_per_node=6.0,
+            join_work_total=2.0, output_bytes_per_node=2.0,
+            reduce_work_per_node=0.25, skew=skew, tag=tag)),
+        ("background", lambda topo, tag="": shuffle(
+            topo, cpu_work_per_node=0.25, bytes_per_node=6.0, tag=tag)),
+    ]
+
+
 # ---------------------------------------------------------------------------
 # Training-step replay from dry-run traces
 # ---------------------------------------------------------------------------
@@ -281,7 +402,9 @@ def trace_from_record(rec: dict) -> dict:
     roof = rec["roofline"]
     coll = rec.get("collectives", {})
     return {
-        "n_devices": rec.get("n_devices", 1),
+        # 0 = unknown: replay skips device-count reconciliation instead
+        # of treating a legacy record as a single-device trace
+        "n_devices": rec.get("n_devices", 0),
         "phases": [
             {"kind": "compute", "flops": roof.get("flops", 0.0),
              "hbm_bytes": roof.get("hbm_bytes", 0.0)},
@@ -291,6 +414,67 @@ def trace_from_record(rec: dict) -> dict:
              "bytes": coll.get("dcn_bytes", 0.0)},
         ],
     }
+
+
+def _rescale_collectives(coll, trace_devices: int, n_nodes: int,
+                         on_device_mismatch: str):
+    """Reconcile a trace recorded on ``trace_devices`` devices with a
+    topology running ``n_nodes`` device groups.
+
+    Per-device ring-all-reduce bytes for a fixed model size scale as
+    ``2M(n-1)/n``, so collective phases are rescaled by the ratio of
+    ring fractions (``"scale"``, the default) instead of silently
+    replaying mis-sized gradient syncs; ``"raise"`` turns any mismatch
+    into an error, ``"ignore"`` keeps the old trusting behaviour.
+    """
+    if on_device_mismatch not in ("scale", "raise", "ignore"):
+        raise ValueError(
+            f"on_device_mismatch must be 'scale', 'raise' or 'ignore', "
+            f"got {on_device_mismatch!r}")
+    if on_device_mismatch == "ignore" or not coll:
+        return coll
+    if not trace_devices:
+        if on_device_mismatch == "raise":
+            raise ValueError(
+                "trace does not record n_devices; cannot validate its "
+                "collective phases against the topology")
+        return coll               # unknown origin: nothing to reconcile
+    if trace_devices == n_nodes:
+        return coll
+    if on_device_mismatch == "raise":
+        raise ValueError(
+            f"trace records n_devices={trace_devices} but the topology "
+            f"runs {n_nodes} device groups; pass "
+            f"on_device_mismatch='scale' to rescale gradient-sync bytes")
+    if n_nodes <= 1:
+        return []                 # a single group has nobody to sync with
+    if trace_devices <= 1:
+        raise ValueError(
+            f"cannot rescale collectives from a single-device trace "
+            f"(n_devices={trace_devices}) onto {n_nodes} nodes")
+    factor = ((n_nodes - 1) / n_nodes) \
+        / ((trace_devices - 1) / trace_devices)
+    return [(tier, nbytes * factor) for tier, nbytes in coll]
+
+
+def _reconcile_trace(trace: dict, n_nodes: int) -> dict:
+    """A copy of ``trace`` whose collective phases are ring-rescaled to
+    ``n_nodes`` device groups and whose ``n_devices`` says so — for
+    callers (`training_with_stragglers`) that reconcile once up front
+    and then hold the sync-byte model fixed across replays."""
+    n_dev = int(trace.get("n_devices", 0) or 0)
+    if not n_dev or n_dev == n_nodes:
+        return trace
+    phases = []
+    for ph in trace["phases"]:
+        if ph.get("kind") == "collective_phase" \
+                and ph.get("bytes", 0.0) > 0:
+            scaled = _rescale_collectives(
+                [(ph.get("tier", "dcn"), float(ph["bytes"]))],
+                n_dev, n_nodes, "scale")
+            ph = dict(ph, bytes=scaled[0][1] if scaled else 0.0)
+        phases.append(ph)
+    return dict(trace, n_devices=n_nodes, phases=phases)
 
 
 def _trace_costs(trace: dict, accel_flops: float, hbm_bw: float):
@@ -313,7 +497,8 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
                         failure_model=None, tag: str = "",
                         nodes: Optional[Sequence[str]] = None,
                         compute_scale: float = 1.0, first_step: int = 0,
-                        after: Optional[str] = None) -> list:
+                        after: Optional[str] = None,
+                        on_device_mismatch: str = "scale") -> list:
     """Replay ``steps`` synchronous training steps over compute nodes.
 
     Trace numbers are per-device; each node runs one device group.  A
@@ -329,6 +514,12 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
     Several nodes failing at the same step each contribute their own
     recovery delay (restores are serialized by the coordinator) followed
     by one shared replay of the lost steps.
+
+    When the trace's ``n_devices`` differs from the number of nodes the
+    replay runs on, per-node collective bytes are rescaled by the ring
+    all-reduce fraction (or the mismatch raises / is ignored — see
+    ``on_device_mismatch``) instead of silently replaying a mis-sized
+    gradient sync.
 
     The elastic hooks — ``tag`` (namespace task ids per tenant),
     ``nodes`` (run on a subset, e.g. post-eviction survivors),
@@ -350,6 +541,8 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
              else topo.accelerator_node_names)
     compute_s, coll = _trace_costs(trace, accel_flops, hbm_bw)
     compute_s *= compute_scale
+    coll = _rescale_collectives(coll, int(trace.get("n_devices", 0) or 0),
+                                len(nodes), on_device_mismatch)
 
     tasks = []
 
@@ -412,6 +605,10 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
     per-node compute scaled by ``n_original / n_survivors`` (the evicted
     node's data shard is redistributed; gradient-sync bytes are
     model-sized and stay put).  Repeats until no further eviction fires.
+    The trace is reconciled with the cluster size *once, up front* (ring
+    rescale when ``n_devices`` disagrees with the accelerator-node
+    count); survivor segments replay those same sync bytes, so every
+    step time fed to the detector is scored under one sync-byte model.
 
     Returns ``{"result": SimResult, "evictions": [(node, step, time)],
     "baseline_makespan": float, "active_nodes": [...],
@@ -422,6 +619,7 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
 
     failure_model = failure_model or FailureComponent()
     all_nodes = topo.accelerator_node_names
+    trace = _reconcile_trace(trace, len(all_nodes))
     det = StragglerDetector(len(all_nodes), policy)
     idx = {u: i for i, u in enumerate(all_nodes)}
     _, coll = _trace_costs(trace, accel_flops, hbm_bw)
@@ -432,11 +630,14 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
                 else f"fwd{tag}:{stag}:{u}")
 
     def segment(n_steps, active, first, dep):
+        # "ignore": the reconciled sync bytes stay put across evictions
+        # (the documented model) — rescaling per survivor count would
+        # also drop sync tasks for a lone survivor and desync last_phase
         return training_from_trace(
             topo, trace, steps=n_steps, accel_flops=accel_flops,
             hbm_bw=hbm_bw, tag=tag, nodes=active,
             compute_scale=len(all_nodes) / len(active), first_step=first,
-            after=dep)
+            after=dep, on_device_mismatch="ignore")
 
     prefix: list = []             # frozen segments (steps already scored)
     prefix_barrier: Optional[str] = None

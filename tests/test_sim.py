@@ -123,18 +123,51 @@ def test_engine_deterministic():
     assert t1.engine().run(w1).makespan == t2.engine().run(w2).makespan
 
 
-def test_engine_busy_time_skips_down_node_resources():
-    """A down node's resources deliver zero rate, so they must not accrue
-    busy_time while other nodes' tasks stall on them."""
+def test_engine_remote_receiver_failure_loses_transfer_progress():
+    """Regression: a DMA whose *remote* endpoint (the receiver's rx)
+    goes down used to freeze at zero rate but keep its partial progress.
+    It must fail like its own node died: progress lost, held, re-admitted
+    on recovery with full remaining work."""
     eng = Engine([Resource("a:tx", 1.0, node="a"),
                   Resource("b:rx", 1.0, node="b")])
     eng.inject_failure("b", at=0.5, recover_at=1.5)
     res = eng.run([Task("d", EventKind.DMA, ("a:tx", "b:rx"), 1.0,
                         node="a")])
     assert res.complete
-    assert res.makespan == pytest.approx(2.0)
-    # rx transferred for 1.0s total; the 1.0s outage is idle, not busy
-    assert res.busy_time["b:rx"] == pytest.approx(1.0)
+    # 0.5 of the transfer lost at t=0.5; restart at 1.5 with full work
+    assert res.makespan == pytest.approx(2.5)
+    # the outage [0.5, 1.5) is idle: busy only while bytes moved
+    assert res.busy_time["b:rx"] == pytest.approx(1.5)
+    assert res.busy_time["a:tx"] == pytest.approx(1.5)
+
+
+def test_engine_remote_failure_never_readmits_while_remote_down():
+    """An unrecovered remote endpoint keeps the task held: the run ends
+    incomplete instead of silently completing on a dead receiver."""
+    eng = Engine([Resource("a:tx", 1.0, node="a"),
+                  Resource("b:rx", 1.0, node="b")])
+    eng.inject_failure("b", at=0.5)
+    res = eng.run([Task("d", EventKind.DMA, ("a:tx", "b:rx"), 1.0,
+                        node="a")])
+    assert not res.complete
+    assert "d" not in res.finish_times
+
+
+def test_storage_replay_receiver_failure_loses_read_progress():
+    """A compute node failing mid-shard-read kills the in-flight read
+    (whose task lives on the *storage* node but holds the compute
+    node's rx): the read restarts from zero after recovery."""
+    topo = lovelock_cluster(1, 1, accel_rate=1.0, storage_nodes=1)
+    tasks = storage_replay(topo, shard_bytes=4.0, ckpt_bytes=0.0,
+                           steps=1, compute_s=1.0, ckpt_every=10)
+    base = topo.engine().run(tasks)
+    assert base.complete and base.makespan == pytest.approx(5.0)
+    eng = topo.engine()
+    eng.inject_failure("nic0", at=2.0, recover_at=3.0)
+    res = eng.run(tasks)
+    assert res.complete
+    # 2.0 of the 4-byte read lost; full re-read from t=3, compute after
+    assert res.makespan == pytest.approx(3.0 + 4.0 + 1.0)
 
 
 def test_engine_rerun_replays_failure_schedule():

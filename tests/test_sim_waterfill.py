@@ -1,0 +1,405 @@
+"""Max-min water-filling rate allocation: fairness properties, exact
+agreement with progressive filling on balanced DAGs, strict improvement
+on skewed incast+shuffle traffic, the multi-stage `analytics_dag`
+generator, and trace/topology device-count reconciliation."""
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.sim import (Engine, EventKind, Fabric, Resource, Task,
+                       analytics_dag, compare_allocators,
+                       lovelock_cluster, measure_interference,
+                       multi_tenant, progressive_fill_rates, shuffle,
+                       skewed_analytics_mix, summarize,
+                       training_from_trace, water_filling_rates)
+
+REL_TRACE = {"n_devices": 8, "phases": [
+    {"kind": "compute", "flops": 0.5},
+    {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+REL = dict(accel_flops=1.0, hbm_bw=1.0)
+
+
+# ---------------------------------------------------------------------------
+# allocator properties (random bipartite flow/resource graphs)
+# ---------------------------------------------------------------------------
+
+
+def _random_instance(seed):
+    rng = random.Random(seed)
+    n_res = rng.randint(1, 6)
+    names = [f"r{i}" for i in range(n_res)]
+    cap = {n: rng.uniform(0.25, 4.0) for n in names}
+    flows = {}
+    for i in range(rng.randint(1, 10)):
+        k = rng.randint(1, n_res)
+        flows[f"f{i}"] = tuple(rng.sample(names, k))
+    holds = {}
+    for res in flows.values():
+        for r in res:
+            holds[r] = holds.get(r, 0) + 1
+    cap = {n: c for n, c in cap.items() if n in holds}
+    return flows, cap, holds
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_waterfill_work_conservation_and_maxmin(seed):
+    """Properties on random instances: (1) no resource over capacity;
+    (2) every flow is pinned by a saturated resource on which it has a
+    maximal rate — so no flow can gain without a flow of at most its
+    rate losing (the max-min property); (3) water-filling weakly
+    dominates progressive filling per flow."""
+    flows, cap, holds = _random_instance(seed)
+    rate = water_filling_rates(flows, cap, holds)
+    prog = progressive_fill_rates(flows, cap, holds)
+    assert set(rate) == set(flows)
+    load = {r: 0.0 for r in cap}
+    for tid, res in flows.items():
+        assert rate[tid] >= 0.0
+        for r in res:
+            load[r] += rate[tid]
+    for r in cap:
+        assert load[r] <= cap[r] * (1 + 1e-9) + 1e-12, (r, load[r], cap[r])
+    for tid, res in flows.items():
+        saturated = [r for r in res
+                     if load[r] >= cap[r] * (1 - 1e-9) - 1e-12]
+        assert saturated, f"flow {tid} is not pinned by any bottleneck"
+        assert any(all(rate[tid] >= rate[o] - 1e-9
+                       for o, ores in flows.items() if r in ores)
+                   for r in saturated), \
+            f"flow {tid} is not maximal on any of its bottlenecks"
+        # dominance: max-min can only improve on progressive filling
+        assert rate[tid] >= prog[tid] * (1 - 1e-9) - 1e-12
+
+
+def test_waterfill_releases_unused_share():
+    """The defining case progressive filling gets wrong: a flow pinned
+    elsewhere must release its unused share on a shared resource."""
+    flows = {"pinned": ("slow", "shared"), "free": ("shared",)}
+    cap = {"slow": 0.2, "shared": 1.0}
+    holds = {"slow": 1, "shared": 2}
+    prog = progressive_fill_rates(flows, cap, holds)
+    rate = water_filling_rates(flows, cap, holds)
+    assert prog == {"pinned": pytest.approx(0.2),
+                    "free": pytest.approx(0.5)}
+    assert rate["pinned"] == pytest.approx(0.2)
+    assert rate["free"] == pytest.approx(0.8)      # reclaimed slack
+
+
+def test_waterfill_matches_progressive_on_balanced_shares():
+    """Balanced instance: both allocators pin everything at cap/n in one
+    round, bit-identically."""
+    flows = {f"f{i}{j}": (f"tx{i}", f"rx{j}")
+             for i in range(4) for j in range(4) if i != j}
+    holds = {}
+    for res in flows.values():
+        for r in res:
+            holds[r] = holds.get(r, 0) + 1
+    cap = {r: 1.0 for r in holds}
+    assert water_filling_rates(flows, cap, holds) == \
+        progressive_fill_rates(flows, cap, holds)
+
+
+def test_engine_rejects_unknown_allocator():
+    with pytest.raises(ValueError):
+        Engine([Resource("r", 1.0)], allocator="wrong")
+
+
+# ---------------------------------------------------------------------------
+# exact agreement on every balanced scenario family
+# ---------------------------------------------------------------------------
+
+
+BALANCED = (
+    ("shuffle", lambda t, tag="": shuffle(
+        t, cpu_work_per_node=0.5, bytes_per_node=7.0, tag=tag)),
+    ("training", lambda t, tag="": training_from_trace(
+        t, REL_TRACE, steps=3, tag=tag, **REL)),
+    ("analytics_dag_balanced", lambda t, tag="": analytics_dag(
+        t, scan_work_per_node=0.5, shuffle_bytes_per_node=6.0,
+        join_work_total=2.0, output_bytes_per_node=2.0,
+        reduce_work_per_node=0.25, skew=0.0, tag=tag)),
+)
+
+
+@pytest.mark.parametrize("fabric", [None, Fabric(rack_size=4)],
+                         ids=["nonblocking", "fabric-1to1"])
+@pytest.mark.parametrize("name,build", BALANCED, ids=[n for n, _ in BALANCED])
+def test_waterfill_equals_progressive_on_balanced_dags(name, build, fabric):
+    """Acceptance: on the balanced patterns the existing generators emit
+    — with and without a 1:1 fabric — the sharpened allocator must match
+    progressive filling to <1e-6 relative."""
+    cmp = compare_allocators(
+        lambda: lovelock_cluster(8, 1, accel_rate=1.0, fabric=fabric),
+        build)
+    assert cmp["speedup"] == pytest.approx(1.0, rel=1e-6), (name, cmp)
+
+
+def test_waterfill_scatter_gather_agrees_nonblocking():
+    """The incast itself is balanced across responders on a non-blocking
+    fabric: allocators agree there too."""
+    from repro.sim import scatter_gather
+    cmp = compare_allocators(
+        lambda: lovelock_cluster(8, 1, accel_rate=1.0),
+        lambda t: scatter_gather(t, request_bytes_total=0.8,
+                                 response_bytes_total=8.0,
+                                 cpu_work_per_worker=0.5))
+    assert cmp["speedup"] == pytest.approx(1.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# strict improvement on skewed traffic
+# ---------------------------------------------------------------------------
+
+
+def _two_rack_2to1():
+    return lovelock_cluster(8, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4,
+                                          oversubscription=2.0,
+                                          core_oversubscription=2.0))
+
+
+def _incast_plus_txlimited(topo):
+    """4 flows incast into nic4's rx across the 2:1 core, plus one
+    reverse-direction flow that is tx-limited at its own NIC."""
+    tasks = [Task(f"in:{i}", EventKind.DMA,
+                  (topo.tx(f"nic{i}"), topo.rx("nic4"))
+                  + topo.fabric_path(f"nic{i}", "nic4"), 1.0,
+                  node=f"nic{i}") for i in range(4)]
+    tasks.append(Task("bulk", EventKind.DMA,
+                      (topo.tx("nic5"), topo.rx("nic0"))
+                      + topo.fabric_path("nic5", "nic0"), 3.0,
+                      node="nic5"))
+    return tasks
+
+
+def test_waterfill_strictly_improves_txlimited_flow_vs_incast():
+    """Acceptance: an rx-pinned incast holds the shared 2:1 core but only
+    uses a fraction of its share; the contending bulk flow must reclaim
+    the slack (progressive: core/5 = 0.4; water-filling: NIC-limited at
+    1.0), strictly shrinking the makespan."""
+    topo = _two_rack_2to1()
+    assert topo.fabric_path("nic0", "nic4") != ()
+    prog = _two_rack_2to1().engine(allocator="progressive") \
+        .run(_incast_plus_txlimited(_two_rack_2to1()))
+    wf = topo.engine().run(_incast_plus_txlimited(topo))
+    assert prog.complete and wf.complete
+    # incast is rx-bound identically under both allocators
+    assert wf.finish_times["in:0"] == pytest.approx(4.0)
+    assert prog.finish_times["in:0"] == pytest.approx(4.0)
+    # the tx-limited bulk flow reclaims the core slack
+    assert wf.finish_times["bulk"] == pytest.approx(3.0)
+    assert prog.finish_times["bulk"] == pytest.approx(5.4)
+    assert wf.makespan < prog.makespan * 0.99
+
+
+def test_waterfill_strictly_improves_skewed_analytics_dag():
+    """Acceptance: the skewed incast+shuffle cell — a hot-joiner
+    analytics DAG co-located with a balanced background shuffle on a
+    2:1 fabric — must get strictly faster under water-filling."""
+    def build(topo):
+        return list(multi_tenant(topo, skewed_analytics_mix()).tasks)
+    cmp = compare_allocators(_two_rack_2to1, build)
+    assert cmp["speedup"] > 1.01, cmp
+
+
+# ---------------------------------------------------------------------------
+# analytics_dag generator
+# ---------------------------------------------------------------------------
+
+
+def test_analytics_dag_balanced_reduces_to_uniform_exchange():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    tasks = analytics_dag(topo, scan_work_per_node=0.5,
+                          shuffle_bytes_per_node=6.0, join_work_total=4.0,
+                          output_bytes_per_node=3.0,
+                          reduce_work_per_node=0.5)
+    parts = [t for t in tasks if t.tid.startswith("part:")]
+    assert len(parts) == 4 * 3
+    assert all(t.work == pytest.approx(2.0) for t in parts)
+    joins = {t.tid: t for t in tasks if t.tid.startswith("join:")}
+    assert all(t.work == pytest.approx(1.0) for t in joins.values())
+    res = topo.engine().run(tasks)
+    assert res.complete
+
+
+def test_analytics_dag_skew_concentrates_on_hot_joiner():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    tasks = analytics_dag(topo, scan_work_per_node=0.5,
+                          shuffle_bytes_per_node=6.0, join_work_total=4.0,
+                          output_bytes_per_node=3.0, skew=0.6,
+                          hot="nic2")
+    recv = {}
+    for t in tasks:
+        if t.tid.startswith("part:"):
+            dst = t.tid.split(":")[2]
+            recv[dst] = recv.get(dst, 0.0) + t.work
+    assert max(recv, key=recv.get) == "nic2"
+    assert recv["nic2"] > 2 * max(v for k, v in recv.items() if k != "nic2")
+    joins = {t.tid.split(":")[1]: t.work for t in tasks
+             if t.tid.startswith("join:")}
+    assert max(joins, key=joins.get) == "nic2"
+    # hot joiner's egress is the fat stage-2 flow
+    outs = {}
+    for t in tasks:
+        if t.tid.startswith("out:"):
+            src = t.tid.split(":")[1]
+            outs[src] = outs.get(src, 0.0) + t.work
+    assert max(outs, key=outs.get) == "nic2"
+    res = topo.engine().run(tasks)
+    assert res.complete
+
+
+def test_analytics_dag_validates_arguments():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    with pytest.raises(ValueError):
+        analytics_dag(topo, scan_work_per_node=1.0,
+                      shuffle_bytes_per_node=1.0, join_work_total=1.0,
+                      skew=1.0)
+    with pytest.raises(KeyError):
+        analytics_dag(topo, scan_work_per_node=1.0,
+                      shuffle_bytes_per_node=1.0, join_work_total=1.0,
+                      hot="nope")
+    with pytest.raises(ValueError):
+        analytics_dag(lovelock_cluster(1, 1), scan_work_per_node=1.0,
+                      shuffle_bytes_per_node=1.0, join_work_total=1.0)
+
+
+def test_analytics_dag_runs_under_measure_interference():
+    """Acceptance: analytics_dag composes through multi_tenant and the
+    interference harness; a skewed DAG sharing a 2:1 fabric with a
+    background shuffle interferes (slowdown > 1) and the report carries
+    per-resource utilized time."""
+    rep = measure_interference(_two_rack_2to1, skewed_analytics_mix())
+    assert rep["complete"]
+    for name, slow in rep["slowdown"].items():
+        assert slow > 1.0, (name, slow)
+    topo = _two_rack_2to1()
+    wl = multi_tenant(topo, skewed_analytics_mix())
+    res = topo.engine().run(list(wl.tasks))
+    s = summarize(res, name="skewed-mix")
+    assert 0 < s["utilized"]["fabric"] <= s["utilization"]["fabric"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# trace / topology device-count reconciliation
+# ---------------------------------------------------------------------------
+
+
+def test_training_trace_device_mismatch_raises_when_asked():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)   # 4 nodes, trace says 8
+    with pytest.raises(ValueError, match="n_devices=8"):
+        training_from_trace(topo, REL_TRACE, on_device_mismatch="raise",
+                            **REL)
+
+
+def test_training_trace_device_mismatch_scales_collectives():
+    """A trace recorded on 8 devices replayed on 4 nodes rescales
+    per-node gradient-sync bytes by the ring fraction (3/4)/(7/8)."""
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    scaled = training_from_trace(topo, REL_TRACE, **REL)
+    factor = (3 / 4) / (7 / 8)
+    manual_trace = {"n_devices": 4, "phases": [
+        {"kind": "compute", "flops": 0.5},
+        {"kind": "collective_phase", "tier": "dcn",
+         "bytes": 3.0 * factor}]}
+    manual = training_from_trace(topo, manual_trace, **REL)
+    by_id = {t.tid: t for t in manual}
+    for t in scaled:
+        assert t.work == pytest.approx(by_id[t.tid].work)
+    ignored = training_from_trace(topo, REL_TRACE,
+                                  on_device_mismatch="ignore", **REL)
+    sync = [t for t in ignored if t.tid.startswith("sync")]
+    assert all(t.work == pytest.approx(3.0) for t in sync)
+
+
+def test_training_trace_matching_devices_untouched():
+    topo = lovelock_cluster(8, 1, accel_rate=1.0)
+    tasks = training_from_trace(topo, REL_TRACE, **REL)
+    sync = [t for t in tasks if t.tid.startswith("sync")]
+    assert sync and all(t.work == pytest.approx(3.0) for t in sync)
+
+
+def test_training_trace_single_device_trace_cannot_scale():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    bad = {"n_devices": 1, "phases": [
+        {"kind": "compute", "flops": 0.5},
+        {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+    with pytest.raises(ValueError, match="single-device"):
+        training_from_trace(topo, bad, **REL)
+
+
+def test_training_trace_mismatch_mode_validated():
+    topo = lovelock_cluster(8, 1, accel_rate=1.0)
+    with pytest.raises(ValueError, match="on_device_mismatch"):
+        training_from_trace(topo, REL_TRACE, on_device_mismatch="maybe",
+                            **REL)
+
+
+def test_training_trace_unknown_devices_strict_raises_lenient_skips():
+    """A legacy record without n_devices (trace_from_record emits 0)
+    replays untouched by default, but 'raise' must still refuse — the
+    caller asked for strict validation it cannot perform."""
+    from repro.sim import trace_from_record
+    rec = {"roofline": {"flops": 1e12, "hbm_bytes": 1e9},
+           "collectives": {"ici_bytes": 1e8, "dcn_bytes": 1e7}}
+    tr = trace_from_record(rec)
+    assert tr["n_devices"] == 0
+    topo = lovelock_cluster(4, 1, accel_rate=1.0)
+    tasks = training_from_trace(topo, tr)           # lenient default
+    assert any(t.tid.startswith("sync") for t in tasks)
+    with pytest.raises(ValueError, match="does not record n_devices"):
+        training_from_trace(topo, tr, on_device_mismatch="raise")
+
+
+def test_stragglers_single_survivor_with_collectives():
+    """Regression: evicting down to one survivor used to KeyError —
+    the survivor segment's rescale dropped the sync tasks that the
+    scoring loop still looked up.  The sync-byte model is reconciled
+    once up front and then stays put across evictions."""
+    from repro.core.elastic import StragglerPolicy
+    from repro.sim import NodeModel, Topology, training_with_stragglers
+    topo = Topology([NodeModel(f"n{i}", "smartnic", 1.0,
+                               accel_rate=(0.3 if i == 0 else 1.0))
+                     for i in range(2)])
+    trace = {"n_devices": 2, "phases": [
+        {"kind": "compute", "flops": 1.0},
+        {"kind": "collective_phase", "tier": "dcn", "bytes": 0.5}]}
+    out = training_with_stragglers(
+        topo, trace, steps=10,
+        policy=StragglerPolicy(deadline_factor=1.2), **REL)
+    assert out["result"].complete
+    assert out["evictions"]
+    assert out["active_nodes"] == ["n1"]
+    # the lone survivor still replays the model-sized gradient sync
+    sync_finishes = [t for t in out["result"].finish_times
+                     if t.startswith("sync") and ":n1:" in t]
+    assert len(sync_finishes) == 10
+
+
+def test_stragglers_reconcile_trace_once_up_front():
+    """A mismatched trace (8 devices on a 4-node cluster) is ring-
+    rescaled once; pre- and post-eviction steps share one sync-byte
+    model, so the closed loop completes with a consistent timeline."""
+    from repro.core.elastic import StragglerPolicy
+    from repro.sim import NodeModel, Topology, training_with_stragglers
+    topo = Topology([NodeModel(f"n{i}", "smartnic", 1.0,
+                               accel_rate=(0.3 if i == 0 else 1.0))
+                     for i in range(4)])
+    trace = {"n_devices": 8, "phases": [
+        {"kind": "compute", "flops": 1.0},
+        {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+    out = training_with_stragglers(
+        topo, trace, steps=8,
+        policy=StragglerPolicy(deadline_factor=1.2), **REL)
+    assert out["result"].complete
+    assert out["evictions"]
+    factor = (3 / 4) / (7 / 8)
+    sync = [t for t in out["result"].finish_times if t.startswith("sync")]
+    assert sync
+    # every emitted sync task carries the reconciled byte count
+    eng_tasks = training_from_trace(topo, trace, steps=1, **REL)
+    per_sync = [t.work for t in eng_tasks if t.tid.startswith("sync")]
+    assert per_sync and all(w == pytest.approx(3.0 * factor)
+                            for w in per_sync)
