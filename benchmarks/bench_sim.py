@@ -2,7 +2,9 @@
 
 The paper's target-application scenarios at a phi sweep, a multi-tenant +
 fabric-contention cell (per-tenant slowdown at 1:1 vs 4:1
-oversubscription), plus the closed-form cross-validation:
+oversubscription), the online-scheduler SLO cell (FIFO vs rack-aware
+packing p99 JCT + energy-per-job), plus the closed-form
+cross-validation:
 
     PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
     PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
@@ -10,6 +12,12 @@ oversubscription), plus the closed-form cross-validation:
 Training replays a dry-run trace from artifacts/dryrun when present,
 falling back to a synthetic llama-scale trace so the benchmark runs on a
 clean checkout.
+
+BENCH_sim.json is an **append-only history**: every invocation appends
+one run stamped with the git SHA and ``SCHEMA_VERSION``; when the
+on-disk schema version differs the writer refuses with a clear error
+instead of silently mixing shapes (move the old file aside to start a
+new history).  Readers take ``runs[-1]`` for the latest numbers.
 """
 import argparse
 import json
@@ -18,16 +26,21 @@ import time
 
 from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile
-from repro.sim import (Fabric, compare_allocators,
-                       cross_validate_bigquery, lovelock_cluster,
-                       measure_interference, multi_tenant,
-                       reference_tenants, scatter_gather, simulate_mu,
-                       skewed_analytics_mix, summarize, synthetic_trace,
-                       trace_from_record, traditional_cluster,
-                       training_from_trace)
+from repro.sim import (Fabric, append_bench_run, compare_allocators,
+                       compare_policies, cross_validate_bigquery,
+                       lovelock_cluster, measure_interference,
+                       multi_tenant, reference_tenants, scatter_gather,
+                       simulate_mu, skewed_analytics_mix, summarize,
+                       synthetic_trace, trace_from_record,
+                       traditional_cluster, training_from_trace)
+from repro.sim.sched import energy_report, reference_job_stream
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ART = ROOT / "artifacts" / "dryrun"
+
+# bump when the per-run dict shape changes incompatibly; the writer
+# refuses to append to a history with a different version
+SCHEMA_VERSION = 2
 
 # physical-ish rates for the training scenario (bytes/s)
 NIC_BW = 25e9          # 200 Gb/s NIC
@@ -163,6 +176,45 @@ def scenario_analytics_skew():
     }
 
 
+def scenario_scheduler_slo():
+    """Online-scheduler SLO cell: the pinned `reference_job_stream`
+    (mixed-footprint skewed analytics + shuffles, Poisson arrivals) on
+    an 8-node 2-rack 2:1-core fabric, scheduled FIFO vs rack-aware
+    packing.  Packing keeps every job inside one ToR while first-fit
+    FIFO fragments placements across the oversubscribed core, so
+    ``packing_p99_speedup`` (FIFO p99 JCT / packing p99 JCT) must stay
+    above 1.0 — CI gates on it.  Energy-per-job comes from the
+    `sched.metrics` utilized_time x `core.costmodel` power join.
+
+    Pinned at 8 nodes / 2 racks / seed 0 so the tracked numbers are
+    identical between --smoke and the full sweep."""
+    n_servers = 8
+
+    def make_topo():
+        return lovelock_cluster(
+            n_servers, 1, accel_rate=1.0,
+            fabric=Fabric(rack_size=4, oversubscription=2.0,
+                          core_oversubscription=2.0))
+
+    rate = 0.45
+    jobs = reference_job_stream(rate=rate)
+    cmp = compare_policies(make_topo, jobs, policies=("fifo", "pack"))
+    energy = energy_report(cmp["scheds"]["pack"])
+    return {
+        "fabric": "2:1 core",
+        "arrival_rate_jobs_per_s": rate,
+        "n_jobs": len(jobs),
+        "fifo": {k: v for k, v in cmp["slo"]["fifo"].items()
+                 if k != "policy"},
+        "pack": {k: v for k, v in cmp["slo"]["pack"].items()
+                 if k != "policy"},
+        "packing_p99_speedup": round(cmp["p99_speedup"], 4),
+        "pack_energy_per_job": round(energy["energy_per_job"], 4),
+        "pack_active_energy_per_job": round(
+            energy["active_energy_per_job"], 4),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -187,16 +239,19 @@ def main():
             "training": scenario_training(phis, n_servers, steps),
             "multi_tenant": scenario_multi_tenant(n_servers),
             "analytics_skew": scenario_analytics_skew(),
+            "scheduler_slo": scenario_scheduler_slo(),
         },
     }
     bench["wall_s"] = round(time.time() - t0, 3)
-    pathlib.Path(args.out).write_text(json.dumps(bench, indent=1))
+    append_bench_run(args.out, bench, schema_version=SCHEMA_VERSION)
     print(json.dumps(bench, indent=1))
     worst = max(r["rel_err"] for r in bench["cross_validation"])
     speedup = bench["scenarios"]["analytics_skew"]["waterfill_speedup"]
-    print(f"\nwrote {args.out}  (cross-validation worst rel_err "
+    p99 = bench["scenarios"]["scheduler_slo"]["packing_p99_speedup"]
+    print(f"\nappended to {args.out}  (cross-validation worst rel_err "
           f"{worst:.2e}, water-filling speedup on skewed cell "
-          f"{speedup}x, wall {bench['wall_s']}s)")
+          f"{speedup}x, packing p99-JCT speedup {p99}x, "
+          f"wall {bench['wall_s']}s)")
 
 
 if __name__ == "__main__":

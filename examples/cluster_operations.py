@@ -1,0 +1,106 @@
+"""Operating a Lovelock cluster online: arrivals, policies, SLOs, energy.
+
+Where `cluster_planning.py` picks a phi from static workload profiles,
+this example *operates* the cluster: a Poisson stream of mixed-footprint
+analytics/shuffle jobs (the pinned `reference_job_stream`) arrives at an
+8-node smart-NIC cluster with a 2:1-oversubscribed core, and the online
+scheduler (`repro.sim.sched`) queues, places and preempts them under
+four policies — FIFO, shortest-job-first backfill, rack-aware packing,
+and priority preemption over packing.  The table reports the SLO view a
+cluster operator actually sees: p50/p99 job completion time, mean
+queueing delay, goodput, and energy-per-job from the
+`SimResult.utilized_time` x `core.costmodel` power join.
+
+The second half closes the loop to the paper's §4 energy claim: the
+same job stream served by a traditional server cluster vs the
+phi-NICs-per-server Lovelock layout, energy-per-job side by side, with
+the measured traditional/Lovelock ratio checked against Eq. 2's
+``power_ratio(phi, mu)`` at the measured mu.
+
+    PYTHONPATH=src python examples/cluster_operations.py
+"""
+from repro.core import costmodel as cm
+from repro.sim import Fabric, lovelock_cluster, traditional_cluster
+from repro.sim.sched import (ClusterScheduler, analytics_template,
+                             energy_comparison, energy_report,
+                             poisson_stream, reference_job_stream,
+                             run_policies, slo_summary)
+
+N_SERVERS = 8
+PHI = 2
+
+
+def make_topo():
+    return lovelock_cluster(N_SERVERS, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4,
+                                          oversubscription=2.0,
+                                          core_oversubscription=2.0))
+
+
+def policy_table():
+    jobs = reference_job_stream()
+    # one urgent high-priority job mid-stream shows what preemption buys
+    urgent = poisson_stream([analytics_template(4, priority=5,
+                                                name="urgent")],
+                            rate=1.0, n_jobs=1, seed=7)
+    t_mid = max(j.arrival_s for j in jobs) / 2
+    jobs = jobs + [type(u)(jid="j900", template=u.template,
+                           arrival_s=t_mid) for u in urgent]
+    print(f"online scheduling on {N_SERVERS} smart-NIC nodes, 2 racks, "
+          f"2:1 core ({len(jobs)} jobs, Poisson arrivals):")
+    print(f"{'policy':>14s} {'p50 JCT':>9s} {'p99 JCT':>9s} "
+          f"{'q-delay':>9s} {'goodput':>9s} {'E/job':>7s} "
+          f"{'urgent JCT':>11s} {'preempts':>8s}")
+    for name, sr in run_policies(
+            make_topo, jobs,
+            policies=("fifo", "sjf", "pack", "preempt")).items():
+        s = slo_summary(sr)
+        e = energy_report(sr)
+        urgent_jct = next(r.jct_s for r in sr.jobs
+                          if r.job.name == "urgent")
+        print(f"{name:>14s} {s['p50_jct_s']:8.1f}s {s['p99_jct_s']:8.1f}s "
+              f"{s['mean_queue_delay_s']:8.1f}s "
+              f"{s['goodput_jobs_per_s']:8.4f}/s "
+              f"{e['energy_per_job']:7.1f} {urgent_jct:10.1f}s "
+              f"{s['preemptions']:8d}")
+
+
+def energy_loop():
+    """Same stream, traditional servers vs phi-per-server smart NICs."""
+    jobs = reference_job_stream()
+    trad = ClusterScheduler(
+        traditional_cluster(N_SERVERS, cpu_rate=cm.MILAN_SYSTEM_SPEEDUP,
+                            accel_rate=1.0,
+                            fabric=Fabric(rack_size=4,
+                                          oversubscription=2.0,
+                                          core_oversubscription=2.0)),
+        "pack").run(jobs)
+    lov = ClusterScheduler(
+        lovelock_cluster(N_SERVERS, PHI, accel_rate=1.0,
+                         fabric=Fabric(rack_size=4 * PHI,
+                                       oversubscription=2.0,
+                                       core_oversubscription=2.0)),
+        "pack").run(jobs)
+    e = energy_comparison(trad, lov, phi=PHI)
+    print(f"\nenergy per job, same stream (phi={PHI}, "
+          f"mu measured {e['mu_measured']:.3f}):")
+    print(f"  {'':24s}{'E/job':>9s} {'active E/job':>13s} "
+          f"{'makespan':>9s}")
+    for label, rep, sr in (("traditional servers", e["traditional"],
+                            trad),
+                           (f"lovelock phi={PHI}", e["lovelock"], lov)):
+        print(f"  {label:24s}{rep['energy_per_job']:9.2f} "
+              f"{rep['active_energy_per_job']:13.2f} "
+              f"{sr.result.makespan:8.1f}s")
+    print(f"  ratio (trad/lovelock)   {e['energy_ratio']:9.2f}  — "
+          f"Eq. 2 power_ratio(phi={PHI}, mu) = "
+          f"{e['eq2_power_ratio']:.2f}")
+
+
+def main():
+    policy_table()
+    energy_loop()
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,23 @@ def power_ratio(phi: float, mu: float, p_s: float = P_S,
     return (p_s + p_p) / (mu * (phi + p_p))
 
 
+# Relative power draw per simulated node kind (smart NIC = 1.0, the
+# paper's normalization; a storage node is a NIC-class node fronting SSD
+# shelves, so it draws NIC power).  `repro.sim.sched.metrics` joins
+# these with `SimResult.utilized_time` for energy-per-job accounting —
+# summing node_power over a topology and multiplying by makespan
+# reproduces Eq. 2's numerator/denominator exactly (p_p = 0).
+NODE_POWER = {"server": P_S, "smartnic": 1.0, "storage": 1.0}
+
+
+def node_power(kind: str, p_s: float = P_S) -> float:
+    """Relative power of one simulated node (see `NODE_POWER`)."""
+    if kind not in NODE_POWER:
+        raise KeyError(f"unknown node kind {kind!r}; "
+                       f"expected one of {sorted(NODE_POWER)}")
+    return p_s if kind == "server" else NODE_POWER[kind]
+
+
 # ---------------------------------------------------------------------------
 # §5.2 BigQuery projection (Figure 4)
 # ---------------------------------------------------------------------------

@@ -20,6 +20,13 @@ multi-stage analytics DAGs with a configurable hot joiner
 `core.elastic.StragglerDetector` and injects its evictions back into
 the timeline).
 
+The `sched` subpackage adds the online control plane: job streams
+arriving over time (Poisson or trace-driven), queueing and rack/role-
+aware placement with priority preemption, incremental admission through
+`Engine.submit`, and SLO/energy accounting (queueing delay, p50/p99
+JCT, goodput, energy-per-job) — `compare_policies` scores policies
+against each other the way `compare_allocators` scores allocators.
+
 Quickstart::
 
     from repro.core.cluster import WorkloadProfile
@@ -42,12 +49,15 @@ from repro.sim.workloads import (MultiTenantWorkload, analytics_dag,
                                  synthetic_trace, trace_from_record,
                                  training_from_trace,
                                  training_with_stragglers)
-from repro.sim.validate import (compare_allocators,
+from repro.sim.validate import (compare_allocators, compare_policies,
                                 cross_validate_bigquery,
                                 measure_interference, simulate_mu,
                                 simulate_plan)
-from repro.sim.report import (attach_scores, attach_tenants, per_tenant,
-                              render, summarize)
+from repro.sim.report import (append_bench_run, attach_scores,
+                              attach_slo, attach_tenants,
+                              load_bench_history, per_tenant, render,
+                              summarize)
+from repro.sim import sched
 
 __all__ = [
     "ALLOCATORS", "Engine", "EventKind", "Resource", "SimEvent",
@@ -59,8 +69,9 @@ __all__ = [
     "skewed_analytics_mix",
     "storage_replay", "synthetic_trace", "trace_from_record",
     "training_from_trace", "training_with_stragglers",
-    "compare_allocators", "cross_validate_bigquery",
+    "compare_allocators", "compare_policies", "cross_validate_bigquery",
     "measure_interference", "simulate_mu",
-    "simulate_plan", "attach_scores", "attach_tenants", "per_tenant",
-    "render", "summarize",
+    "simulate_plan", "append_bench_run", "attach_scores", "attach_slo",
+    "attach_tenants", "load_bench_history", "per_tenant",
+    "render", "summarize", "sched",
 ]

@@ -21,6 +21,18 @@ receiver, a storage node mid-read) — loses its progress: remaining work
 resets to full, the task is held, and it is re-admitted once every node
 it touches is back up.
 
+The engine is **online**: `submit(tasks, at=...)` queues a DAG for
+admission at a future simulation time, so jobs can join a running
+simulation (everything submitted at t=0 is bit-identical to passing the
+concatenated list to `run` — the batch-equivalence invariant the
+scheduler in `repro.sim.sched` builds on).  `call_at(at, fn)` registers
+a control callback invoked mid-run with a live `Control` view that can
+submit more work, preempt tasks (the failure path's hold/re-admit
+machinery with a scheduler driving it instead of a node event), resume
+them, and schedule further callbacks; `on_task_done(fn)` observes every
+completion.  Event traces are byte-stable: same-timestamp `SimEvent`s
+are ordered by (kind, subject), never by hash or insertion accidents.
+
 No jax dependency: the engine is pure Python so planning/simulation runs
 on machines with no accelerator stack.
 """
@@ -104,6 +116,46 @@ class SimResult:
         return [e for e in self.events if e.kind == kind]
 
 
+class Control:
+    """Live view of a running simulation, handed to `Engine.call_at` and
+    `Engine.on_task_done` callbacks.
+
+    Callbacks drive online scheduling: submit new DAGs, preempt a task
+    (its progress resets and it parks until `resume` — the same
+    hold/re-admit machinery node failures use, minus the auto-re-admit
+    on recovery), resume it, or schedule another callback.  `preempt`
+    and `resume` return False for tasks that already finished, so a
+    scheduler can sweep a whole job's task list without racing its
+    completions.
+    """
+
+    def __init__(self, now, submit, preempt, resume, is_done, call_at):
+        self._now, self._submit = now, submit
+        self._preempt, self._resume = preempt, resume
+        self._is_done, self._call_at = is_done, call_at
+
+    @property
+    def now(self) -> float:
+        return self._now()
+
+    def submit(self, tasks) -> None:
+        """Register ``tasks`` for immediate admission (deps may point at
+        already-finished tasks)."""
+        self._submit(tasks)
+
+    def preempt(self, tid: str) -> bool:
+        return self._preempt(tid)
+
+    def resume(self, tid: str) -> bool:
+        return self._resume(tid)
+
+    def done(self, tid: str) -> bool:
+        return self._is_done(tid)
+
+    def call_at(self, at: float, fn) -> None:
+        self._call_at(at, fn)
+
+
 def progressive_fill_rates(flows: Dict[str, tuple],
                            cap: Dict[str, float],
                            holds: Dict[str, int]) -> Dict[str, float]:
@@ -166,6 +218,9 @@ class Engine:
         self.allocator = allocator
         self._alloc = _ALLOC_FNS[allocator]
         self._injected: list = []   # (time, EventKind, node), insert order
+        self._submissions: list = []   # (time, task tuple), insert order
+        self._callbacks: list = []     # (time, fn), insert order
+        self._done_listeners: list = []
 
     def inject_failure(self, node: str, at: float,
                        recover_at: Optional[float] = None) -> None:
@@ -174,45 +229,103 @@ class Engine:
             self._injected.append((recover_at, EventKind.NODE_RECOVER,
                                    node))
 
+    def submit(self, tasks: Iterable[Task], at: float = 0.0) -> None:
+        """Queue a task batch for admission at simulation time ``at``.
+
+        Batches submitted at (or before) t=0 are registered exactly like
+        tasks passed to `run` directly, in submission order — all-at-0
+        submission reproduces a batch `run` bit-for-bit.  A later batch
+        joins the running simulation when the clock reaches ``at``; its
+        deps may reference tasks from any earlier batch.  Like injected
+        failures, submissions are *replayed* (not consumed) so a second
+        `run()` sees the same schedule.
+        """
+        self._submissions.append((max(float(at), 0.0), tuple(tasks)))
+
+    def call_at(self, at: float, fn) -> None:
+        """Schedule ``fn(ctl)`` at simulation time ``at`` with a live
+        `Control` view — the online-scheduler hook."""
+        self._callbacks.append((max(float(at), 0.0), fn))
+
+    def on_task_done(self, fn) -> None:
+        """Register ``fn(ctl, tid)``, called after every task completes
+        (in the deterministic completion order)."""
+        self._done_listeners.append(fn)
+
     # -- main loop ----------------------------------------------------------
 
-    def run(self, tasks: Iterable[Task]) -> SimResult:
-        # timed node events are replayed from `_injected` on every call, so
-        # a second run() sees the same failure schedule instead of the
-        # stale, half-consumed heap it used to inherit
+    def run(self, tasks: Iterable[Task] = ()) -> SimResult:
+        # timed events (node failures, future submissions, control
+        # callbacks) are replayed from the instance lists on every call,
+        # so a second run() sees the same schedule instead of a stale,
+        # half-consumed heap
         timed: list = []
-        for seq, (at, kind, node) in enumerate(self._injected):
-            heapq.heappush(timed, (at, seq, kind, node))
+        seq = 0
 
-        tasks = list(tasks)
-        by_id = {t.tid: t for t in tasks}
-        if len(by_id) != len(tasks):
-            raise ValueError("duplicate task ids")
-        for t in tasks:
-            for r in t.resources:
-                if r not in self.resources:
-                    raise KeyError(f"task {t.tid}: unknown resource {r}")
-            for d in t.deps:
-                if d not in by_id:
-                    raise KeyError(f"task {t.tid}: unknown dep {d}")
+        def push(at: float, item: tuple) -> None:
+            nonlocal seq
+            heapq.heappush(timed, (at, seq, item))
+            seq += 1
 
-        n_deps = {t.tid: len(t.deps) for t in tasks}
-        dependents: dict = {t.tid: [] for t in tasks}
-        for t in tasks:
-            for d in t.deps:
-                dependents[d].append(t.tid)
+        for at, kind, node in self._injected:
+            push(at, ("node", kind, node))
+        initial = list(tasks)
+        for at, batch in self._submissions:
+            if at <= 0.0:
+                initial.extend(batch)
+            else:
+                push(at, ("submit", batch))
+        for at, fn in self._callbacks:
+            push(at, ("control", fn))
 
-        remaining = {t.tid: float(t.work) for t in tasks}
-        scale = {t.tid: max(float(t.work), 1.0) for t in tasks}
-        ready = [t.tid for t in tasks if n_deps[t.tid] == 0]
+        by_id: dict = {}
+        n_deps: dict = {}
+        dependents: dict = {}
+        remaining: dict = {}
+        scale: dict = {}
+        ready: list = []
         running: dict = {}            # tid -> Task (insertion ordered)
         held: list = []               # tasks touching a down node
+        parked: list = []             # preempted tasks awaiting resume
+        frozen: set = set()           # preempted tids (must not run)
         down: set = set()
         done: dict = {}
         events: list = []
         busy = {name: 0.0 for name in self.resources}
         delivered = {name: 0.0 for name in self.resources}
         now = 0.0
+
+        def register(new_tasks) -> None:
+            new_tasks = list(new_tasks)
+            ids = [t.tid for t in new_tasks]
+            batch = set(ids)
+            if len(batch) != len(ids):
+                raise ValueError("duplicate task ids")
+            for t in new_tasks:
+                if t.tid in by_id:
+                    raise ValueError(f"duplicate task ids: {t.tid!r}")
+                for r in t.resources:
+                    if r not in self.resources:
+                        raise KeyError(f"task {t.tid}: unknown resource "
+                                       f"{r}")
+                for d in t.deps:
+                    if d not in by_id and d not in batch:
+                        raise KeyError(f"task {t.tid}: unknown dep {d}")
+            for t in new_tasks:
+                by_id[t.tid] = t
+                dependents.setdefault(t.tid, [])
+                remaining[t.tid] = float(t.work)
+                scale[t.tid] = max(float(t.work), 1.0)
+            for t in new_tasks:
+                nd = 0
+                for d in t.deps:
+                    if d in done:     # dep finished before we arrived
+                        continue
+                    dependents[d].append(t.tid)
+                    nd += 1
+                n_deps[t.tid] = nd
+                if nd == 0:
+                    ready.append(t.tid)
 
         def blocked(t: Task) -> bool:
             """A task is blocked when any node it touches is down: its
@@ -230,11 +343,52 @@ class Engine:
             nonlocal ready
             for tid in ready:
                 t = by_id[tid]
-                if blocked(t):
+                if tid in frozen:
+                    parked.append(tid)
+                elif blocked(t):
                     held.append(tid)
                 else:
                     running[tid] = t
             ready = []
+
+        def preempt(tid: str) -> bool:
+            """Hold ``tid`` with failure semantics: progress resets, the
+            task parks until `resume` (node recovery never re-admits a
+            preempted task — that's the scheduler's call)."""
+            if tid not in by_id:
+                raise KeyError(f"unknown task {tid}")
+            if tid in done:
+                return False
+            frozen.add(tid)
+            if tid in running:
+                del running[tid]
+                remaining[tid] = float(by_id[tid].work)
+                parked.append(tid)
+            elif tid in held:
+                held.remove(tid)
+                remaining[tid] = float(by_id[tid].work)
+                parked.append(tid)
+            return True
+
+        def resume(tid: str) -> bool:
+            if tid not in by_id:
+                raise KeyError(f"unknown task {tid}")
+            if tid in done:
+                return False
+            frozen.discard(tid)
+            if tid in parked:
+                parked.remove(tid)
+                t = by_id[tid]
+                if blocked(t):
+                    held.append(tid)
+                else:
+                    running[tid] = t
+            return True
+
+        ctl = Control(now=lambda: now, submit=register, preempt=preempt,
+                      resume=resume, is_done=lambda tid: tid in done,
+                      call_at=lambda at, fn: push(max(float(at), now),
+                                                  ("control", fn)))
 
         def rates() -> Tuple[Dict[str, float], Dict[str, int]]:
             holds: Dict[str, int] = {}
@@ -254,6 +408,7 @@ class Engine:
             out.update(self._alloc(flows, cap, holds))
             return out, holds
 
+        register(initial)
         admit()
         while running or timed:
             rate, holds = rates() if running else ({}, {})
@@ -275,29 +430,39 @@ class Engine:
                 busy[name] += dt
             now += dt
 
-            # timed node events due now
+            # timed events due now: node failures/recoveries, deferred
+            # submissions, control callbacks — in schedule order
             while timed and timed[0][0] <= now + _EPS:
-                t_ev, _, kind, node = heapq.heappop(timed)
-                events.append(SimEvent(t_ev, kind, node))
-                if kind == EventKind.NODE_FAIL:
-                    down.add(node)
-                    lost = [tid for tid, t in running.items()
-                            if blocked(t)]
-                    for tid in lost:
-                        del running[tid]
-                        remaining[tid] = float(by_id[tid].work)
-                        held.append(tid)
+                t_ev, _, item = heapq.heappop(timed)
+                if item[0] == "node":
+                    _, kind, node = item
+                    events.append(SimEvent(t_ev, kind, node))
+                    if kind == EventKind.NODE_FAIL:
+                        down.add(node)
+                        lost = [tid for tid, t in running.items()
+                                if blocked(t)]
+                        for tid in lost:
+                            del running[tid]
+                            remaining[tid] = float(by_id[tid].work)
+                            held.append(tid)
+                    else:
+                        down.discard(node)
+                        back = [tid for tid in held
+                                if not blocked(by_id[tid])]
+                        for tid in back:
+                            held.remove(tid)
+                            running[tid] = by_id[tid]
+                elif item[0] == "submit":
+                    register(item[1])
                 else:
-                    down.discard(node)
-                    back = [tid for tid in held
-                            if not blocked(by_id[tid])]
-                    for tid in back:
-                        held.remove(tid)
-                        running[tid] = by_id[tid]
+                    item[1](ctl)
 
-            # completions
-            finished = [tid for tid in running
-                        if remaining[tid] <= _EPS * scale[tid]]
+            # completions — ordered by (kind, tid) so same-timestamp
+            # traces are byte-stable across runs and task-list orderings
+            finished = sorted(
+                (tid for tid in running
+                 if remaining[tid] <= _EPS * scale[tid]),
+                key=lambda tid: (by_id[tid].kind.value, tid))
             for tid in finished:
                 t = running.pop(tid)
                 done[tid] = now
@@ -306,13 +471,17 @@ class Engine:
                     n_deps[dep] -= 1
                     if n_deps[dep] == 0:
                         ready.append(dep)
+            for tid in finished:
+                for fn in self._done_listeners:
+                    fn(ctl, tid)
             if ready:
                 admit()
 
-        complete = len(done) == len(tasks)
+        complete = len(done) == len(by_id)
         utilized = {name: (delivered[name] / res.capacity
                            if res.capacity > 0 else 0.0)
                     for name, res in self.resources.items()}
+        events.sort(key=lambda e: (e.time, e.kind.value, e.subject))
         return SimResult(makespan=now, finish_times=done, events=events,
                          busy_time=busy, complete=complete,
                          utilized_time=utilized)

@@ -5,9 +5,18 @@
 terminal table.  When given a `CostComponent` and a mu it also attaches
 the paper's cost/power ratios so a scenario report reads end-to-end:
 "this workload, at this phi, is this much slower and this much cheaper".
+`attach_slo` folds a scheduled run's SLO/energy digests in alongside.
+
+`append_bench_run`/`load_bench_history` manage the append-only benchmark
+history file: every appended run is stamped with a ``schema_version``
+and the git SHA it was measured at, and a version mismatch against the
+on-disk file refuses loudly instead of silently mixing shapes.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import subprocess
 from collections import Counter
 
 from repro.sim.engine import SimResult
@@ -78,6 +87,67 @@ def attach_scores(summary: dict, cost_component, phi: float,
     return summary
 
 
+def attach_slo(summary: dict, slo: dict, energy: dict = None) -> dict:
+    """Attach a scheduled run's SLO digest (`sched.metrics.slo_summary`)
+    and optional energy report to a scenario summary."""
+    summary["slo"] = slo
+    if energy is not None:
+        summary["energy"] = energy
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# Append-only benchmark history (BENCH_sim.json)
+# ---------------------------------------------------------------------------
+
+
+def git_sha(root=None) -> str:
+    """Short git SHA of ``root`` (or cwd), ``"unknown"`` outside a
+    checkout — appended runs record what code produced them."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=str(root) if root else None, capture_output=True,
+            text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def load_bench_history(path, *, schema_version: int) -> dict:
+    """The on-disk history, or a fresh skeleton when ``path`` is absent.
+
+    Raises `ValueError` when the file's ``schema_version`` differs
+    (including legacy files with none) — appending mixed shapes to one
+    history corrupts every downstream reader, so the caller must move
+    the old file aside (or bump their reader) explicitly.
+    """
+    path = pathlib.Path(path)
+    if not path.exists():
+        return {"schema_version": schema_version, "runs": []}
+    hist = json.loads(path.read_text())
+    found = hist.get("schema_version") if isinstance(hist, dict) else None
+    if found != schema_version:
+        raise ValueError(
+            f"{path} has schema_version={found!r} but this writer "
+            f"produces schema_version={schema_version}; refusing to "
+            f"append mixed shapes — move the old file aside or "
+            f"regenerate it")
+    hist.setdefault("runs", [])
+    return hist
+
+
+def append_bench_run(path, run: dict, *, schema_version: int,
+                     sha: str = None) -> dict:
+    """Append ``run`` (stamped with ``git_sha``) to the history at
+    ``path`` and write it back; returns the updated history."""
+    path = pathlib.Path(path)
+    hist = load_bench_history(path, schema_version=schema_version)
+    hist["runs"].append(dict(run, git_sha=sha or git_sha(path.parent)))
+    path.write_text(json.dumps(hist, indent=1))
+    return hist
+
+
 def render(summary: dict) -> str:
     lines = [f"scenario: {summary.get('name', '?')}",
              f"  makespan      {summary['makespan_s']:.4g} s"
@@ -107,4 +177,17 @@ def render(summary: dict) -> str:
         lines.append(f"  phi={sc['phi']}  mu={sc['mu']:.3f}  "
                      f"cost={sc['cost_ratio']:.2f}x  "
                      f"power={sc['power_ratio']:.2f}x")
+    slo = summary.get("slo")
+    if slo:
+        lines.append(
+            f"  slo [{slo['policy']}]  jobs={slo['n_completed']}"
+            f"/{slo['n_jobs']}  p50={slo['p50_jct_s']:.4g} s  "
+            f"p99={slo['p99_jct_s']:.4g} s  "
+            f"delay={slo['mean_queue_delay_s']:.4g} s  "
+            f"goodput={slo['goodput_jobs_per_s']:.4g}/s")
+    en = summary.get("energy")
+    if en:
+        lines.append(
+            f"  energy        {en['energy_per_job']:.4g}/job "
+            f"provisioned  {en['active_energy_per_job']:.4g}/job active")
     return "\n".join(lines)

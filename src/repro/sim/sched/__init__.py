@@ -1,0 +1,52 @@
+"""repro.sim.sched — online cluster scheduler over the event engine.
+
+The simulator's control plane: jobs arrive over time (`arrivals`:
+Poisson or trace-driven streams of `JobTemplate`s wrapping the existing
+workload generators), wait in a queue, get placed rack/role-aware onto
+the finite fabric or preempted by priority (`policies`), and are driven
+through one online `Engine` run via `submit`/`call_at`/`on_task_done`
+(`queue.ClusterScheduler`).  `metrics` turns the per-job lifecycle into
+SLO figures (queueing delay, p50/p99 JCT, goodput) and energy-per-job —
+`SimResult.utilized_time` joined with `core.costmodel` power parameters,
+closing the loop from the paper's Eq. 2 to operational energy.
+
+Quickstart::
+
+    from repro.sim import Fabric, lovelock_cluster
+    from repro.sim.sched import (ClusterScheduler, analytics_template,
+                                 poisson_stream, shuffle_template,
+                                 slo_summary)
+    topo = lovelock_cluster(8, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4,
+                                          oversubscription=2.0))
+    jobs = poisson_stream([analytics_template(4), shuffle_template(2)],
+                          rate=0.12, n_jobs=20, seed=0)
+    out = ClusterScheduler(topo, "pack").run(jobs)
+    print(slo_summary(out))
+"""
+from repro.sim.sched.arrivals import (Job, JobTemplate,
+                                      analytics_template, poisson_stream,
+                                      reference_job_stream,
+                                      shuffle_template, storage_template,
+                                      trace_stream, training_template)
+from repro.sim.sched.policies import (POLICIES, ClusterView, FifoPolicy,
+                                      Preempt, PriorityPreemptPolicy,
+                                      QueuedJob, RackPackPolicy,
+                                      RunningJob, SjfBackfillPolicy,
+                                      Start, make_policy)
+from repro.sim.sched.queue import (ClusterScheduler, JobRecord,
+                                   SchedResult, run_policies)
+from repro.sim.sched.metrics import (energy_comparison, energy_report,
+                                     job_table, percentile, slo_summary)
+
+__all__ = [
+    "Job", "JobTemplate", "analytics_template", "poisson_stream",
+    "reference_job_stream", "shuffle_template", "storage_template",
+    "trace_stream", "training_template",
+    "POLICIES", "ClusterView", "FifoPolicy", "Preempt",
+    "PriorityPreemptPolicy", "QueuedJob", "RackPackPolicy", "RunningJob",
+    "SjfBackfillPolicy", "Start", "make_policy",
+    "ClusterScheduler", "JobRecord", "SchedResult", "run_policies",
+    "energy_comparison", "energy_report", "job_table", "percentile",
+    "slo_summary",
+]

@@ -1,0 +1,194 @@
+"""Job arrival streams: who shows up, when, wanting how many nodes.
+
+A `JobTemplate` wraps one of the `repro.sim.workloads` generators as a
+placeable unit: ``build(topo, nodes, tag)`` instantiates the DAG on the
+nodes a placement policy picked, ``n_nodes`` is the requested footprint,
+``needs_accel`` restricts the eligible pool to accelerator-bearing nodes
+(role-awareness: a training job must not land on a lite-compute node),
+``size_hint`` feeds shortest-job-first ordering and ``priority`` feeds
+preemption.  A `Job` is one arrival of a template at a simulation time.
+
+Two stream builders: `poisson_stream` (exponential interarrivals from a
+seeded `random.Random` — byte-stable across runs and machines) and
+`trace_stream` (explicit ``(time, template)`` pairs, for replaying a
+recorded arrival log).  Both return plain sorted lists of `Job`; feed
+them to `repro.sim.sched.queue.ClusterScheduler`.
+
+The reference templates at the bottom reuse the exact workload shapes
+the repo already tracks (`reference_tenants`, `skewed_analytics_mix`),
+so the online scheduler stresses the same traffic the allocator and
+interference cells do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTemplate:
+    """A placeable job kind.  ``build(topo, nodes, tag)`` returns the
+    task DAG on the placed ``nodes``; task ids must be namespaced by
+    ``tag`` (every `repro.sim.workloads` generator does this)."""
+    name: str
+    build: Callable
+    n_nodes: int
+    size_hint: float = 1.0        # relative service demand, for SJF
+    priority: int = 0             # higher preempts lower
+    tenant: str = ""
+    needs_accel: bool = False
+
+    def __post_init__(self):
+        if self.n_nodes < 1:
+            raise ValueError("n_nodes must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One arrival: a template instance with an id and a submit time."""
+    jid: str
+    template: JobTemplate
+    arrival_s: float
+
+    @property
+    def name(self) -> str:
+        return self.template.name
+
+    @property
+    def n_nodes(self) -> int:
+        return self.template.n_nodes
+
+    @property
+    def priority(self) -> int:
+        return self.template.priority
+
+    @property
+    def tenant(self) -> str:
+        return self.template.tenant or self.template.name
+
+
+def poisson_stream(templates: Sequence[JobTemplate], *, rate: float,
+                   horizon: Optional[float] = None,
+                   n_jobs: Optional[int] = None, seed: int = 0,
+                   weights: Optional[Sequence[float]] = None) -> list:
+    """Poisson arrivals at ``rate`` jobs/s, template drawn per arrival.
+
+    Stop at ``horizon`` seconds or ``n_jobs`` jobs, whichever comes
+    first (at least one must be given).  The seeded `random.Random`
+    makes the stream reproducible across runs, hash seeds and machines —
+    benchmark cells pin ``seed`` so tracked numbers cannot drift.
+    """
+    templates = list(templates)
+    if not templates:
+        raise ValueError("poisson_stream needs >= 1 template")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate!r}")
+    if horizon is None and n_jobs is None:
+        raise ValueError("bound the stream with horizon= or n_jobs=")
+    rng = random.Random(seed)
+    jobs = []
+    t = 0.0
+    while n_jobs is None or len(jobs) < n_jobs:
+        t += rng.expovariate(rate)
+        if horizon is not None and t >= horizon:
+            break
+        tpl = rng.choices(templates, weights=weights)[0]
+        jobs.append(Job(f"j{len(jobs):03d}", tpl, t))
+    return jobs
+
+
+def trace_stream(entries) -> list:
+    """Explicit arrival log: ``[(arrival_s, template), ...]`` (any
+    order) -> sorted `Job` list with stable ids."""
+    ordered = sorted(((float(at), tpl) for at, tpl in entries),
+                     key=lambda e: e[0])
+    return [Job(f"j{i:03d}", tpl, at)
+            for i, (at, tpl) in enumerate(ordered)]
+
+
+# ---------------------------------------------------------------------------
+# Reference templates (same shapes as the tracked bench cells)
+# ---------------------------------------------------------------------------
+
+
+def analytics_template(n_nodes: int = 4, *, skew: float = 0.8,
+                       scale: float = 1.0, priority: int = 0,
+                       name: str = "analytics") -> JobTemplate:
+    """The hot-joiner `analytics_dag` from `skewed_analytics_mix`, sized
+    to ``n_nodes``: the skewed key range turns the placed subset's first
+    node into an incast + fat-egress hotspot."""
+    def build(topo, nodes, tag):
+        from repro.sim.workloads import analytics_dag
+        return analytics_dag(
+            topo, scan_work_per_node=0.25 * scale,
+            shuffle_bytes_per_node=6.0 * scale, join_work_total=2.0 * scale,
+            output_bytes_per_node=2.0 * scale,
+            reduce_work_per_node=0.25 * scale, skew=skew, tag=tag,
+            nodes=nodes)
+    return JobTemplate(name, build, n_nodes, priority=priority,
+                       size_hint=8.25 * scale * n_nodes, tenant=name)
+
+
+def shuffle_template(n_nodes: int = 2, *, scale: float = 1.0,
+                     priority: int = 0,
+                     name: str = "shuffle") -> JobTemplate:
+    """The balanced background shuffle from `skewed_analytics_mix`."""
+    def build(topo, nodes, tag):
+        from repro.sim.workloads import shuffle
+        return shuffle(topo, cpu_work_per_node=0.25 * scale,
+                       bytes_per_node=6.0 * scale, tag=tag, nodes=nodes)
+    return JobTemplate(name, build, n_nodes, priority=priority,
+                       size_hint=6.25 * scale * n_nodes, tenant=name)
+
+
+def training_template(n_nodes: int = 4, *, steps: int = 2,
+                      scale: float = 1.0, priority: int = 0,
+                      name: str = "training") -> JobTemplate:
+    """The network-heavy relative-units training job from
+    `reference_tenants` (0.5 s compute + 3 bytes gradient sync per
+    step), placed on accelerator nodes only."""
+    def build(topo, nodes, tag):
+        from repro.sim.workloads import training_from_trace
+        trace = {"n_devices": len(nodes), "phases": [
+            {"kind": "compute", "flops": 0.5 * scale},
+            {"kind": "collective_phase", "tier": "dcn",
+             "bytes": 3.0 * scale}]}
+        return training_from_trace(topo, trace, steps=steps,
+                                   accel_flops=1.0, hbm_bw=1.0, tag=tag,
+                                   nodes=nodes)
+    return JobTemplate(name, build, n_nodes, priority=priority,
+                       size_hint=3.5 * scale * steps * n_nodes,
+                       tenant=name, needs_accel=True)
+
+
+def reference_job_stream(*, rate: float = 0.45, n_jobs: int = 24,
+                         seed: int = 0) -> list:
+    """The pinned online-scheduling mix: 4-node hot-joiner analytics
+    jobs (2x weight) with 2- and 3-node background shuffles, Poisson at
+    ``rate`` jobs/s.  The mixed footprints fragment a first-fit FIFO
+    placement across racks while rack-aware packing keeps each job
+    inside one ToR — shared by `benchmarks/bench_sim.py`'s
+    ``scheduler_slo`` cell, `examples/cluster_operations.py` and the
+    tests so the tracked p99-JCT numbers cannot drift."""
+    return poisson_stream(
+        [analytics_template(4), shuffle_template(2),
+         shuffle_template(3, name="shuffle3")],
+        rate=rate, n_jobs=n_jobs, seed=seed, weights=[2, 1, 1])
+
+
+def storage_template(n_nodes: int = 2, *, steps: int = 4,
+                     scale: float = 1.0, priority: int = 0,
+                     name: str = "storage") -> JobTemplate:
+    """The `reference_tenants` storage replay: shard reads + streaming
+    checkpoint writes between the placed accelerator nodes and the
+    topology's (shared, never placed) storage nodes."""
+    def build(topo, nodes, tag):
+        from repro.sim.workloads import storage_replay
+        return storage_replay(topo, shard_bytes=2.0 * scale,
+                              ckpt_bytes=4.0 * scale, steps=steps,
+                              ckpt_every=2, compute_s=0.25 * scale,
+                              tag=tag, nodes=nodes)
+    return JobTemplate(name, build, n_nodes, priority=priority,
+                       size_hint=2.5 * scale * steps * n_nodes,
+                       tenant=name, needs_accel=True)

@@ -1,0 +1,296 @@
+"""Placement and queueing policies for the online cluster scheduler.
+
+A policy turns (queue snapshot, cluster snapshot) into an action batch:
+`Start(jid, nodes)` admits a job onto concrete nodes, `Preempt(jid)`
+suspends a running one (the engine resets its in-flight tasks via the
+failure path's hold machinery; the scheduler resumes them later on the
+same nodes).  Policies are pure decision functions — all bookkeeping
+lives in `queue.ClusterScheduler` — so they compose and compare cleanly:
+
+  * `FifoPolicy`        — strict arrival order, first-fit placement,
+                          head-of-line blocking (the baseline every
+                          cluster starts with).
+  * `SjfBackfillPolicy` — the queue head keeps its turn, but smaller
+                          jobs (by ``size_hint``) backfill around a
+                          blocked head.
+  * `RackPackPolicy`    — rack/role-aware packing: prefer a placement
+                          whose every pair of nodes has an empty
+                          `Topology.fabric_path` (single rack — the job
+                          never touches the oversubscribed uplinks);
+                          when a job must span racks, minimize
+                          cross-rack pairs and steer away from uplinks
+                          already carrying cross-rack jobs.
+  * `PriorityPreemptPolicy` — wraps any base policy; a queued job with
+                          strictly higher priority may preempt running
+                          lower-priority jobs to claim their nodes.
+
+Suspended jobs reappear in the queue pinned to their original nodes
+(finished tasks keep their results; in-flight work was reset), so a
+policy resumes them only when that exact node set is free — or, for the
+preemptive policy, by preempting the lower-priority squatters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Start:
+    jid: str
+    nodes: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Preempt:
+    jid: str
+
+
+@dataclasses.dataclass(frozen=True)
+class QueuedJob:
+    """Queue-snapshot row handed to policies."""
+    jid: str
+    name: str
+    n_nodes: int
+    size_hint: float
+    priority: int
+    arrival_s: float
+    needs_accel: bool = False
+    pinned: Optional[tuple] = None    # suspended: must resume on these
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningJob:
+    """Cluster-snapshot row: one admitted, unfinished job."""
+    jid: str
+    nodes: tuple
+    priority: int
+    start_s: float
+
+
+class ClusterView:
+    """Read-only cluster snapshot handed to policies."""
+
+    def __init__(self, topo, occupants: dict, running: dict):
+        self.topo = topo
+        self._occupants = occupants       # node -> jid
+        self.running = running            # jid -> RunningJob
+
+    def is_free(self, node: str) -> bool:
+        return node not in self._occupants
+
+    def eligible(self, qj: QueuedJob) -> list:
+        """Role-aware node pool, in topology order."""
+        return list(self.topo.accelerator_node_names if qj.needs_accel
+                    else self.topo.compute_node_names)
+
+    def uplink_load(self) -> dict:
+        """rack -> number of running jobs spanning that rack's uplink
+        (jobs whose placement crosses racks)."""
+        load: dict = {}
+        for rj in self.running.values():
+            racks = self.topo.racks_of(rj.nodes)
+            if len(racks) > 1:
+                for r in racks:
+                    load[r] = load.get(r, 0) + 1
+        return load
+
+
+class FifoPolicy:
+    """Strict arrival order + first-fit placement (head-of-line blocks)."""
+    name = "fifo"
+    backfill = False
+    preemptive = False
+
+    def order(self, queue: Sequence[QueuedJob]) -> list:
+        return list(queue)                # queue arrives arrival-sorted
+
+    def place(self, qj: QueuedJob, free: list, cluster: ClusterView):
+        """``free`` is the eligible+idle node list in topology order;
+        return the chosen node tuple or None when the job cannot start."""
+        if qj.pinned is not None:
+            ok = all(u in free for u in qj.pinned)
+            return tuple(qj.pinned) if ok else None
+        if len(free) < qj.n_nodes:
+            return None
+        return tuple(free[:qj.n_nodes])
+
+    def schedule(self, queue: Sequence[QueuedJob],
+                 cluster: ClusterView) -> list:
+        acts: list = []
+        taken: set = set()
+        for qj in self.order(queue):
+            free = [u for u in cluster.eligible(qj)
+                    if cluster.is_free(u) and u not in taken]
+            nodes = self.place(qj, free, cluster)
+            if nodes is not None:
+                acts.append(Start(qj.jid, tuple(nodes)))
+                taken.update(nodes)
+            elif not self.backfill:
+                break                     # FIFO: the head blocks the line
+        return acts
+
+
+class SjfBackfillPolicy(FifoPolicy):
+    """Shortest-job-first backfill: the head keeps first claim, smaller
+    jobs fill the gaps a blocked head leaves."""
+    name = "sjf"
+    backfill = True
+
+    def order(self, queue):
+        queue = list(queue)
+        if not queue:
+            return queue
+        return [queue[0]] + sorted(
+            queue[1:], key=lambda q: (q.size_hint, q.arrival_s, q.jid))
+
+
+class RackPackPolicy(FifoPolicy):
+    """Rack/role-aware packing (arrival order, backfill around blocks).
+
+    Candidate placements are scored by `Topology.fabric_path`: the
+    number of node pairs whose path is non-empty (0 for a single-rack
+    placement — such a job never holds an uplink/core resource), then by
+    pressure on uplinks already carrying cross-rack jobs, then best-fit
+    (smallest leftover in the racks used, keeping big holes intact for
+    big jobs).
+    """
+    name = "pack"
+    backfill = True
+
+    def place(self, qj: QueuedJob, free: list, cluster: ClusterView):
+        if qj.pinned is not None:
+            ok = all(u in free for u in qj.pinned)
+            return tuple(qj.pinned) if ok else None
+        n = qj.n_nodes
+        if len(free) < n:
+            return None
+        topo = cluster.topo
+        by_rack: dict = {}
+        for u in free:                    # free is in topology order
+            by_rack.setdefault(topo.rack_of(u), []).append(u)
+        load = cluster.uplink_load()
+
+        candidates = [tuple(avail[:n])
+                      for _, avail in sorted(by_rack.items())
+                      if len(avail) >= n]
+        if not candidates:
+            # must span racks: emptiest racks first (fewest cross-rack
+            # pairs), then the least-loaded uplinks
+            order = sorted(by_rack, key=lambda r: (-len(by_rack[r]),
+                                                   load.get(r, 0), r))
+            span = [u for r in order for u in by_rack[r]]
+            candidates.append(tuple(span[:n]))
+
+        def score(nodes):
+            cross = sum(1 for u in nodes for v in nodes
+                        if u != v and topo.fabric_path(u, v))
+            racks = topo.racks_of(nodes)
+            pressure = (sum(load.get(r, 0) for r in racks) if cross
+                        else 0)
+            leftover = sum(len(by_rack[r]) for r in racks) - n
+            return (cross, pressure, leftover, nodes)
+
+        return min(candidates, key=score)
+
+
+class PriorityPreemptPolicy:
+    """Priority scheduling with preemption over a base policy.
+
+    The queue is served in (priority desc, arrival) order.  When a job
+    with strictly higher priority than some running job cannot be
+    placed, the policy preempts lower-priority victims — cheapest first:
+    lowest priority, then latest started (least progress lost under the
+    engine's reset-on-preempt semantics) — until the base policy can
+    place it on the freed + idle nodes.  Equal priority never preempts,
+    so two jobs cannot ping-pong each other and every admitted job
+    eventually completes (the no-starvation property the tests pin).
+    """
+    preemptive = True
+
+    def __init__(self, base=None):
+        self.base = base if base is not None else RackPackPolicy()
+        self.name = f"preempt+{self.base.name}"
+
+    def schedule(self, queue: Sequence[QueuedJob],
+                 cluster: ClusterView) -> list:
+        queue = sorted(queue, key=lambda q: (-q.priority, q.arrival_s,
+                                             q.jid))
+        acts: list = []
+        taken: set = set()       # nodes claimed by Starts this batch
+        freed: set = set()       # nodes released by Preempts this batch
+        victimized: set = set()
+        for qj in queue:
+            pool = cluster.eligible(qj)
+            free = [u for u in pool
+                    if (cluster.is_free(u) or u in freed)
+                    and u not in taken]
+            nodes = self.base.place(qj, free, cluster)
+            if nodes is None:
+                nodes, victims = self._try_preempt(qj, pool, free,
+                                                   cluster, victimized)
+                if nodes is not None:
+                    for rj in victims:
+                        acts.append(Preempt(rj.jid))
+                        victimized.add(rj.jid)
+                        freed.update(rj.nodes)
+            if nodes is not None:
+                acts.append(Start(qj.jid, tuple(nodes)))
+                taken.update(nodes)
+        return acts
+
+    def _try_preempt(self, qj, pool, free, cluster, victimized):
+        """Victims for ``qj``, or (None, ()) when preemption can't help."""
+        cands = sorted(
+            (rj for rj in cluster.running.values()
+             if rj.priority < qj.priority and rj.jid not in victimized),
+            key=lambda rj: (rj.priority, -rj.start_s, rj.jid))
+        if not cands:
+            return None, ()
+        if qj.pinned is not None:
+            # resume path: every squatter on the pinned nodes must be a
+            # lower-priority victim
+            need = set(qj.pinned) - set(free)
+            victims = [rj for rj in cands if need & set(rj.nodes)]
+            covered = set(free) | {u for rj in victims for u in rj.nodes}
+            if set(qj.pinned) <= covered:
+                return tuple(qj.pinned), victims
+            return None, ()
+        trial = set(free)
+        victims = []
+        for rj in cands:
+            useful = [u for u in rj.nodes if u in pool]
+            if not useful:
+                continue
+            victims.append(rj)
+            trial.update(useful)
+            if len(trial) >= qj.n_nodes:
+                nodes = self.base.place(
+                    qj, [u for u in pool if u in trial], cluster)
+                if nodes is not None:
+                    # drop victims whose nodes the placement doesn't use
+                    used = set(nodes)
+                    victims = [v for v in victims
+                               if used & set(v.nodes)]
+                    return nodes, victims
+        return None, ()
+
+
+def make_policy(name: str):
+    """Policy registry: ``fifo``, ``sjf``, ``pack``, ``preempt`` (=
+    priority preemption over rack packing), ``preempt+fifo``."""
+    table = {
+        "fifo": FifoPolicy,
+        "sjf": SjfBackfillPolicy,
+        "pack": RackPackPolicy,
+        "preempt": PriorityPreemptPolicy,
+        "preempt+fifo": lambda: PriorityPreemptPolicy(FifoPolicy()),
+        "preempt+sjf": lambda: PriorityPreemptPolicy(SjfBackfillPolicy()),
+    }
+    if name not in table:
+        raise KeyError(f"unknown policy {name!r}; "
+                       f"expected one of {sorted(table)}")
+    return table[name]()
+
+
+POLICIES = ("fifo", "sjf", "pack", "preempt")

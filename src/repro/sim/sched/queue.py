@@ -1,0 +1,230 @@
+"""The online scheduling loop: arrivals -> queue -> placement -> engine.
+
+`ClusterScheduler` owns all bookkeeping (queue contents, node occupancy,
+per-job task accounting) and drives one `Engine` run through the
+engine's online hooks: every `Job`'s arrival is a `call_at` control
+callback that enqueues it and asks the policy for an action batch; every
+task completion (`on_task_done`) decrements its job's outstanding count
+and, when a job finishes, frees its nodes and re-runs the policy so
+queued work starts the instant capacity exists.  `Start` actions build
+the job's DAG on the chosen nodes via its template and `Control.submit`
+it mid-run; `Preempt` actions sweep the job's unfinished tasks through
+`Control.preempt` (the failure path's hold/reset machinery), free its
+nodes, and re-queue it pinned to its placement so finished tasks keep
+their results when it resumes.
+
+Everything submitted at t=0 with a policy that admits immediately is
+bit-identical to a batch `Engine.run` of the same DAGs — the
+batch-equivalence invariant `tests/test_sim_sched.py` pins to <1e-6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Union
+
+from repro.sim.sched.arrivals import Job
+from repro.sim.sched.policies import (ClusterView, Preempt, QueuedJob,
+                                      RunningJob, Start, make_policy)
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Lifecycle of one job through the scheduler."""
+    job: Job
+    arrival_s: float
+    start_s: float = math.nan     # first admission (queueing delay ends)
+    finish_s: float = math.nan    # last task completion
+    nodes: tuple = ()             # placement (stable across suspensions)
+    task_ids: tuple = ()
+    preemptions: int = 0
+
+    @property
+    def queue_delay_s(self) -> float:
+        return self.start_s - self.arrival_s
+
+    @property
+    def jct_s(self) -> float:
+        """Job completion time: arrival -> finish (the SLO metric)."""
+        return self.finish_s - self.arrival_s
+
+    @property
+    def completed(self) -> bool:
+        return not math.isnan(self.finish_s)
+
+
+@dataclasses.dataclass
+class SchedResult:
+    """One scheduled run: the engine's `SimResult` plus per-job records
+    (feed to `repro.sim.sched.metrics` for SLO/energy summaries)."""
+    policy: str
+    result: object                # SimResult
+    records: dict                 # jid -> JobRecord
+    topo: object                  # Topology (for the energy join)
+
+    @property
+    def jobs(self) -> list:
+        return sorted(self.records.values(),
+                      key=lambda r: (r.arrival_s, r.job.jid))
+
+
+class ClusterScheduler:
+    """Online scheduler over one topology and one policy.
+
+    ``policy`` is a name from `policies.make_policy` or a policy
+    instance; ``allocator`` picks the engine's rate allocator.  `run`
+    consumes a `Job` list (see `arrivals`) and returns a `SchedResult`.
+    """
+
+    def __init__(self, topo, policy: Union[str, object] = "pack", *,
+                 allocator: str = "waterfill"):
+        self.topo = topo
+        self.policy = (make_policy(policy) if isinstance(policy, str)
+                       else policy)
+        self.allocator = allocator
+
+    def run(self, jobs: Iterable[Job],
+            engine: Optional[object] = None) -> SchedResult:
+        """Schedule ``jobs`` through one engine run.
+
+        Pass ``engine`` to schedule on a pre-configured engine (e.g.
+        with `inject_failure` events).  The scheduler registers control
+        callbacks closed over this run's bookkeeping, so the engine is
+        consumed: re-running or re-scheduling it would replay stale
+        callbacks against finalized records, and is refused."""
+        topo, policy = self.topo, self.policy
+        engine = engine if engine is not None else \
+            topo.engine(self.allocator)
+        if getattr(engine, "_sched_bound", False):
+            raise ValueError(
+                "this engine already carries a scheduler's callbacks "
+                "from a previous run; build a fresh engine per "
+                "scheduled run")
+        engine._sched_bound = True
+        jobs = sorted(jobs, key=lambda j: (j.arrival_s, j.jid))
+        if len({j.jid for j in jobs}) != len(jobs):
+            raise ValueError("duplicate job ids in the arrival stream")
+        for j in jobs:
+            pool = (topo.accelerator_node_names if j.template.needs_accel
+                    else topo.compute_node_names)
+            if j.n_nodes > len(pool):
+                raise ValueError(
+                    f"job {j.jid} ({j.name}) wants {j.n_nodes} nodes but "
+                    f"the topology has only {len(pool)} eligible — it "
+                    f"would starve in the queue forever")
+
+        records = {j.jid: JobRecord(job=j, arrival_s=j.arrival_s)
+                   for j in jobs}
+        pending: list = []        # jids waiting (incl. suspended)
+        suspended: set = set()
+        occupants: dict = {}      # node -> jid
+        running: dict = {}        # jid -> RunningJob
+        owner: dict = {}          # tid -> jid
+        left: dict = {}           # jid -> unfinished task count
+
+        def queue_view() -> list:
+            out = []
+            for jid in sorted(pending,
+                              key=lambda i: (records[i].arrival_s, i)):
+                rec, job = records[jid], records[jid].job
+                out.append(QueuedJob(
+                    jid=jid, name=job.name, n_nodes=job.n_nodes,
+                    size_hint=job.template.size_hint,
+                    priority=job.priority, arrival_s=job.arrival_s,
+                    needs_accel=job.template.needs_accel,
+                    pinned=rec.nodes if jid in suspended else None))
+            return out
+
+        def apply_start(jid: str, nodes: tuple, ctl) -> None:
+            rec = records[jid]
+            if jid in suspended:          # resume on the pinned nodes
+                suspended.discard(jid)
+                for tid in rec.task_ids:
+                    ctl.resume(tid)
+            else:
+                rec.start_s = ctl.now
+                rec.nodes = tuple(nodes)
+                tasks = rec.job.template.build(topo, list(nodes),
+                                               f":{jid}")
+                rec.task_ids = tuple(t.tid for t in tasks)
+                for tid in rec.task_ids:
+                    owner[tid] = jid
+                left[jid] = len(tasks)
+                ctl.submit(tasks)
+            pending.remove(jid)
+            for u in rec.nodes:
+                occupants[u] = jid
+            running[jid] = RunningJob(jid=jid, nodes=rec.nodes,
+                                      priority=rec.job.priority,
+                                      start_s=ctl.now)
+
+        def apply_preempt(jid: str, ctl) -> None:
+            rec = records[jid]
+            for tid in rec.task_ids:
+                ctl.preempt(tid)          # no-op for finished tasks
+            for u in rec.nodes:
+                if occupants.get(u) == jid:
+                    del occupants[u]
+            del running[jid]
+            suspended.add(jid)
+            pending.append(jid)
+            rec.preemptions += 1
+
+        def dispatch(ctl) -> None:
+            # each batch strictly shrinks (pending - starts, running -
+            # preempts), so this loop terminates; iterating lets a
+            # preemption's freed nodes admit further queued work
+            while pending:
+                acts = policy.schedule(queue_view(),
+                                       ClusterView(topo, occupants,
+                                                   running))
+                if not acts:
+                    return
+                for act in acts:
+                    if isinstance(act, Preempt):
+                        apply_preempt(act.jid, ctl)
+                    elif isinstance(act, Start):
+                        apply_start(act.jid, act.nodes, ctl)
+                    else:
+                        raise TypeError(f"policy {policy.name!r} "
+                                        f"returned {act!r}")
+
+        def on_arrival(jid: str):
+            def fire(ctl):
+                pending.append(jid)
+                dispatch(ctl)
+            return fire
+
+        def on_done(ctl, tid: str) -> None:
+            jid = owner.get(tid)
+            if jid is None:
+                return
+            left[jid] -= 1
+            if left[jid]:
+                return
+            rec = records[jid]
+            rec.finish_s = ctl.now
+            for u in rec.nodes:
+                if occupants.get(u) == jid:
+                    del occupants[u]
+            running.pop(jid, None)
+            dispatch(ctl)
+
+        for j in jobs:
+            engine.call_at(j.arrival_s, on_arrival(j.jid))
+        engine.on_task_done(on_done)
+        result = engine.run()
+        return SchedResult(policy=policy.name, result=result,
+                           records=records, topo=topo)
+
+
+def run_policies(topo_factory, jobs, policies=("fifo", "pack"), *,
+                 allocator: str = "waterfill") -> dict:
+    """Run one arrival stream under several policies on fresh topologies;
+    returns ``{policy_name: SchedResult}`` (see
+    `validate.compare_policies` for the summarized comparison)."""
+    out = {}
+    for p in policies:
+        sched = ClusterScheduler(topo_factory(), p, allocator=allocator)
+        out[sched.policy.name] = sched.run(jobs)
+    return out

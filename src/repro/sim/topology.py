@@ -108,6 +108,17 @@ class Topology:
     def rack_of(self, name: str) -> int:
         return self._rack[name]
 
+    def rack_nodes(self, rack: int, names=None) -> list:
+        """Nodes (optionally restricted to ``names``) in ``rack``, in
+        topology order — what a rack-aware placement policy packs."""
+        pool = self.nodes if names is None else names
+        return [u for u in pool if self._rack[u] == rack]
+
+    def racks_of(self, names) -> set:
+        """The set of racks a placement spans; a single-rack placement
+        holds no fabric resources (`fabric_path` is empty intra-rack)."""
+        return {self._rack[u] for u in names}
+
     def _rack_nic_bw(self, rack: int) -> float:
         return sum(n.nic_bw for n in self.nodes.values()
                    if self._rack[n.name] == rack)

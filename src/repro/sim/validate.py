@@ -141,6 +141,38 @@ def compare_allocators(make_topo, build) -> dict:
     return out
 
 
+def compare_policies(make_topo, jobs, policies=("fifo", "pack"), *,
+                     allocator: str = "waterfill") -> dict:
+    """One arrival stream under several scheduling policies.
+
+    ``make_topo()`` builds a fresh topology per run (policies must not
+    share queue state); ``jobs`` is an `arrivals` stream (immutable, so
+    it is reused verbatim).  Returns per-policy `slo_summary` dicts plus
+    ``p99_speedup`` — first policy's p99 JCT over the last's (the
+    FIFO-vs-packing headline when called with the default pair) — and
+    ``scheds`` carrying the raw `SchedResult`s (pop before
+    JSON-serializing).  Every run must complete: a policy that strands
+    an admitted job is a scheduler bug, not a data point.
+    """
+    from repro.sim.sched import run_policies, slo_summary
+
+    out: dict = {"scheds": {}, "slo": {}}
+    names = []
+    for name, sr in run_policies(make_topo, jobs, policies,
+                                 allocator=allocator).items():
+        s = slo_summary(sr)
+        if not s["complete"]:
+            raise RuntimeError(
+                f"policy {name!r} stranded "
+                f"{s['n_jobs'] - s['n_completed']} of {s['n_jobs']} jobs")
+        out["scheds"][name] = sr
+        out["slo"][name] = s
+        names.append(name)
+    out["p99_speedup"] = (out["slo"][names[0]]["p99_jct_s"]
+                          / out["slo"][names[-1]]["p99_jct_s"])
+    return out
+
+
 def simulate_plan(profile: WorkloadProfile, *, n_servers: int = 8,
                   sim_servers: int = 8, **plan_kw):
     """`core.cluster.plan`, scoring phi candidates with the simulator.

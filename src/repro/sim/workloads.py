@@ -37,7 +37,10 @@ detection->eviction loop: simulated per-node step times feed
 All generators return plain lists of `Task`; compose freely before
 `Engine.run`.  When the topology carries a finite `Fabric`, every
 cross-rack flow additionally holds its rack-uplink/core/downlink
-resources.
+resources.  Every generator takes ``nodes=`` to run on a placed subset
+of the topology's compute nodes — the hook `repro.sim.sched` placement
+policies use to pack jobs rack- and role-aware instead of always
+spanning the whole cluster.
 """
 from __future__ import annotations
 
@@ -52,16 +55,41 @@ DEFAULT_ACCEL_FLOPS = 1.97e14     # bf16 FLOP/s
 DEFAULT_HBM_BW = 8.19e11          # bytes/s
 
 
+def _placed(topo: Topology, nodes, *, accel: bool = False,
+            minimum: int = 1, who: str = "workload") -> list:
+    """Resolve a placement: default to the whole eligible pool, verify an
+    explicit subset against it (role-awareness — accelerator jobs must
+    not land on lite-compute or storage nodes)."""
+    pool = (topo.accelerator_node_names if accel
+            else topo.compute_node_names)
+    if nodes is None:
+        nodes = list(pool)
+    else:
+        nodes = list(nodes)
+        unknown = [u for u in nodes if u not in pool]
+        if unknown:
+            kind = "accelerator" if accel else "compute"
+            raise KeyError(f"{who}: {unknown} are not {kind} nodes")
+        if len(set(nodes)) != len(nodes):
+            raise ValueError(f"{who}: duplicate nodes in placement")
+    if len(nodes) < minimum:
+        raise ValueError(f"{who} needs >= {minimum} nodes, "
+                         f"got {len(nodes)}")
+    return nodes
+
+
 def shuffle(topo: Topology, *, cpu_work_per_node: float,
             bytes_per_node: float, tasks_per_node: int = 2,
-            reduce_work_per_node: float = 0.0, tag: str = "") -> list:
-    """Map -> all-to-all exchange -> reduce over every compute node.
+            reduce_work_per_node: float = 0.0, tag: str = "",
+            nodes: Optional[Sequence[str]] = None) -> list:
+    """Map -> all-to-all exchange -> reduce over every compute node (or
+    the placed ``nodes`` subset).
 
     ``bytes_per_node`` is the egress volume per node (bytes that actually
     cross its NIC); each node starts sending as soon as its own map tasks
     finish — no global barrier, like a real pipelined shuffle.
     """
-    nodes = topo.compute_node_names
+    nodes = _placed(topo, nodes, who="shuffle")
     n = len(nodes)
     tasks = []
     maps: dict = {}
@@ -95,7 +123,8 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
                   output_bytes_per_node: float = 0.0,
                   reduce_work_per_node: float = 0.0, skew: float = 0.0,
                   hot: Optional[str] = None, tasks_per_node: int = 2,
-                  tag: str = "") -> list:
+                  tag: str = "",
+                  nodes: Optional[Sequence[str]] = None) -> list:
     """Multi-stage analytics DAG: scan -> partitioned shuffle -> hash
     join -> output shuffle -> reduce.
 
@@ -113,10 +142,8 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
     """
     if not 0.0 <= skew < 1.0:
         raise ValueError(f"skew must be in [0, 1), got {skew!r}")
-    nodes = topo.compute_node_names
+    nodes = _placed(topo, nodes, minimum=2, who="analytics_dag")
     n = len(nodes)
-    if n < 2:
-        raise ValueError("analytics_dag needs >= 2 compute nodes")
     hot = hot or nodes[0]
     if hot not in nodes:
         raise KeyError(f"hot joiner {hot!r} is not a compute node")
@@ -188,14 +215,15 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
 def scatter_gather(topo: Topology, *, request_bytes_total: float,
                    response_bytes_total: float, cpu_work_per_worker: float,
                    root_work: float = 0.0, root: Optional[str] = None,
-                   tag: str = "") -> list:
+                   tag: str = "",
+                   nodes: Optional[Sequence[str]] = None) -> list:
     """Query fan-out: root scatters, workers compute, root gathers.
 
     The gather leg concentrates ``response_bytes_total`` on the root's
     ingress — the incast bottleneck that makes wide fan-outs
     root-NIC-bound regardless of worker count.
     """
-    nodes = topo.compute_node_names
+    nodes = _placed(topo, nodes, minimum=2, who="scatter_gather")
     root = root or nodes[0]
     workers = [u for u in nodes if u != root]
     if not workers:
@@ -232,7 +260,8 @@ def storage_replay(topo: Topology, *, shard_bytes: float,
                    ckpt_bytes: float, steps: int = 1,
                    compute_s: float = 0.0,
                    ckpt_every: Optional[int] = None, failure_model=None,
-                   tag: str = "") -> list:
+                   tag: str = "",
+                   nodes: Optional[Sequence[str]] = None) -> list:
     """Disaggregated storage traffic against `NodeRole.STORAGE` nodes.
 
     Every step, each compute node streams a ``shard_bytes`` dataset shard
@@ -255,7 +284,7 @@ def storage_replay(topo: Topology, *, shard_bytes: float,
             from repro.core.elastic import FailureComponent
             failure_model = FailureComponent()
         ckpt_every = failure_model.ckpt_every
-    compute = topo.accelerator_node_names
+    compute = _placed(topo, nodes, accel=True, who="storage_replay")
     tasks = []
     for i, u in enumerate(compute):
         prev_read = None
@@ -537,8 +566,7 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
 
     # training lives on accelerator-bearing nodes (a lite-compute node's
     # accel resource has zero rate and would stall the step)
-    nodes = (list(nodes) if nodes is not None
-             else topo.accelerator_node_names)
+    nodes = _placed(topo, nodes, accel=True, who="training_from_trace")
     compute_s, coll = _trace_costs(trace, accel_flops, hbm_bw)
     compute_s *= compute_scale
     coll = _rescale_collectives(coll, int(trace.get("n_devices", 0) or 0),

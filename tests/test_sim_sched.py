@@ -1,0 +1,501 @@
+"""Online scheduler (`repro.sim.sched`): batch equivalence of
+`Engine.submit`, deterministic event ordering, queueing/placement
+policies, priority preemption with no-starvation, and SLO/energy
+accounting against the paper's Eq. 2."""
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import costmodel as cm
+from repro.sim import (Engine, EventKind, Fabric, NodeModel, Resource,
+                       Task, Topology, analytics_dag, compare_policies,
+                       load_bench_history, append_bench_run,
+                       lovelock_cluster, multi_tenant, shuffle,
+                       skewed_analytics_mix, traditional_cluster,
+                       training_from_trace)
+from repro.sim.sched import (ClusterScheduler, analytics_template,
+                             energy_comparison, energy_report,
+                             job_table, make_policy, percentile,
+                             poisson_stream, reference_job_stream,
+                             run_policies, shuffle_template,
+                             slo_summary, trace_stream,
+                             training_template)
+
+REL_TRACE = {"n_devices": 8, "phases": [
+    {"kind": "compute", "flops": 0.5},
+    {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+
+
+def _topo(n=8, fabric=True, **kw):
+    fab = Fabric(rack_size=4, oversubscription=2.0,
+                 core_oversubscription=2.0) if fabric else None
+    return lovelock_cluster(n, 1, accel_rate=1.0, fabric=fab, **kw)
+
+
+def _builds():
+    return {
+        "shuffle": lambda t, tag: shuffle(
+            t, cpu_work_per_node=0.5, bytes_per_node=7.0, tag=tag),
+        "analytics_dag": lambda t, tag: analytics_dag(
+            t, scan_work_per_node=0.25, shuffle_bytes_per_node=6.0,
+            join_work_total=2.0, output_bytes_per_node=2.0, skew=0.8,
+            tag=tag),
+        "training": lambda t, tag: training_from_trace(
+            t, REL_TRACE, steps=3, accel_flops=1.0, hbm_bw=1.0,
+            tag=tag),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Engine.submit: batch equivalence + incremental admission
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("allocator", ["waterfill", "progressive"])
+@pytest.mark.parametrize("workload", ["shuffle", "analytics_dag",
+                                      "training"])
+def test_submit_at_zero_matches_batch_run(allocator, workload):
+    """Acceptance: two jobs submitted via submit(at=0) reproduce the
+    concatenated Engine.run to <1e-6 on makespan, per-resource
+    utilized_time and every finish time (both allocators)."""
+    build = _builds()[workload]
+    topo = _topo()
+    batch = topo.engine(allocator).run(build(topo, ":a")
+                                       + build(topo, ":b"))
+    eng = topo.engine(allocator)
+    eng.submit(build(topo, ":a"), at=0.0)
+    eng.submit(build(topo, ":b"), at=0.0)
+    online = eng.run()
+    assert batch.complete and online.complete
+    assert abs(batch.makespan - online.makespan) < 1e-6
+    for r in batch.utilized_time:
+        assert abs(batch.utilized_time[r]
+                   - online.utilized_time[r]) < 1e-6
+    for tid in batch.finish_times:
+        assert abs(batch.finish_times[tid]
+                   - online.finish_times[tid]) < 1e-6
+    assert batch.events == online.events
+
+
+def test_submit_mid_run_joins_simulation():
+    """A DAG submitted at t>0 waits for the clock, then contends with
+    the running work."""
+    topo = _topo(fabric=False)
+    build = _builds()["shuffle"]
+    solo = topo.engine().run(build(topo, ":a")).makespan
+    eng = topo.engine()
+    eng.submit(build(topo, ":a"), at=0.0)
+    eng.submit(build(topo, ":b"), at=solo + 1.0)
+    res = eng.run()
+    assert res.complete
+    # no overlap: the second job runs alone after an idle gap
+    assert res.makespan == pytest.approx(2 * solo + 1.0, rel=1e-9)
+    first_b = min(t for tid, t in res.finish_times.items()
+                  if tid.endswith(":b") or ":b" in tid)
+    assert first_b > solo
+
+
+def test_submit_replayed_on_second_run():
+    topo = _topo(fabric=False)
+    build = _builds()["shuffle"]
+    eng = topo.engine()
+    eng.submit(build(topo, ":a"), at=0.0)
+    eng.submit(build(topo, ":b"), at=2.0)
+    r1, r2 = eng.run(), eng.run()
+    assert r1.makespan == r2.makespan
+    assert r1.events == r2.events
+
+
+def test_submit_unknown_dep_and_duplicate_id_raise():
+    eng = Engine([Resource("r", 1.0)])
+    eng.submit([Task("a", EventKind.COMPUTE, ("r",), 1.0)])
+    eng.submit([Task("a", EventKind.COMPUTE, ("r",), 1.0)], at=1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.run()
+    eng2 = Engine([Resource("r", 1.0)])
+    eng2.submit([Task("b", EventKind.COMPUTE, ("r",), 1.0,
+                      deps=("missing",))])
+    with pytest.raises(KeyError, match="unknown dep"):
+        eng2.run()
+
+
+def test_late_submission_may_depend_on_finished_task():
+    eng = Engine([Resource("r", 1.0)])
+    eng.submit([Task("a", EventKind.COMPUTE, ("r",), 1.0)])
+    eng.submit([Task("b", EventKind.COMPUTE, ("r",), 1.0, deps=("a",))],
+               at=5.0)
+    res = eng.run()
+    assert res.complete
+    assert res.finish_times["a"] == pytest.approx(1.0)
+    assert res.finish_times["b"] == pytest.approx(6.0)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic event ordering (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_event_trace_stable_under_task_list_reordering():
+    """Regression: same DAG fed in a different list order produces a
+    byte-identical event trace — same-timestamp events are ordered by
+    (kind, task id), not by admission accidents."""
+    def run(reverse):
+        topo = _topo()
+        tasks = list(multi_tenant(topo, skewed_analytics_mix()).tasks)
+        if reverse:
+            tasks = tasks[::-1]
+        return topo.engine().run(tasks)
+
+    fwd, rev = run(False), run(True)
+    assert fwd.makespan == rev.makespan
+    assert fwd.events == rev.events
+    assert fwd.finish_times == rev.finish_times
+
+
+def test_same_timestamp_events_sorted_by_kind_then_id():
+    eng = Engine([Resource(f"r{i}", 1.0) for i in range(3)])
+    # three tasks finishing at the same instant, mixed kinds
+    res = eng.run([
+        Task("z", EventKind.COMPUTE, ("r0",), 1.0),
+        Task("m", EventKind.DMA, ("r1",), 1.0),
+        Task("a", EventKind.COMPUTE, ("r2",), 1.0),
+    ])
+    assert [(e.kind, e.subject) for e in res.events] == [
+        (EventKind.COMPUTE, "a"), (EventKind.COMPUTE, "z"),
+        (EventKind.DMA, "m")]
+
+
+# ---------------------------------------------------------------------------
+# Engine preempt/resume (the hold/re-admit machinery, scheduler-driven)
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_resets_progress_and_resume_completes():
+    eng = Engine([Resource("r", 1.0)])
+    eng.submit([Task("a", EventKind.COMPUTE, ("r",), 4.0)])
+
+    def kick(ctl):
+        assert ctl.preempt("a") is True
+
+    def back(ctl):
+        assert ctl.resume("a") is True
+
+    eng.call_at(2.0, kick)     # halfway: 2.0 of 4.0 done, then reset
+    eng.call_at(3.0, back)
+    res = eng.run()
+    assert res.complete
+    # 3.0 suspended start + full 4.0 replay (progress was reset)
+    assert res.finish_times["a"] == pytest.approx(7.0)
+
+
+def test_preempt_finished_task_is_noop_and_unknown_raises():
+    eng = Engine([Resource("r", 1.0)])
+    eng.submit([Task("a", EventKind.COMPUTE, ("r",), 1.0)])
+    seen = {}
+
+    def late(ctl):
+        seen["preempt"] = ctl.preempt("a")
+        seen["resume"] = ctl.resume("a")
+        with pytest.raises(KeyError):
+            ctl.preempt("ghost")
+
+    eng.call_at(2.0, late)
+    res = eng.run()
+    assert res.complete
+    assert seen == {"preempt": False, "resume": False}
+
+
+def test_preempted_task_ignores_node_recovery():
+    """Node recovery re-admits failure-held tasks but never preempted
+    ones — resuming is the scheduler's decision."""
+    eng = Engine([Resource("r", 1.0, node="n")])
+    eng.submit([Task("a", EventKind.COMPUTE, ("r",), 1.0, node="n")])
+    eng.call_at(0.5, lambda ctl: ctl.preempt("a"))
+    eng.inject_failure("n", at=0.6, recover_at=0.8)
+    eng.call_at(2.0, lambda ctl: ctl.resume("a"))
+    res = eng.run()
+    assert res.complete
+    assert res.finish_times["a"] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: policies, placement, preemption
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_runs_all_jobs_and_accounts_lifecycle():
+    jobs = reference_job_stream(n_jobs=10)
+    sr = ClusterScheduler(_topo(), "fifo").run(jobs)
+    s = slo_summary(sr)
+    assert s["complete"] and s["n_completed"] == 10
+    for rec in sr.jobs:
+        assert rec.start_s >= rec.arrival_s - 1e-9
+        assert rec.finish_s > rec.start_s
+        assert len(rec.nodes) == rec.job.n_nodes
+    rows = job_table(sr)
+    assert len(rows) == 10 and rows[0]["jid"] == "j000"
+
+
+def test_sjf_backfills_around_blocked_head():
+    """A whole-cluster job blocks the FIFO head while 2 nodes sit idle;
+    under SJF the small job backfills onto them immediately."""
+    first = shuffle_template(6, scale=2.0, name="wall")
+    big = shuffle_template(8, scale=2.0, name="big")
+    small = shuffle_template(2, scale=0.1, name="small")
+    jobs = trace_stream([(0.0, first), (1.0, big), (1.5, small)])
+    out = run_policies(_topo, jobs, policies=("fifo", "sjf"))
+    fifo_small = next(r for r in out["fifo"].jobs
+                      if r.job.name == "small")
+    sjf_small = next(r for r in out["sjf"].jobs
+                     if r.job.name == "small")
+    assert slo_summary(out["fifo"])["complete"]
+    assert slo_summary(out["sjf"])["complete"]
+    assert sjf_small.jct_s < fifo_small.jct_s
+
+
+def test_pack_places_single_rack_when_possible():
+    """With nic0/nic1 busy, first-fit straddles racks for a 4-node job;
+    rack-aware packing keeps it inside rack 1 (empty fabric_path)."""
+    blocker = shuffle_template(2, scale=3.0, name="blocker")
+    wide = analytics_template(4, name="wide")
+    jobs = trace_stream([(0.0, blocker), (0.5, wide)])
+    out = run_policies(_topo, jobs, policies=("fifo", "pack"))
+    fifo_wide = next(r for r in out["fifo"].jobs
+                     if r.job.name == "wide")
+    pack_wide = next(r for r in out["pack"].jobs
+                     if r.job.name == "wide")
+    assert fifo_wide.nodes == ("nic2", "nic3", "nic4", "nic5")
+    assert pack_wide.nodes == ("nic4", "nic5", "nic6", "nic7")
+    topo = _topo()
+    assert topo.racks_of(pack_wide.nodes) == {1}
+    assert topo.racks_of(fifo_wide.nodes) == {0, 1}
+
+
+def test_pack_beats_fifo_p99_on_reference_stream():
+    """Acceptance: on the pinned skewed-analytics mix with Poisson
+    arrivals on a 2:1 fabric, rack-aware packing beats FIFO on p99 JCT
+    (the CI-gated scheduler_slo cell)."""
+    cmp = compare_policies(_topo, reference_job_stream(),
+                           policies=("fifo", "pack"))
+    assert cmp["slo"]["fifo"]["complete"]
+    assert cmp["slo"]["pack"]["complete"]
+    assert cmp["p99_speedup"] > 1.0
+
+
+def test_priority_preemption_rescues_urgent_job():
+    low = analytics_template(4, scale=4.0, name="batch")
+    hi = analytics_template(4, priority=5, name="urgent")
+    jobs = trace_stream([(0.0, low), (0.0, low), (1.0, hi)])
+    out = run_policies(_topo, jobs, policies=("pack", "preempt"))
+    urgent_wait = {p: next(r for r in sr.jobs
+                           if r.job.name == "urgent").jct_s
+                   for p, sr in out.items()}
+    s = slo_summary(out["preempt+pack"])
+    assert s["complete"]                 # victims resume and finish
+    assert s["preemptions"] >= 1
+    assert urgent_wait["preempt+pack"] < 0.5 * urgent_wait["pack"]
+    victim = max(out["preempt+pack"].jobs,
+                 key=lambda r: r.preemptions)
+    assert victim.preemptions >= 1 and victim.completed
+
+
+def test_equal_priority_never_preempts():
+    tpl = analytics_template(4, priority=1, name="a")
+    jobs = trace_stream([(0.0, tpl), (0.0, tpl), (1.0, tpl)])
+    sr = ClusterScheduler(_topo(), "preempt").run(jobs)
+    s = slo_summary(sr)
+    assert s["complete"] and s["preemptions"] == 0
+
+
+def test_scheduler_refuses_engine_reuse():
+    """The scheduler's callbacks close over one run's bookkeeping; a
+    second scheduled run on the same engine would replay them against
+    finalized records, so it is refused."""
+    topo = _topo()
+    eng = topo.engine()
+    sched = ClusterScheduler(topo, "fifo")
+    jobs = reference_job_stream(n_jobs=3)
+    assert slo_summary(sched.run(jobs, engine=eng))["complete"]
+    with pytest.raises(ValueError, match="fresh engine"):
+        sched.run(jobs, engine=eng)
+
+
+def test_scheduler_on_preconfigured_engine_with_failure():
+    """Scheduling composes with injected node failures: the failure
+    holds/re-admits tasks mid-job and every job still completes."""
+    topo = _topo()
+    eng = topo.engine()
+    eng.inject_failure("nic2", at=3.0, recover_at=6.0)
+    sr = ClusterScheduler(topo, "pack").run(
+        reference_job_stream(n_jobs=6), engine=eng)
+    s = slo_summary(sr)
+    assert s["complete"]
+    assert len(sr.result.events_of(EventKind.NODE_FAIL)) == 1
+
+
+def test_oversized_job_rejected_up_front():
+    jobs = trace_stream([(0.0, shuffle_template(9))])
+    with pytest.raises(ValueError, match="starve"):
+        ClusterScheduler(_topo(), "fifo").run(jobs)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_no_job_starves_under_preemption(seed):
+    """Property (acceptance): random mixed-priority streams under the
+    preemptive policy — every admitted job eventually completes, with a
+    coherent arrival <= start <= finish lifecycle."""
+    import random
+    rng = random.Random(seed)
+    templates = [
+        analytics_template(rng.randint(2, 4),
+                           priority=rng.randint(0, 3),
+                           name=f"dag{i}")
+        for i in range(2)
+    ] + [
+        shuffle_template(rng.randint(2, 6),
+                         priority=rng.randint(0, 3),
+                         scale=rng.uniform(0.2, 2.0),
+                         name=f"shf{i}")
+        for i in range(2)
+    ]
+    jobs = poisson_stream(templates, rate=rng.uniform(0.05, 0.6),
+                          n_jobs=rng.randint(4, 12), seed=seed)
+    policy = rng.choice(["preempt", "preempt+fifo", "fifo", "sjf",
+                         "pack"])
+    sr = ClusterScheduler(_topo(), policy).run(jobs)
+    s = slo_summary(sr)
+    assert s["complete"], (policy, seed)
+    assert sr.result.complete
+    for rec in sr.jobs:
+        assert rec.arrival_s - 1e-9 <= rec.start_s <= rec.finish_s
+
+
+# ---------------------------------------------------------------------------
+# Role-aware placement
+# ---------------------------------------------------------------------------
+
+
+def _role_topo():
+    return Topology(
+        [NodeModel("nic0", "smartnic", 1.0, accel_rate=1.0),
+         NodeModel("nic1", "smartnic", 1.0, accel_rate=1.0),
+         NodeModel("lite0", "smartnic", 1.0, accel_rate=0.0),
+         NodeModel("lite1", "smartnic", 1.0, accel_rate=0.0),
+         NodeModel("st0", "storage", 1.0, accel_rate=0.0, ici_bw=0.0)])
+
+
+def test_training_job_lands_on_accelerator_nodes_only():
+    jobs = trace_stream([(0.0, training_template(2, steps=1))])
+    sr = ClusterScheduler(_role_topo(), "pack").run(jobs)
+    rec = sr.jobs[0]
+    assert slo_summary(sr)["complete"]
+    assert set(rec.nodes) == {"nic0", "nic1"}
+
+
+def test_explicit_bad_placement_rejected_by_generator():
+    topo = _role_topo()
+    with pytest.raises(KeyError, match="not accelerator"):
+        training_from_trace(topo, REL_TRACE, steps=1, accel_flops=1.0,
+                            hbm_bw=1.0, nodes=["nic0", "lite0"])
+
+
+def test_shuffle_on_subset_leaves_other_nodes_idle():
+    topo = _topo(fabric=False)
+    tasks = shuffle(topo, cpu_work_per_node=0.5, bytes_per_node=2.0,
+                    nodes=["nic0", "nic1"])
+    res = topo.engine().run(tasks)
+    assert res.complete
+    assert res.busy_time["nic0:cpu"] > 0
+    for idle in ("nic2", "nic5"):
+        assert res.busy_time[f"{idle}:cpu"] == 0
+        assert res.busy_time[f"{idle}:tx"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO / energy metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert math.isnan(percentile([], 50))
+    with pytest.raises(ValueError):
+        percentile(xs, 101)
+
+
+def test_energy_per_job_matches_eq2_power_ratio():
+    """Acceptance: provisioned energy-per-job on the same stream,
+    traditional n-server cluster vs phi*n Lovelock NICs, reproduces
+    Eq. 2's power_ratio(phi, mu) at the measured mu exactly."""
+    phi = 2
+    jobs = reference_job_stream(n_jobs=10)
+    trad = ClusterScheduler(
+        traditional_cluster(8, cpu_rate=cm.MILAN_SYSTEM_SPEEDUP,
+                            accel_rate=1.0), "pack").run(jobs)
+    lov = ClusterScheduler(
+        lovelock_cluster(8, phi, accel_rate=1.0), "pack").run(jobs)
+    e = energy_comparison(trad, lov, phi=phi)
+    assert e["energy_ratio"] == pytest.approx(e["eq2_power_ratio"],
+                                              rel=1e-12)
+    # energy accounting is self-consistent: active <= provisioned
+    for sr in (trad, lov):
+        rep = energy_report(sr)
+        assert 0.0 < rep["active_energy"] < rep["provisioned_energy"]
+
+
+def test_energy_report_joins_utilized_time_with_power():
+    sr = ClusterScheduler(_topo(4), "fifo").run(
+        reference_job_stream(n_jobs=4))
+    rep = energy_report(sr)
+    n_nodes = 4
+    expected = n_nodes * 1.0 * sr.result.makespan   # smartnic power = 1
+    assert rep["provisioned_energy"] == pytest.approx(expected)
+    assert rep["energy_per_job"] == pytest.approx(expected / 4)
+
+
+def test_node_power_table():
+    assert cm.node_power("server") == cm.P_S
+    assert cm.node_power("smartnic") == 1.0
+    assert cm.node_power("storage") == 1.0
+    with pytest.raises(KeyError):
+        cm.node_power("toaster")
+
+
+# ---------------------------------------------------------------------------
+# Bench history schema guard (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_bench_history_appends_and_stamps(tmp_path):
+    path = tmp_path / "BENCH.json"
+    append_bench_run(path, {"x": 1}, schema_version=2, sha="abc1234")
+    hist = append_bench_run(path, {"x": 2}, schema_version=2,
+                            sha="def5678")
+    assert hist["schema_version"] == 2
+    assert [r["x"] for r in hist["runs"]] == [1, 2]
+    assert [r["git_sha"] for r in hist["runs"]] == ["abc1234",
+                                                    "def5678"]
+
+
+def test_bench_history_refuses_schema_mismatch(tmp_path):
+    path = tmp_path / "BENCH.json"
+    append_bench_run(path, {"x": 1}, schema_version=2, sha="abc")
+    with pytest.raises(ValueError, match="schema_version"):
+        load_bench_history(path, schema_version=3)
+    with pytest.raises(ValueError, match="refusing to append"):
+        append_bench_run(path, {"x": 2}, schema_version=1, sha="abc")
+    # legacy shape (no schema_version at all) is a mismatch too
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text('{"bench": "sim"}')
+    with pytest.raises(ValueError, match="schema_version=None"):
+        load_bench_history(legacy, schema_version=2)
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(KeyError, match="unknown policy"):
+        make_policy("lottery")

@@ -403,3 +403,66 @@ def test_stragglers_reconcile_trace_once_up_front():
     per_sync = [t.work for t in eng_tasks if t.tid.startswith("sync")]
     assert per_sync and all(w == pytest.approx(3.0 * factor)
                             for w in per_sync)
+
+
+# ---------------------------------------------------------------------------
+# scatter_gather: allocator agreement on a fabric + down-node regressions
+# ---------------------------------------------------------------------------
+
+
+def _sg(topo, tag=""):
+    from repro.sim import scatter_gather
+    return scatter_gather(topo, request_bytes_total=0.8,
+                          response_bytes_total=8.0,
+                          cpu_work_per_worker=0.5, tag=tag)
+
+
+def test_scatter_gather_agrees_on_1to1_fabric():
+    """Balanced fan-out requests on a finite 1:1 fabric: both
+    allocators must agree to <1e-6 (the incast is symmetric across
+    responders, so there is no stranded share to reclaim)."""
+    cmp = compare_allocators(
+        lambda: lovelock_cluster(8, 1, accel_rate=1.0,
+                                 fabric=Fabric(rack_size=4)),
+        _sg)
+    assert cmp["speedup"] == pytest.approx(1.0, rel=1e-6)
+
+
+@pytest.mark.parametrize("allocator", ["waterfill", "progressive"])
+def test_scatter_gather_root_fails_mid_gather(allocator):
+    """Regression (PR 3 remote-failure fix, previously only covered for
+    xfer/storage reads): the gather incast holds the root's rx, so a
+    root failure mid-gather must reset every in-flight response and
+    re-admit it on recovery — not freeze the flows at zero rate with
+    partial progress (the old stall)."""
+    topo = lovelock_cluster(8, 1, accel_rate=1.0)
+    base = topo.engine(allocator).run(_sg(topo)).makespan
+    # responses run ~1.3s..9.3s (7 x 8/7 bytes through the root's rx)
+    eng = topo.engine(allocator)
+    eng.inject_failure("nic0", at=5.0, recover_at=6.0)
+    res = eng.run(_sg(topo))
+    assert res.complete, "mid-gather root failure stalled the run"
+    assert len(res.events_of(EventKind.NODE_FAIL)) == 1
+    # all gathered progress was lost: the full incast replays after
+    # recovery, so the run ends at recover + full gather, beyond a
+    # pause-only timeline
+    assert res.makespan > base + 1.0 - 1e-6
+    assert res.makespan == pytest.approx(6.0 + 8.0 + base - 9.3,
+                                         abs=1e-6)
+
+
+@pytest.mark.parametrize("allocator", ["waterfill", "progressive"])
+def test_scatter_gather_worker_fails_mid_request(allocator):
+    """A worker failing mid-scatter holds only its own request flow
+    (root tx + its rx): that request resets and replays after recovery
+    while the other workers' legs proceed."""
+    topo = lovelock_cluster(8, 1, accel_rate=1.0)
+    eng = topo.engine(allocator)
+    eng.inject_failure("nic3", at=0.4, recover_at=1.0)
+    res = eng.run(_sg(topo))
+    assert res.complete, "mid-request worker failure stalled the run"
+    # the failed worker's whole chain replays after recovery, while the
+    # surviving workers' requests finish on the undisturbed timeline
+    assert res.finish_times["req:nic3"] > 1.0
+    assert res.finish_times["resp:nic3"] > res.finish_times["req:nic3"]
+    assert res.finish_times["req:nic1"] < 0.8
