@@ -3,8 +3,9 @@
 The paper's target-application scenarios at a phi sweep, a multi-tenant +
 fabric-contention cell (per-tenant slowdown at 1:1 vs 4:1
 oversubscription), the online-scheduler SLO cell (FIFO vs rack-aware
-packing p99 JCT + energy-per-job), plus the closed-form
-cross-validation:
+packing p99 JCT + energy-per-job), the preemption-checkpointing cell
+(reset vs spill/restore preemption wasted work on the pinned urgent-job
+stream), plus the closed-form cross-validation:
 
     PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
     PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
@@ -33,7 +34,8 @@ from repro.sim import (Fabric, append_bench_run, compare_allocators,
                        simulate_mu, skewed_analytics_mix, summarize,
                        synthetic_trace, trace_from_record,
                        traditional_cluster, training_from_trace)
-from repro.sim.sched import energy_report, reference_job_stream
+from repro.sim.sched import (energy_report, reference_job_stream,
+                             reference_preempt_stream)
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ART = ROOT / "artifacts" / "dryrun"
@@ -215,6 +217,55 @@ def scenario_scheduler_slo():
     }
 
 
+def scenario_preempt_ckpt():
+    """Preemption-checkpointing cell: the pinned `reference_preempt_stream`
+    (reference mix + two urgent mid-stream arrivals that must preempt)
+    on an 8-node 2-rack 2:1-core fabric with two storage nodes,
+    scheduled under reset-semantics priority preemption (``preempt``)
+    vs spill/restore checkpointing preemption (``preempt-ckpt``).
+
+    ``spill_wasted_work_ratio`` (spill wasted work / reset wasted work)
+    must stay strictly below 1.0 — spilling a victim's state to storage
+    and restoring it at resume replays strictly less progress than
+    resetting it — and every spilled byte is charged to the fabric:
+    the storage nodes' ``utilized_time`` is nonzero exactly because of
+    the checkpoint traffic.  CI gates on both.
+
+    Pinned at 8 nodes / 2 racks / 2 storage / seed 0 so the tracked
+    numbers are identical between --smoke and the full sweep."""
+    n_servers = 8
+
+    def make_topo():
+        # rack_size=5: nic0-4 | nic5-7 + both storage nodes — the
+        # 8 compute nodes span exactly 2 racks
+        return lovelock_cluster(
+            n_servers, 1, accel_rate=1.0, storage_nodes=2,
+            fabric=Fabric(rack_size=5, oversubscription=2.0,
+                          core_oversubscription=2.0))
+
+    jobs = reference_preempt_stream()
+    cmp = compare_policies(make_topo, jobs,
+                           policies=("preempt", "preempt-ckpt"))
+    keep = ("p50_jct_s", "p99_jct_s", "preemptions",
+            "spill_preemptions", "wasted_work", "spilled_bytes",
+            "restored_bytes", "storage_residency_byte_s", "complete")
+    spill_sr = cmp["scheds"]["preempt-ckpt+pack"]
+    storage_util = {
+        u: round(max(secs for rname, secs in
+                     spill_sr.result.utilized_time.items()
+                     if rname.startswith(f"{u}:")), 4)
+        for u in spill_sr.topo.storage_node_names}
+    return {
+        "fabric": "2:1 core",
+        "n_jobs": len(jobs),
+        "reset": {k: cmp["slo"]["preempt+pack"][k] for k in keep},
+        "spill": {k: cmp["slo"]["preempt-ckpt+pack"][k] for k in keep},
+        "spill_wasted_work_ratio": round(cmp["wasted_work_ratio"], 4),
+        "spill_p99_speedup": round(cmp["p99_speedup"], 4),
+        "storage_utilized_time_s": storage_util,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -240,6 +291,7 @@ def main():
             "multi_tenant": scenario_multi_tenant(n_servers),
             "analytics_skew": scenario_analytics_skew(),
             "scheduler_slo": scenario_scheduler_slo(),
+            "preempt_ckpt": scenario_preempt_ckpt(),
         },
     }
     bench["wall_s"] = round(time.time() - t0, 3)
@@ -248,9 +300,11 @@ def main():
     worst = max(r["rel_err"] for r in bench["cross_validation"])
     speedup = bench["scenarios"]["analytics_skew"]["waterfill_speedup"]
     p99 = bench["scenarios"]["scheduler_slo"]["packing_p99_speedup"]
+    wratio = bench["scenarios"]["preempt_ckpt"]["spill_wasted_work_ratio"]
     print(f"\nappended to {args.out}  (cross-validation worst rel_err "
           f"{worst:.2e}, water-filling speedup on skewed cell "
           f"{speedup}x, packing p99-JCT speedup {p99}x, "
+          f"spill wasted-work ratio {wratio}, "
           f"wall {bench['wall_s']}s)")
 
 

@@ -2,14 +2,20 @@
 
 Where `cluster_planning.py` picks a phi from static workload profiles,
 this example *operates* the cluster: a Poisson stream of mixed-footprint
-analytics/shuffle jobs (the pinned `reference_job_stream`) arrives at an
-8-node smart-NIC cluster with a 2:1-oversubscribed core, and the online
+analytics/shuffle jobs plus two urgent mid-stream arrivals (the pinned
+`reference_preempt_stream`) arrives at an 8-node smart-NIC cluster with
+a 2:1-oversubscribed core and two storage nodes, and the online
 scheduler (`repro.sim.sched`) queues, places and preempts them under
-four policies — FIFO, shortest-job-first backfill, rack-aware packing,
-and priority preemption over packing.  The table reports the SLO view a
-cluster operator actually sees: p50/p99 job completion time, mean
-queueing delay, goodput, and energy-per-job from the
-`SimResult.utilized_time` x `core.costmodel` power join.
+five policies — FIFO, shortest-job-first backfill, rack-aware packing,
+reset-semantics priority preemption over packing, and checkpointing
+preemption (victims' state spilled to storage and restored at resume).
+The table reports the SLO view a cluster operator actually sees:
+p50/p99 job completion time, goodput, energy-per-job from the
+`SimResult.utilized_time` x `core.costmodel` power join — and the
+preemption economics: urgent-job rescue time,
+preempt/spill counts, and the work replayed because of resets (spill
+preemption drives it to ~0 at the price of checkpoint bytes on the
+fabric).
 
 The second half closes the loop to the paper's §4 energy claim: the
 same job stream served by a traditional server cluster vs the
@@ -21,48 +27,49 @@ the measured traditional/Lovelock ratio checked against Eq. 2's
 """
 from repro.core import costmodel as cm
 from repro.sim import Fabric, lovelock_cluster, traditional_cluster
-from repro.sim.sched import (ClusterScheduler, analytics_template,
-                             energy_comparison, energy_report,
-                             poisson_stream, reference_job_stream,
-                             run_policies, slo_summary)
+from repro.sim.sched import (ClusterScheduler, energy_comparison,
+                             energy_report, reference_job_stream,
+                             reference_preempt_stream, run_policies,
+                             slo_summary)
 
 N_SERVERS = 8
 PHI = 2
 
 
 def make_topo():
+    # rack_size=5: 8 compute nodes in 2 racks, both storage nodes in
+    # rack 1 — the spill/restore target for checkpointing preemption
     return lovelock_cluster(N_SERVERS, 1, accel_rate=1.0,
-                            fabric=Fabric(rack_size=4,
+                            storage_nodes=2,
+                            fabric=Fabric(rack_size=5,
                                           oversubscription=2.0,
                                           core_oversubscription=2.0))
 
 
 def policy_table():
-    jobs = reference_job_stream()
-    # one urgent high-priority job mid-stream shows what preemption buys
-    urgent = poisson_stream([analytics_template(4, priority=5,
-                                                name="urgent")],
-                            rate=1.0, n_jobs=1, seed=7)
-    t_mid = max(j.arrival_s for j in jobs) / 2
-    jobs = jobs + [type(u)(jid="j900", template=u.template,
-                           arrival_s=t_mid) for u in urgent]
+    # the pinned mix + two urgent high-priority jobs mid-stream that
+    # show what preemption buys — and what each recovery flavor costs
+    jobs = reference_preempt_stream()
     print(f"online scheduling on {N_SERVERS} smart-NIC nodes, 2 racks, "
-          f"2:1 core ({len(jobs)} jobs, Poisson arrivals):")
-    print(f"{'policy':>14s} {'p50 JCT':>9s} {'p99 JCT':>9s} "
-          f"{'q-delay':>9s} {'goodput':>9s} {'E/job':>7s} "
-          f"{'urgent JCT':>11s} {'preempts':>8s}")
+          f"2:1 core, 2 storage ({len(jobs)} jobs, Poisson arrivals):")
+    print(f"{'policy':>17s} {'p50 JCT':>9s} {'p99 JCT':>9s} "
+          f"{'goodput':>9s} {'E/job':>7s} {'urgent JCT':>11s} "
+          f"{'preempts':>8s} {'spills':>6s} {'wasted':>7s} "
+          f"{'ckpt B':>7s}")
     for name, sr in run_policies(
             make_topo, jobs,
-            policies=("fifo", "sjf", "pack", "preempt")).items():
+            policies=("fifo", "sjf", "pack", "preempt",
+                      "preempt-ckpt")).items():
         s = slo_summary(sr)
         e = energy_report(sr)
-        urgent_jct = next(r.jct_s for r in sr.jobs
-                          if r.job.name == "urgent")
-        print(f"{name:>14s} {s['p50_jct_s']:8.1f}s {s['p99_jct_s']:8.1f}s "
-              f"{s['mean_queue_delay_s']:8.1f}s "
+        urgent_jct = max(r.jct_s for r in sr.jobs
+                         if r.job.name == "urgent")
+        ckpt_b = s["spilled_bytes"] + s["restored_bytes"]
+        print(f"{name:>17s} {s['p50_jct_s']:8.1f}s {s['p99_jct_s']:8.1f}s "
               f"{s['goodput_jobs_per_s']:8.4f}/s "
               f"{e['energy_per_job']:7.1f} {urgent_jct:10.1f}s "
-              f"{s['preemptions']:8d}")
+              f"{s['preemptions']:8d} {s['spill_preemptions']:6d} "
+              f"{s['wasted_work']:7.2f} {ckpt_b:7.1f}")
 
 
 def energy_loop():

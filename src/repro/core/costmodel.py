@@ -13,6 +13,7 @@ Headline constants from the NVIDIA BlueField-2 white paper [6]:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 # [6] DPU power-efficiency white paper
@@ -44,6 +45,51 @@ def power_ratio(phi: float, mu: float, p_s: float = P_S,
                 p_p: float = 0.0) -> float:
     """Eq. 2: traditional/Lovelock energy.  >1 means Lovelock saves energy."""
     return (p_s + p_p) / (mu * (phi + p_p))
+
+
+# ---------------------------------------------------------------------------
+# Spill/restore cost of preemption (streaming-checkpoint chunk model)
+# ---------------------------------------------------------------------------
+
+# One streaming-checkpoint chunk (§5.3): state is spilled/restored as a
+# stream of fixed chunks so host memory stays O(chunk), not O(model).
+# `core/streaming_checkpoint.py` imports this as its DEFAULT_CHUNK, so
+# the jax checkpointer and the jax-free simulator price the same unit.
+CKPT_CHUNK_BYTES = 64 * 1024 * 1024
+# AdamW resumable state per parameter byte: params + two moments
+ADAMW_STATE_MULTIPLIER = 3.0
+
+
+def checkpoint_state_bytes(param_bytes: float, *,
+                           optimizer_multiplier: float =
+                           ADAMW_STATE_MULTIPLIER,
+                           chunk_bytes: int = CKPT_CHUNK_BYTES) -> float:
+    """Resumable-state size of one training shard under the streaming-
+    checkpoint chunk model: optimizer+params, rounded up to whole
+    chunks (the stream always moves full chunks over the fabric).
+    This is the ``state_bytes`` a preemptable training task declares."""
+    if param_bytes < 0:
+        raise ValueError(f"param_bytes must be >= 0, got {param_bytes!r}")
+    raw = param_bytes * optimizer_multiplier
+    if raw == 0:
+        return 0.0
+    return math.ceil(raw / chunk_bytes) * float(chunk_bytes)
+
+
+def spill_restore_seconds(state_bytes: float, *, bw: float,
+                          restore_bw: Optional[float] = None) -> float:
+    """Lower-bound fabric seconds a spill+restore preemption costs: the
+    state streamed out at ``bw`` and back at ``restore_bw`` (default:
+    the same link).  A preemption policy weighs this against the
+    progress a reset would replay; ``inf`` state (not checkpointable)
+    prices as infinitely expensive, i.e. reset is the only option."""
+    if bw <= 0 or (restore_bw is not None and restore_bw <= 0):
+        raise ValueError("spill/restore bandwidth must be > 0")
+    if not math.isfinite(state_bytes):
+        return math.inf
+    return state_bytes / bw + state_bytes / (restore_bw
+                                             if restore_bw is not None
+                                             else bw)
 
 
 # Relative power draw per simulated node kind (smart NIC = 1.0, the

@@ -36,9 +36,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.costmodel import CKPT_CHUNK_BYTES
+
 Pytree = Any
 
-DEFAULT_CHUNK = 64 * 1024 * 1024
+# one constant for the chunk unit: the jax-free simulator prices
+# preemption spill/restore with the same chunk model (core.costmodel)
+DEFAULT_CHUNK = CKPT_CHUNK_BYTES
 
 
 @dataclasses.dataclass

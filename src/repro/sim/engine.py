@@ -19,7 +19,24 @@ takes every resource on the node offline.  Any task *touching* the down
 node — running on it, or holding one of its resources remotely (a DMA's
 receiver, a storage node mid-read) — loses its progress: remaining work
 resets to full, the task is held, and it is re-admitted once every node
-it touches is back up.
+it touches is back up.  Every such reset is charged to
+`SimResult.wasted_work` (the replayed work-units), so an operator can
+see what failures and preemptions actually cost.
+
+Preemption is *not* a failure: a task whose ``state_bytes`` is finite
+carries a resumable progress snapshot.  `Control.preempt(tid,
+spill_to=node)` parks the task keeping its progress and synthesizes a
+**spill** transfer (``state_bytes`` from the task's node to
+``spill_to`` over the route the engine's ``spill_route`` hook supplies
+— NIC tx/rx plus the fabric path when `Topology` built the engine);
+`Control.resume` synthesizes the **restore** transfer back and
+re-admits the task only once the restore lands, with
+``remaining = remaining-at-preempt``.  With ``state_bytes=inf`` (the
+default) or no ``spill_to``, preemption keeps the old reset semantics
+bit-identically.  Spill/restore bytes ride real DMA tasks, so they
+contend for — and are charged to — NICs and fabric like any other
+traffic, and state parked on a storage node accrues
+`SimResult.storage_residency` byte-seconds until restored.
 
 The engine is **online**: `submit(tasks, at=...)` queues a DAG for
 admission at a future simulation time, so jobs can join a running
@@ -64,13 +81,19 @@ TASK_KINDS = (EventKind.COMPUTE, EventKind.DMA, EventKind.COLLECTIVE_PHASE)
 class Task:
     """One schedulable unit.  ``work`` is ops for compute tasks and bytes
     for DMA / collective phases; ``resources`` are held for its whole
-    runtime; ``node`` is the failure domain."""
+    runtime; ``node`` is the failure domain.  ``state_bytes`` is the
+    size of the task's resumable progress snapshot (optimizer+params for
+    a training step, partial aggregates for an analytics stage):
+    finite means a preempting scheduler may spill the state to a storage
+    node and later restore it instead of replaying; ``inf`` (default)
+    means the task is not checkpointable and preemption resets it."""
     tid: str
     kind: EventKind
     resources: tuple
     work: float
     deps: tuple = ()
     node: str = ""
+    state_bytes: float = math.inf
 
 
 @dataclasses.dataclass
@@ -111,9 +134,23 @@ class SimResult:
     # actually used, which (unlike busy_time) exposes capacity an
     # allocator reclaims or wastes while flows are pinned elsewhere
     utilized_time: dict = dataclasses.field(default_factory=dict)
+    # tid -> work-units of progress thrown away by resets (node failures
+    # and reset-semantics preemptions) and later replayed
+    wasted_work: dict = dataclasses.field(default_factory=dict)
+    # tid -> bytes spilled to / restored from storage on preemption
+    spilled_bytes: dict = dataclasses.field(default_factory=dict)
+    restored_bytes: dict = dataclasses.field(default_factory=dict)
+    # storage node -> byte-seconds of preempted state parked on it
+    # (spill completion until restore completion, or end of run)
+    storage_residency: dict = dataclasses.field(default_factory=dict)
 
     def events_of(self, kind: EventKind) -> list:
         return [e for e in self.events if e.kind == kind]
+
+    @property
+    def total_wasted_work(self) -> float:
+        """Work-units replayed because of resets, summed over tasks."""
+        return sum(self.wasted_work.values())
 
 
 class Control:
@@ -121,12 +158,13 @@ class Control:
     `Engine.on_task_done` callbacks.
 
     Callbacks drive online scheduling: submit new DAGs, preempt a task
-    (its progress resets and it parks until `resume` — the same
-    hold/re-admit machinery node failures use, minus the auto-re-admit
-    on recovery), resume it, or schedule another callback.  `preempt`
-    and `resume` return False for tasks that already finished, so a
-    scheduler can sweep a whole job's task list without racing its
-    completions.
+    (park until `resume` — the same hold/re-admit machinery node
+    failures use, minus the auto-re-admit on recovery), resume it, or
+    schedule another callback.  `preempt` and `resume` return False for
+    tasks that already finished, so a scheduler can sweep a whole job's
+    task list without racing its completions; `preempt` also returns
+    False (a no-op) for a task that is already preempted or whose node
+    is already down — the failure machinery owns it.
     """
 
     def __init__(self, now, submit, preempt, resume, is_done, call_at):
@@ -143,8 +181,13 @@ class Control:
         already-finished tasks)."""
         self._submit(tasks)
 
-    def preempt(self, tid: str) -> bool:
-        return self._preempt(tid)
+    def preempt(self, tid: str, spill_to: Optional[str] = None) -> bool:
+        """Suspend ``tid``.  Without ``spill_to`` (or when the task's
+        ``state_bytes`` is inf) its progress resets — failure semantics.
+        With ``spill_to`` naming a node and finite ``state_bytes``, the
+        progress snapshot survives: a spill DMA streams the state to
+        that node, and `resume` streams it back before re-admission."""
+        return self._preempt(tid, spill_to)
 
     def resume(self, tid: str) -> bool:
         return self._resume(tid)
@@ -210,13 +253,21 @@ _ALLOC_FNS = {"waterfill": water_filling_rates,
 
 class Engine:
     def __init__(self, resources: Iterable[Resource],
-                 allocator: str = "waterfill"):
+                 allocator: str = "waterfill",
+                 spill_route: Optional[Callable[[str, str],
+                                               tuple]] = None):
+        """``spill_route(src_node, dst_node)`` returns the resource
+        names a spill/restore transfer between the two nodes must hold
+        (`Topology.engine` wires it to NIC tx/rx + the fabric path);
+        without it `Control.preempt(..., spill_to=...)` falls back to
+        reset semantics — the engine alone has no route to storage."""
         self.resources = {r.name: r for r in resources}
         if allocator not in _ALLOC_FNS:
             raise ValueError(f"unknown allocator {allocator!r}; "
                              f"expected one of {ALLOCATORS}")
         self.allocator = allocator
         self._alloc = _ALLOC_FNS[allocator]
+        self.spill_route = spill_route
         self._injected: list = []   # (time, EventKind, node), insert order
         self._submissions: list = []   # (time, task tuple), insert order
         self._callbacks: list = []     # (time, fn), insert order
@@ -294,6 +345,19 @@ class Engine:
         busy = {name: 0.0 for name in self.resources}
         delivered = {name: 0.0 for name in self.resources}
         now = 0.0
+        # -- spill/restore bookkeeping (preemption with snapshots) -----
+        wasted: dict = {}             # tid -> work-units lost to resets
+        snapshot: dict = {}           # tid -> remaining work at preempt
+        spill_site: dict = {}         # tid -> (storage node, spill tid)
+        spill_of: dict = {}           # spill xfer tid -> preempted tid
+        restore_of: dict = {}         # restore xfer tid -> preempted tid
+        restoring: set = set()        # preempted tids with restore in flight
+        resident_from: dict = {}      # tid -> spill completion time
+        residency: dict = {}          # storage node -> byte-seconds
+        spilled: dict = {}            # tid -> bytes spilled (cumulative)
+        restored: dict = {}           # tid -> bytes restored (cumulative)
+        synthetic: set = set()        # spill/restore transfer tids
+        xfer_seq = [0]                # synthesized transfer id counter
 
         def register(new_tasks) -> None:
             new_tasks = list(new_tasks)
@@ -351,23 +415,62 @@ class Engine:
                     running[tid] = t
             ready = []
 
-        def preempt(tid: str) -> bool:
-            """Hold ``tid`` with failure semantics: progress resets, the
-            task parks until `resume` (node recovery never re-admits a
-            preempted task — that's the scheduler's call)."""
+        def waste(tid: str) -> None:
+            """Charge the task's in-flight progress as replayed work.
+            Synthesized spill/restore transfers are exempt: their
+            re-sent checkpoint bytes are fabric traffic, not replayed
+            work-units — mixing the two would corrupt the wasted-work
+            metric (and per-job attribution never sees their tids)."""
+            if tid in synthetic:
+                return
+            lost = float(by_id[tid].work) - remaining[tid]
+            if lost > 0:
+                wasted[tid] = wasted.get(tid, 0.0) + lost
+
+        def preempt(tid: str, spill_to: Optional[str] = None) -> bool:
+            """Park ``tid`` until `resume` (node recovery never
+            re-admits a preempted task — that's the scheduler's call).
+            Default semantics reset progress like a failure; with
+            ``spill_to`` and a finite ``state_bytes`` the progress
+            snapshot is kept and the state spilled over the fabric.
+            No-ops returning False: a finished task, a double preempt
+            (already parked), and a task whose node is already down —
+            the failure machinery owns that one.  Preempting a task
+            whose restore is in flight succeeds by re-freezing it: the
+            restore still lands (the state is back on the node), but
+            the task stays parked until the next `resume` instead of
+            re-admitting under a scheduler that just suspended its
+            job."""
             if tid not in by_id:
                 raise KeyError(f"unknown task {tid}")
-            if tid in done:
+            if tid in done or tid in frozen:
+                return False
+            if tid in restoring:
+                frozen.add(tid)
+                return True
+            t = by_id[tid]
+            if tid in held or blocked(t):
                 return False
             frozen.add(tid)
             if tid in running:
                 del running[tid]
-                remaining[tid] = float(by_id[tid].work)
                 parked.append(tid)
-            elif tid in held:
-                held.remove(tid)
-                remaining[tid] = float(by_id[tid].work)
-                parked.append(tid)
+                if (spill_to is not None and self.spill_route is not None
+                        and math.isfinite(t.state_bytes)):
+                    snapshot[tid] = remaining[tid]
+                    sid = f"~spill:{tid}!{xfer_seq[0]}"
+                    xfer_seq[0] += 1
+                    spill_site[tid] = (spill_to, sid)
+                    spill_of[sid] = tid
+                    synthetic.add(sid)
+                    spilled[tid] = spilled.get(tid, 0.0) + t.state_bytes
+                    register([Task(sid, EventKind.DMA,
+                                   tuple(self.spill_route(t.node,
+                                                          spill_to)),
+                                   t.state_bytes, node=t.node)])
+                else:
+                    waste(tid)
+                    remaining[tid] = float(t.work)
             return True
 
         def resume(tid: str) -> bool:
@@ -375,14 +478,36 @@ class Engine:
                 raise KeyError(f"unknown task {tid}")
             if tid in done:
                 return False
+            if tid in restoring:
+                # restore already in flight: un-freeze so its landing
+                # re-admits the task (no second restore needed)
+                frozen.discard(tid)
+                return True
             frozen.discard(tid)
             if tid in parked:
-                parked.remove(tid)
                 t = by_id[tid]
-                if blocked(t):
-                    held.append(tid)
+                if tid in spill_site:
+                    # state lives on storage: stream it back first; the
+                    # task stays parked until the restore lands (the
+                    # restore dep-chains on the spill, so resuming
+                    # before the spill finished is still well-ordered)
+                    site, sid = spill_site[tid]
+                    rid = f"~restore:{tid}!{xfer_seq[0]}"
+                    xfer_seq[0] += 1
+                    restore_of[rid] = tid
+                    synthetic.add(rid)
+                    restoring.add(tid)
+                    restored[tid] = restored.get(tid, 0.0) + t.state_bytes
+                    register([Task(rid, EventKind.DMA,
+                                   tuple(self.spill_route(site, t.node)),
+                                   t.state_bytes, deps=(sid,),
+                                   node=t.node)])
                 else:
-                    running[tid] = t
+                    parked.remove(tid)
+                    if blocked(t):
+                        held.append(tid)
+                    else:
+                        running[tid] = t
             return True
 
         ctl = Control(now=lambda: now, submit=register, preempt=preempt,
@@ -443,6 +568,7 @@ class Engine:
                                 if blocked(t)]
                         for tid in lost:
                             del running[tid]
+                            waste(tid)
                             remaining[tid] = float(by_id[tid].work)
                             held.append(tid)
                     else:
@@ -471,6 +597,30 @@ class Engine:
                     n_deps[dep] -= 1
                     if n_deps[dep] == 0:
                         ready.append(dep)
+                if tid in spill_of:
+                    # spill landed: the state is durable on storage and
+                    # starts accruing residency
+                    resident_from[spill_of.pop(tid)] = now
+                elif tid in restore_of:
+                    # restore landed: close the residency window and
+                    # re-admit the task with its snapshot progress —
+                    # unless it was re-preempted mid-restore, in which
+                    # case the restored state waits parked on its node
+                    # for the next resume
+                    target = restore_of.pop(tid)
+                    restoring.discard(target)
+                    site, _sid = spill_site.pop(target)
+                    tt = by_id[target]
+                    t0 = resident_from.pop(target, now)
+                    residency[site] = (residency.get(site, 0.0)
+                                       + tt.state_bytes * (now - t0))
+                    remaining[target] = snapshot.pop(target)
+                    if target not in frozen:
+                        parked.remove(target)
+                        if blocked(tt):
+                            held.append(target)
+                        else:
+                            running[target] = tt
             for tid in finished:
                 for fn in self._done_listeners:
                     fn(ctl, tid)
@@ -481,7 +631,15 @@ class Engine:
         utilized = {name: (delivered[name] / res.capacity
                            if res.capacity > 0 else 0.0)
                     for name, res in self.resources.items()}
+        # state still parked on storage at the end of the run keeps
+        # accruing residency until the clock stops
+        for tid, t0 in resident_from.items():
+            site, _sid = spill_site[tid]
+            residency[site] = (residency.get(site, 0.0)
+                               + by_id[tid].state_bytes * (now - t0))
         events.sort(key=lambda e: (e.time, e.kind.value, e.subject))
         return SimResult(makespan=now, finish_times=done, events=events,
                          busy_time=busy, complete=complete,
-                         utilized_time=utilized)
+                         utilized_time=utilized, wasted_work=wasted,
+                         spilled_bytes=spilled, restored_bytes=restored,
+                         storage_residency=residency)

@@ -50,7 +50,14 @@ def summarize(result: SimResult, *, name: str = "") -> dict:
             "complete": result.complete,
             "n_tasks": len(result.finish_times),
             "events_by_kind": dict(kinds), "utilization": util,
-            "utilized": utilized}
+            "utilized": utilized,
+            # preemption/failure economics: replayed work, checkpoint
+            # traffic through storage, and parked-state byte-seconds
+            "wasted_work": result.total_wasted_work,
+            "spilled_bytes": sum(result.spilled_bytes.values()),
+            "restored_bytes": sum(result.restored_bytes.values()),
+            "storage_residency_byte_s":
+                sum(result.storage_residency.values())}
 
 
 def per_tenant(result: SimResult, workload) -> dict:
@@ -165,6 +172,15 @@ def render(summary: dict) -> str:
     if uz:
         lines.append("  utilized      " + "  ".join(
             f"{k}={v:.0%}" for k, v in uz.items()))
+    if summary.get("wasted_work"):
+        lines.append(f"  wasted work   {summary['wasted_work']:.4g} "
+                     f"(replayed after resets)")
+    if summary.get("spilled_bytes") or summary.get("restored_bytes"):
+        lines.append(
+            f"  spill/restore {summary.get('spilled_bytes', 0.0):.4g} B "
+            f"out  {summary.get('restored_bytes', 0.0):.4g} B back  "
+            f"residency={summary.get('storage_residency_byte_s', 0.0):.4g}"
+            f" B*s")
     tn = summary.get("tenants")
     if tn:
         for name, row in sorted(tn.items()):
@@ -185,6 +201,12 @@ def render(summary: dict) -> str:
             f"p99={slo['p99_jct_s']:.4g} s  "
             f"delay={slo['mean_queue_delay_s']:.4g} s  "
             f"goodput={slo['goodput_jobs_per_s']:.4g}/s")
+        if slo.get("preemptions") or slo.get("n_rejected"):
+            lines.append(
+                f"      preempts={slo['preemptions']} "
+                f"(spilled {slo.get('spill_preemptions', 0)})  "
+                f"rejected={slo.get('n_rejected', 0)}  "
+                f"wasted={slo.get('wasted_work', 0.0):.4g}")
     en = summary.get("energy")
     if en:
         lines.append(

@@ -27,26 +27,34 @@ Quickstart::
 from repro.sim.sched.arrivals import (Job, JobTemplate,
                                       analytics_template, poisson_stream,
                                       reference_job_stream,
+                                      reference_preempt_stream,
                                       shuffle_template, storage_template,
                                       trace_stream, training_template)
-from repro.sim.sched.policies import (POLICIES, ClusterView, FifoPolicy,
+from repro.sim.sched.policies import (POLICIES,
+                                      CheckpointingPreemptPolicy,
+                                      ClusterView, FifoPolicy,
                                       Preempt, PriorityPreemptPolicy,
                                       QueuedJob, RackPackPolicy,
                                       RunningJob, SjfBackfillPolicy,
                                       Start, make_policy)
 from repro.sim.sched.queue import (ClusterScheduler, JobRecord,
-                                   SchedResult, run_policies)
+                                   SchedResult, best_case_service_s,
+                                   run_policies)
 from repro.sim.sched.metrics import (energy_comparison, energy_report,
-                                     job_table, percentile, slo_summary)
+                                     job_table, percentile, slo_summary,
+                                     tenant_summary)
 
 __all__ = [
     "Job", "JobTemplate", "analytics_template", "poisson_stream",
-    "reference_job_stream", "shuffle_template", "storage_template",
+    "reference_job_stream", "reference_preempt_stream",
+    "shuffle_template", "storage_template",
     "trace_stream", "training_template",
-    "POLICIES", "ClusterView", "FifoPolicy", "Preempt",
+    "POLICIES", "CheckpointingPreemptPolicy", "ClusterView",
+    "FifoPolicy", "Preempt",
     "PriorityPreemptPolicy", "QueuedJob", "RackPackPolicy", "RunningJob",
     "SjfBackfillPolicy", "Start", "make_policy",
-    "ClusterScheduler", "JobRecord", "SchedResult", "run_policies",
+    "ClusterScheduler", "JobRecord", "SchedResult",
+    "best_case_service_s", "run_policies",
     "energy_comparison", "energy_report", "job_table", "percentile",
-    "slo_summary",
+    "slo_summary", "tenant_summary",
 ]

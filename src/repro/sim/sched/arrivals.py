@@ -22,6 +22,7 @@ interference cells do.
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 from typing import Callable, Optional, Sequence
 
@@ -30,7 +31,14 @@ from typing import Callable, Optional, Sequence
 class JobTemplate:
     """A placeable job kind.  ``build(topo, nodes, tag)`` returns the
     task DAG on the placed ``nodes``; task ids must be namespaced by
-    ``tag`` (every `repro.sim.workloads` generator does this)."""
+    ``tag`` (every `repro.sim.workloads` generator does this).
+
+    ``state_bytes`` is the job's *per-node* resumable state (what one
+    node spills to storage when the job is checkpoint-preempted; the
+    builder must give its tasks matching `Task.state_bytes`); inf means
+    preemption resets progress.  ``deadline_s`` is the relative
+    completion deadline an admission-controlled scheduler checks at
+    submit time (inf = no SLO class)."""
     name: str
     build: Callable
     n_nodes: int
@@ -38,6 +46,8 @@ class JobTemplate:
     priority: int = 0             # higher preempts lower
     tenant: str = ""
     needs_accel: bool = False
+    state_bytes: float = math.inf
+    deadline_s: float = math.inf
 
     def __post_init__(self):
         if self.n_nodes < 1:
@@ -112,12 +122,31 @@ def trace_stream(entries) -> list:
 # ---------------------------------------------------------------------------
 
 
+def _scaled_state(state_bytes: float, scale: float) -> float:
+    """A template's per-node resumable state in the job's scale units
+    (inf stays inf: not checkpointable)."""
+    return (state_bytes * scale if math.isfinite(state_bytes)
+            else math.inf)
+
+
+def _gen_state(sb: float):
+    """Template state -> workload-generator ``state_bytes=`` argument
+    (the generators spell 'not checkpointable' as None)."""
+    return sb if math.isfinite(sb) else None
+
+
 def analytics_template(n_nodes: int = 4, *, skew: float = 0.8,
                        scale: float = 1.0, priority: int = 0,
+                       state_bytes: float = 1.0,
+                       deadline_s: float = math.inf,
                        name: str = "analytics") -> JobTemplate:
     """The hot-joiner `analytics_dag` from `skewed_analytics_mix`, sized
     to ``n_nodes``: the skewed key range turns the placed subset's first
-    node into an incast + fat-egress hotspot."""
+    node into an incast + fat-egress hotspot.  ``state_bytes`` is the
+    per-node partial-aggregate state a checkpointing preemption spills
+    (relative units; `math.inf` restores pure reset semantics)."""
+    sb = _scaled_state(state_bytes, scale)
+
     def build(topo, nodes, tag):
         from repro.sim.workloads import analytics_dag
         return analytics_dag(
@@ -125,29 +154,43 @@ def analytics_template(n_nodes: int = 4, *, skew: float = 0.8,
             shuffle_bytes_per_node=6.0 * scale, join_work_total=2.0 * scale,
             output_bytes_per_node=2.0 * scale,
             reduce_work_per_node=0.25 * scale, skew=skew, tag=tag,
-            nodes=nodes)
+            nodes=nodes,
+            state_bytes=_gen_state(sb))
     return JobTemplate(name, build, n_nodes, priority=priority,
-                       size_hint=8.25 * scale * n_nodes, tenant=name)
+                       size_hint=8.25 * scale * n_nodes, tenant=name,
+                       state_bytes=sb, deadline_s=deadline_s)
 
 
 def shuffle_template(n_nodes: int = 2, *, scale: float = 1.0,
-                     priority: int = 0,
+                     priority: int = 0, state_bytes: float = 0.5,
+                     deadline_s: float = math.inf,
                      name: str = "shuffle") -> JobTemplate:
     """The balanced background shuffle from `skewed_analytics_mix`."""
+    sb = _scaled_state(state_bytes, scale)
+
     def build(topo, nodes, tag):
         from repro.sim.workloads import shuffle
         return shuffle(topo, cpu_work_per_node=0.25 * scale,
-                       bytes_per_node=6.0 * scale, tag=tag, nodes=nodes)
+                       bytes_per_node=6.0 * scale, tag=tag, nodes=nodes,
+                       state_bytes=_gen_state(sb))
     return JobTemplate(name, build, n_nodes, priority=priority,
-                       size_hint=6.25 * scale * n_nodes, tenant=name)
+                       size_hint=6.25 * scale * n_nodes, tenant=name,
+                       state_bytes=sb, deadline_s=deadline_s)
 
 
 def training_template(n_nodes: int = 4, *, steps: int = 2,
                       scale: float = 1.0, priority: int = 0,
+                      state_bytes: float = 2.0,
+                      deadline_s: float = math.inf,
                       name: str = "training") -> JobTemplate:
     """The network-heavy relative-units training job from
     `reference_tenants` (0.5 s compute + 3 bytes gradient sync per
-    step), placed on accelerator nodes only."""
+    step), placed on accelerator nodes only.  ``state_bytes`` is the
+    per-node optimizer+params shard a checkpointing preemption spills
+    (relative units; size real traces with
+    `core.costmodel.checkpoint_state_bytes`)."""
+    sb = _scaled_state(state_bytes, scale)
+
     def build(topo, nodes, tag):
         from repro.sim.workloads import training_from_trace
         trace = {"n_devices": len(nodes), "phases": [
@@ -156,10 +199,12 @@ def training_template(n_nodes: int = 4, *, steps: int = 2,
              "bytes": 3.0 * scale}]}
         return training_from_trace(topo, trace, steps=steps,
                                    accel_flops=1.0, hbm_bw=1.0, tag=tag,
-                                   nodes=nodes)
+                                   nodes=nodes,
+                                   state_bytes=_gen_state(sb))
     return JobTemplate(name, build, n_nodes, priority=priority,
                        size_hint=3.5 * scale * steps * n_nodes,
-                       tenant=name, needs_accel=True)
+                       tenant=name, needs_accel=True,
+                       state_bytes=sb, deadline_s=deadline_s)
 
 
 def reference_job_stream(*, rate: float = 0.45, n_jobs: int = 24,
@@ -179,16 +224,52 @@ def reference_job_stream(*, rate: float = 0.45, n_jobs: int = 24,
 
 def storage_template(n_nodes: int = 2, *, steps: int = 4,
                      scale: float = 1.0, priority: int = 0,
+                     state_bytes: float = 0.5,
+                     deadline_s: float = math.inf,
                      name: str = "storage") -> JobTemplate:
     """The `reference_tenants` storage replay: shard reads + streaming
     checkpoint writes between the placed accelerator nodes and the
     topology's (shared, never placed) storage nodes."""
+    sb = _scaled_state(state_bytes, scale)
+
     def build(topo, nodes, tag):
         from repro.sim.workloads import storage_replay
         return storage_replay(topo, shard_bytes=2.0 * scale,
                               ckpt_bytes=4.0 * scale, steps=steps,
                               ckpt_every=2, compute_s=0.25 * scale,
-                              tag=tag, nodes=nodes)
+                              tag=tag, nodes=nodes,
+                              state_bytes=_gen_state(sb))
     return JobTemplate(name, build, n_nodes, priority=priority,
                        size_hint=2.5 * scale * steps * n_nodes,
-                       tenant=name, needs_accel=True)
+                       tenant=name, needs_accel=True,
+                       state_bytes=sb, deadline_s=deadline_s)
+
+
+def reference_preempt_stream(*, rate: float = 0.45, n_jobs: int = 16,
+                             seed: int = 0, urgent_priority: int = 5,
+                             state_bytes: Optional[float] = None) -> list:
+    """The pinned preemption-checkpointing mix: the `reference_job_stream`
+    template blend at ``rate`` jobs/s plus two urgent high-priority
+    4-node analytics jobs dropped mid-stream (at 40% and 70% of the
+    arrival span), each of which must preempt running batch work on a
+    busy cluster.  Scheduling it under reset-semantics ``preempt`` vs
+    spill/restore ``preempt-ckpt`` isolates what checkpointing
+    preemption buys — shared by `benchmarks/bench_sim.py`'s
+    ``preempt_ckpt`` cell, `examples/cluster_operations.py` and the
+    tests so the tracked wasted-work numbers cannot drift.
+
+    ``state_bytes`` overrides every template's per-node state (pass
+    ``math.inf`` to make the whole stream non-checkpointable — the
+    reset-reproduction acceptance check)."""
+    kw = {} if state_bytes is None else {"state_bytes": state_bytes}
+    jobs = poisson_stream(
+        [analytics_template(4, **kw), shuffle_template(2, **kw),
+         shuffle_template(3, name="shuffle3", **kw)],
+        rate=rate, n_jobs=n_jobs, seed=seed, weights=[2, 1, 1])
+    span = max(j.arrival_s for j in jobs)
+    urgent = [Job(f"j9{k:02d}",
+                  analytics_template(4, priority=urgent_priority,
+                                     name="urgent", **kw),
+                  frac * span)
+              for k, frac in enumerate((0.4, 0.7))]
+    return sorted(jobs + urgent, key=lambda j: (j.arrival_s, j.jid))

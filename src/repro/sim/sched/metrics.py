@@ -41,8 +41,15 @@ def percentile(xs, q: float) -> float:
     return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
 
 
+def _job_sum(rec, per_task: dict) -> float:
+    """Sum a SimResult per-task dict (wasted_work, spilled_bytes, ...)
+    over one job's tasks."""
+    return sum(per_task.get(tid, 0.0) for tid in rec.task_ids)
+
+
 def job_table(sr: SchedResult) -> list:
     """Per-job rows, arrival-ordered and JSON-ready."""
+    res = sr.result
     rows = []
     for rec in sr.jobs:
         rows.append({
@@ -52,23 +59,63 @@ def job_table(sr: SchedResult) -> list:
             "start_s": rec.start_s, "finish_s": rec.finish_s,
             "queue_delay_s": rec.queue_delay_s, "jct_s": rec.jct_s,
             "preemptions": rec.preemptions,
+            "spills": rec.spills,
+            "rejected": rec.rejected,
+            "wasted_work": _job_sum(rec, res.wasted_work),
+            "spilled_bytes": _job_sum(rec, res.spilled_bytes),
+            "restored_bytes": _job_sum(rec, res.restored_bytes),
             "nodes": list(rec.nodes),
         })
     return rows
 
 
+def tenant_summary(sr: SchedResult) -> dict:
+    """Per-tenant digest of one scheduled run: job counts, mean JCT,
+    and the preemption-economics columns (wasted/replayed work, bytes
+    spilled to and restored from storage) — who pays for making room."""
+    res = sr.result
+    out: dict = {}
+    for rec in sr.jobs:
+        row = out.setdefault(rec.job.tenant, {
+            "n_jobs": 0, "n_completed": 0, "n_rejected": 0,
+            "preemptions": 0, "spills": 0, "wasted_work": 0.0,
+            "spilled_bytes": 0.0, "restored_bytes": 0.0, "jct_s": []})
+        row["n_jobs"] += 1
+        row["n_completed"] += int(rec.completed)
+        row["n_rejected"] += int(rec.rejected)
+        row["preemptions"] += rec.preemptions
+        row["spills"] += rec.spills
+        row["wasted_work"] += _job_sum(rec, res.wasted_work)
+        row["spilled_bytes"] += _job_sum(rec, res.spilled_bytes)
+        row["restored_bytes"] += _job_sum(rec, res.restored_bytes)
+        if rec.completed:
+            row["jct_s"].append(rec.jct_s)
+    for row in out.values():
+        jct = row.pop("jct_s")
+        row["mean_jct_s"] = sum(jct) / len(jct) if jct else math.nan
+    return out
+
+
 def slo_summary(sr: SchedResult) -> dict:
-    """Tail-latency / goodput digest of one scheduled run."""
+    """Tail-latency / goodput digest of one scheduled run, including
+    the preemption-economics columns: total wasted (replayed) work,
+    bytes spilled/restored through storage, and storage residency
+    byte-seconds.  ``complete`` treats admission-guard rejections as
+    resolved — a shed job is a decision, not a stranded one."""
     recs = sr.jobs
+    res = sr.result
     done = [r for r in recs if r.completed]
+    rejected = [r for r in recs if r.rejected]
     jct = [r.jct_s for r in done]
     delay = [r.queue_delay_s for r in done]
-    makespan = sr.result.makespan
+    makespan = res.makespan
     return {
         "policy": sr.policy,
         "n_jobs": len(recs),
         "n_completed": len(done),
-        "complete": len(done) == len(recs) and sr.result.complete,
+        "n_rejected": len(rejected),
+        "complete": (len(done) + len(rejected) == len(recs)
+                     and res.complete),
         "makespan_s": makespan,
         "p50_jct_s": percentile(jct, 50.0),
         "p99_jct_s": percentile(jct, 99.0),
@@ -78,6 +125,11 @@ def slo_summary(sr: SchedResult) -> dict:
         "goodput_jobs_per_s": (len(done) / makespan if makespan > 0
                                else math.nan),
         "preemptions": sum(r.preemptions for r in recs),
+        "spill_preemptions": sum(r.spills for r in recs),
+        "wasted_work": res.total_wasted_work,
+        "spilled_bytes": sum(res.spilled_bytes.values()),
+        "restored_bytes": sum(res.restored_bytes.values()),
+        "storage_residency_byte_s": sum(res.storage_residency.values()),
     }
 
 

@@ -22,17 +22,32 @@ lives in `queue.ClusterScheduler` — so they compose and compare cleanly:
                           already carrying cross-rack jobs.
   * `PriorityPreemptPolicy` — wraps any base policy; a queued job with
                           strictly higher priority may preempt running
-                          lower-priority jobs to claim their nodes.
+                          lower-priority jobs to claim their nodes
+                          (reset semantics: victims replay in-flight
+                          work).
+  * `CheckpointingPreemptPolicy` — priority preemption that prices the
+                          eviction: per victim it weighs the fabric
+                          cost of spilling+restoring the job's
+                          resumable state to a storage node against the
+                          progress a reset would replay, picks the
+                          cheaper victims first, and issues
+                          ``Preempt(jid, spill=True)`` when spilling
+                          wins — preemption as a priced scheduling
+                          primitive instead of a destructive event.
 
 Suspended jobs reappear in the queue pinned to their original nodes
-(finished tasks keep their results; in-flight work was reset), so a
-policy resumes them only when that exact node set is free — or, for the
-preemptive policy, by preempting the lower-priority squatters.
+(finished tasks keep their results; in-flight work was reset or spilled
+to storage), so a policy resumes them only when that exact node set is
+free — or, for the preemptive policies, by preempting the
+lower-priority squatters.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
+
+from repro.core import costmodel as cm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +58,11 @@ class Start:
 
 @dataclasses.dataclass(frozen=True)
 class Preempt:
+    """Suspend a running job.  ``spill=True`` asks the scheduler to
+    spill the victim's resumable state to a storage node (restore paid
+    at resume) instead of resetting its in-flight progress."""
     jid: str
+    spill: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,20 +80,27 @@ class QueuedJob:
 
 @dataclasses.dataclass(frozen=True)
 class RunningJob:
-    """Cluster-snapshot row: one admitted, unfinished job."""
+    """Cluster-snapshot row: one admitted, unfinished job.
+    ``state_bytes`` is the job's total resumable state (per-node
+    template state x nodes; inf = not checkpointable)."""
     jid: str
     nodes: tuple
     priority: int
     start_s: float
+    state_bytes: float = math.inf
 
 
 class ClusterView:
-    """Read-only cluster snapshot handed to policies."""
+    """Read-only cluster snapshot handed to policies.  ``now`` is the
+    simulation time of the scheduling round — what a cost-aware policy
+    prices a victim's lost progress against."""
 
-    def __init__(self, topo, occupants: dict, running: dict):
+    def __init__(self, topo, occupants: dict, running: dict,
+                 now: float = 0.0):
         self.topo = topo
         self._occupants = occupants       # node -> jid
         self.running = running            # jid -> RunningJob
+        self.now = now
 
     def is_free(self, node: str) -> bool:
         return node not in self._occupants
@@ -231,7 +257,7 @@ class PriorityPreemptPolicy:
                                                    cluster, victimized)
                 if nodes is not None:
                     for rj in victims:
-                        acts.append(Preempt(rj.jid))
+                        acts.append(self._make_preempt(rj, cluster))
                         victimized.add(rj.jid)
                         freed.update(rj.nodes)
             if nodes is not None:
@@ -239,12 +265,21 @@ class PriorityPreemptPolicy:
                 taken.update(nodes)
         return acts
 
+    def _victim_key(self, rj: RunningJob, cluster: ClusterView):
+        """Victim ordering: cheapest first — lowest priority, then
+        latest started (least progress lost under reset semantics)."""
+        return (rj.priority, -rj.start_s, rj.jid)
+
+    def _make_preempt(self, rj: RunningJob,
+                      cluster: ClusterView) -> Preempt:
+        return Preempt(rj.jid)
+
     def _try_preempt(self, qj, pool, free, cluster, victimized):
         """Victims for ``qj``, or (None, ()) when preemption can't help."""
         cands = sorted(
             (rj for rj in cluster.running.values()
              if rj.priority < qj.priority and rj.jid not in victimized),
-            key=lambda rj: (rj.priority, -rj.start_s, rj.jid))
+            key=lambda rj: self._victim_key(rj, cluster))
         if not cands:
             return None, ()
         if qj.pinned is not None:
@@ -276,9 +311,68 @@ class PriorityPreemptPolicy:
         return None, ()
 
 
+class CheckpointingPreemptPolicy(PriorityPreemptPolicy):
+    """Priority preemption that prices the eviction before choosing it.
+
+    For each lower-priority victim candidate it weighs two recoveries:
+
+      * **reset** — the victim replays its in-flight progress, priced
+        as its elapsed runtime ``now - start_s`` (the upper bound on
+        what the engine will re-run);
+      * **spill** — the victim's resumable state (`RunningJob.
+        state_bytes`, the per-node template state summed over its
+        placement) streams to a storage node and back at resume,
+        priced with `core.costmodel.spill_restore_seconds` over the
+        victim's slowest NIC (per-node shards move in parallel).
+
+    Victims are taken cheapest-recovery-first, and each `Preempt`
+    carries ``spill=True`` exactly when spilling is the cheaper side —
+    so a job preempted seconds after starting still resets (nothing
+    worth shipping), while a long-running one keeps its progress for
+    two state transfers.  With ``state_bytes=inf`` on every template
+    (or no storage nodes) the spill price is infinite and the policy
+    reproduces `PriorityPreemptPolicy` bit-identically: the reset cost
+    ``now - start_s`` orders victims exactly like the base's
+    latest-started-first rule.  ``spill_bias`` (> 0, default 1) scales
+    the spill price before the comparison — an operator knob for
+    fabrics where checkpoint traffic is more (or less) welcome than
+    recomputation."""
+    preemptive = True
+
+    def __init__(self, base=None, *, spill_bias: float = 1.0):
+        super().__init__(base)
+        if spill_bias <= 0:
+            raise ValueError(f"spill_bias must be > 0, got {spill_bias!r}")
+        self.spill_bias = spill_bias
+        self.name = f"preempt-ckpt+{self.base.name}"
+
+    def _recovery_cost(self, rj: RunningJob, cluster: ClusterView):
+        """(cost_seconds, spill?) of evicting ``rj`` right now."""
+        reset_cost = max(cluster.now - rj.start_s, 0.0)
+        topo = cluster.topo
+        if not topo.storage_node_names or not rj.nodes:
+            return reset_cost, False
+        bw = min(topo.nodes[u].nic_bw for u in rj.nodes)
+        per_node = rj.state_bytes / len(rj.nodes)
+        spill_cost = self.spill_bias * cm.spill_restore_seconds(
+            per_node, bw=bw)
+        if spill_cost < reset_cost:
+            return spill_cost, True
+        return reset_cost, False
+
+    def _victim_key(self, rj, cluster):
+        cost, _ = self._recovery_cost(rj, cluster)
+        return (rj.priority, cost, rj.jid)
+
+    def _make_preempt(self, rj, cluster):
+        _, spill = self._recovery_cost(rj, cluster)
+        return Preempt(rj.jid, spill=spill)
+
+
 def make_policy(name: str):
     """Policy registry: ``fifo``, ``sjf``, ``pack``, ``preempt`` (=
-    priority preemption over rack packing), ``preempt+fifo``."""
+    priority preemption over rack packing), ``preempt-ckpt`` (=
+    checkpointing preemption over rack packing), ``preempt+fifo``."""
     table = {
         "fifo": FifoPolicy,
         "sjf": SjfBackfillPolicy,
@@ -286,6 +380,9 @@ def make_policy(name: str):
         "preempt": PriorityPreemptPolicy,
         "preempt+fifo": lambda: PriorityPreemptPolicy(FifoPolicy()),
         "preempt+sjf": lambda: PriorityPreemptPolicy(SjfBackfillPolicy()),
+        "preempt-ckpt": CheckpointingPreemptPolicy,
+        "preempt-ckpt+fifo":
+            lambda: CheckpointingPreemptPolicy(FifoPolicy()),
     }
     if name not in table:
         raise KeyError(f"unknown policy {name!r}; "
@@ -293,4 +390,4 @@ def make_policy(name: str):
     return table[name]()
 
 
-POLICIES = ("fifo", "sjf", "pack", "preempt")
+POLICIES = ("fifo", "sjf", "pack", "preempt", "preempt-ckpt")

@@ -9,9 +9,22 @@ and, when a job finishes, frees its nodes and re-runs the policy so
 queued work starts the instant capacity exists.  `Start` actions build
 the job's DAG on the chosen nodes via its template and `Control.submit`
 it mid-run; `Preempt` actions sweep the job's unfinished tasks through
-`Control.preempt` (the failure path's hold/reset machinery), free its
-nodes, and re-queue it pinned to its placement so finished tasks keep
-their results when it resumes.
+`Control.preempt` (the failure path's hold/reset machinery — or, for
+``Preempt(spill=True)``, the spill path: the scheduler picks the
+least-loaded storage node and the engine streams each task's resumable
+state there, restoring it before the job resumes), free its nodes, and
+re-queue it pinned to its placement so finished tasks keep their
+results when it resumes.  The scheduler tracks spilled-state residency
+per storage node (`SchedResult.storage_resident` nominal bytes at end
+of run; byte-seconds come from the engine's
+`SimResult.storage_residency`) and balances spill sites by it.
+
+With ``admission=True`` the scheduler is an SLO gate: a job whose
+template declares a finite ``deadline_s`` is rejected at submit time
+when the deadline is infeasible even on an idle placement
+(``size_hint`` against the best-case service rate of the fastest
+eligible nodes — `best_case_service_s`); rejections are counted in
+`SchedResult` instead of letting a doomed job bloat the queue.
 
 Everything submitted at t=0 with a policy that admits immediately is
 bit-identical to a batch `Engine.run` of the same DAGs — the
@@ -23,9 +36,26 @@ import dataclasses
 import math
 from typing import Iterable, Optional, Union
 
-from repro.sim.sched.arrivals import Job
+from repro.sim.sched.arrivals import Job, JobTemplate
 from repro.sim.sched.policies import (ClusterView, Preempt, QueuedJob,
                                       RunningJob, Start, make_policy)
+
+
+def best_case_service_s(topo, template: JobTemplate) -> float:
+    """Lower bound on the template's service time on an idle cluster:
+    ``size_hint`` (relative work units) over the summed best-case rate
+    of the ``n_nodes`` fastest eligible nodes, where a node's best-case
+    rate is its fastest single resource (cpu/NIC/accelerator) — no
+    placement can beat every resource running at full tilt.  The
+    admission guard compares this against a job's ``deadline_s``: if
+    even the bound misses the deadline, so will reality."""
+    pool = (topo.accelerator_node_names if template.needs_accel
+            else topo.compute_node_names)
+    rates = sorted((max(topo.nodes[u].cpu_rate, topo.nodes[u].nic_bw,
+                        topo.nodes[u].accel_rate) for u in pool),
+                   reverse=True)
+    best = sum(rates[:template.n_nodes])
+    return template.size_hint / best if best > 0 else math.inf
 
 
 @dataclasses.dataclass
@@ -38,6 +68,12 @@ class JobRecord:
     nodes: tuple = ()             # placement (stable across suspensions)
     task_ids: tuple = ()
     preemptions: int = 0
+    # of which: spill-semantics preemptions (nominal — the engine only
+    # moves bytes for the tasks actually running at the sweep; exact
+    # byte counts live in SimResult.spilled_bytes)
+    spills: int = 0
+    spill_site: Optional[str] = None   # storage node holding state now
+    rejected: bool = False        # admission guard refused at submit
 
     @property
     def queue_delay_s(self) -> float:
@@ -52,36 +88,55 @@ class JobRecord:
     def completed(self) -> bool:
         return not math.isnan(self.finish_s)
 
+    @property
+    def state_bytes_total(self) -> float:
+        """Nominal resumable state of the whole job (per-node template
+        state x requested nodes) — what a spill parks on storage."""
+        return self.job.template.state_bytes * self.job.n_nodes
+
 
 @dataclasses.dataclass
 class SchedResult:
     """One scheduled run: the engine's `SimResult` plus per-job records
-    (feed to `repro.sim.sched.metrics` for SLO/energy summaries)."""
+    (feed to `repro.sim.sched.metrics` for SLO/energy summaries).
+    ``storage_resident`` is the nominal spilled-state bytes still
+    parked per storage node when the run ended (normally all zeros —
+    every suspended job resumed and restored)."""
     policy: str
     result: object                # SimResult
     records: dict                 # jid -> JobRecord
     topo: object                  # Topology (for the energy join)
+    storage_resident: dict = dataclasses.field(default_factory=dict)
 
     @property
     def jobs(self) -> list:
         return sorted(self.records.values(),
                       key=lambda r: (r.arrival_s, r.job.jid))
 
+    @property
+    def n_rejected(self) -> int:
+        """Jobs the admission guard refused at submit time."""
+        return sum(1 for r in self.records.values() if r.rejected)
+
 
 class ClusterScheduler:
     """Online scheduler over one topology and one policy.
 
     ``policy`` is a name from `policies.make_policy` or a policy
-    instance; ``allocator`` picks the engine's rate allocator.  `run`
-    consumes a `Job` list (see `arrivals`) and returns a `SchedResult`.
+    instance; ``allocator`` picks the engine's rate allocator;
+    ``admission=True`` turns on the SLO admission guard (jobs with a
+    finite ``deadline_s`` that is infeasible even on an idle placement
+    are rejected at submit time).  `run` consumes a `Job` list (see
+    `arrivals`) and returns a `SchedResult`.
     """
 
     def __init__(self, topo, policy: Union[str, object] = "pack", *,
-                 allocator: str = "waterfill"):
+                 allocator: str = "waterfill", admission: bool = False):
         self.topo = topo
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
         self.allocator = allocator
+        self.admission = admission
 
     def run(self, jobs: Iterable[Job],
             engine: Optional[object] = None) -> SchedResult:
@@ -121,6 +176,7 @@ class ClusterScheduler:
         running: dict = {}        # jid -> RunningJob
         owner: dict = {}          # tid -> jid
         left: dict = {}           # jid -> unfinished task count
+        resident = {u: 0.0 for u in topo.storage_node_names}
 
         def queue_view() -> list:
             out = []
@@ -139,6 +195,11 @@ class ClusterScheduler:
             rec = records[jid]
             if jid in suspended:          # resume on the pinned nodes
                 suspended.discard(jid)
+                if rec.spill_site is not None:
+                    # state streams back from storage before the tasks
+                    # re-admit; the nominal residency moves off the node
+                    resident[rec.spill_site] -= rec.state_bytes_total
+                    rec.spill_site = None
                 for tid in rec.task_ids:
                     ctl.resume(tid)
             else:
@@ -156,12 +217,24 @@ class ClusterScheduler:
                 occupants[u] = jid
             running[jid] = RunningJob(jid=jid, nodes=rec.nodes,
                                       priority=rec.job.priority,
-                                      start_s=ctl.now)
+                                      start_s=ctl.now,
+                                      state_bytes=rec.state_bytes_total)
 
-        def apply_preempt(jid: str, ctl) -> None:
+        def apply_preempt(jid: str, ctl, spill: bool = False) -> None:
             rec = records[jid]
+            site = None
+            # a caller-supplied engine without a spill_route cannot
+            # move state: fall back to reset semantics instead of
+            # booking spills the engine silently downgraded
+            if (spill and resident
+                    and getattr(engine, "spill_route", None) is not None
+                    and math.isfinite(rec.job.template.state_bytes)):
+                # least-resident storage node takes the state (ties in
+                # topology order), so spills spread across the shelf
+                site = min(resident, key=lambda u: (resident[u], u))
             for tid in rec.task_ids:
-                ctl.preempt(tid)          # no-op for finished tasks
+                # no-op for finished tasks / tasks on a down node
+                ctl.preempt(tid, spill_to=site)
             for u in rec.nodes:
                 if occupants.get(u) == jid:
                     del occupants[u]
@@ -169,6 +242,10 @@ class ClusterScheduler:
             suspended.add(jid)
             pending.append(jid)
             rec.preemptions += 1
+            if site is not None:
+                rec.spills += 1
+                rec.spill_site = site
+                resident[site] += rec.state_bytes_total
 
         def dispatch(ctl) -> None:
             # each batch strictly shrinks (pending - starts, running -
@@ -177,12 +254,12 @@ class ClusterScheduler:
             while pending:
                 acts = policy.schedule(queue_view(),
                                        ClusterView(topo, occupants,
-                                                   running))
+                                                   running, now=ctl.now))
                 if not acts:
                     return
                 for act in acts:
                     if isinstance(act, Preempt):
-                        apply_preempt(act.jid, ctl)
+                        apply_preempt(act.jid, ctl, spill=act.spill)
                     elif isinstance(act, Start):
                         apply_start(act.jid, act.nodes, ctl)
                     else:
@@ -191,6 +268,15 @@ class ClusterScheduler:
 
         def on_arrival(jid: str):
             def fire(ctl):
+                rec = records[jid]
+                tpl = rec.job.template
+                if (self.admission and math.isfinite(tpl.deadline_s)
+                        and best_case_service_s(topo, tpl)
+                        > tpl.deadline_s):
+                    # even an idle cluster cannot make the deadline —
+                    # shed the job now instead of queueing a sure miss
+                    rec.rejected = True
+                    return
                 pending.append(jid)
                 dispatch(ctl)
             return fire
@@ -200,10 +286,28 @@ class ClusterScheduler:
             if jid is None:
                 return
             left[jid] -= 1
-            if left[jid]:
-                return
             rec = records[jid]
+            if left[jid]:
+                if jid in suspended:
+                    # only a failure-held task can complete while its
+                    # job is suspended (preempt was a no-op on it and
+                    # node recovery re-admitted it): re-sweep the job
+                    # so its remaining tasks park instead of running
+                    # on nodes the preemptor now owns
+                    for t2 in rec.task_ids:
+                        ctl.preempt(t2, spill_to=rec.spill_site)
+                return
             rec.finish_s = ctl.now
+            if jid in suspended:
+                # the job's last unfinished tasks were failure-held
+                # (engine no-op: the failure machinery owned them) and
+                # node recovery finished the job anyway — take it off
+                # the queue so a later Start cannot resurrect it
+                suspended.discard(jid)
+                pending.remove(jid)
+                if rec.spill_site is not None:
+                    resident[rec.spill_site] -= rec.state_bytes_total
+                    rec.spill_site = None
             for u in rec.nodes:
                 if occupants.get(u) == jid:
                     del occupants[u]
@@ -215,7 +319,8 @@ class ClusterScheduler:
         engine.on_task_done(on_done)
         result = engine.run()
         return SchedResult(policy=policy.name, result=result,
-                           records=records, topo=topo)
+                           records=records, topo=topo,
+                           storage_resident=resident)
 
 
 def run_policies(topo_factory, jobs, policies=("fifo", "pack"), *,

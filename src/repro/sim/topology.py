@@ -154,7 +154,16 @@ class Topology:
         return out
 
     def engine(self, allocator: str = "waterfill") -> Engine:
-        return Engine(self.resources(), allocator=allocator)
+        return Engine(self.resources(), allocator=allocator,
+                      spill_route=self.spill_route)
+
+    def spill_route(self, src: str, dst: str) -> tuple:
+        """Resources a preemption spill/restore transfer holds between
+        two nodes: source NIC egress, destination NIC ingress, and the
+        fabric hops when they sit in different racks — the same path any
+        point-to-point DMA pays, so checkpoint traffic to STORAGE nodes
+        contends with (and is charged like) disaggregation traffic."""
+        return (self.tx(src), self.rx(dst)) + self.fabric_path(src, dst)
 
     # resource-name helpers (keep workload generators typo-proof)
     def cpu(self, name):

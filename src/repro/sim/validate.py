@@ -149,11 +149,18 @@ def compare_policies(make_topo, jobs, policies=("fifo", "pack"), *,
     share queue state); ``jobs`` is an `arrivals` stream (immutable, so
     it is reused verbatim).  Returns per-policy `slo_summary` dicts plus
     ``p99_speedup`` — first policy's p99 JCT over the last's (the
-    FIFO-vs-packing headline when called with the default pair) — and
-    ``scheds`` carrying the raw `SchedResult`s (pop before
-    JSON-serializing).  Every run must complete: a policy that strands
-    an admitted job is a scheduler bug, not a data point.
+    FIFO-vs-packing headline when called with the default pair) —
+    ``wasted_work_ratio`` — last policy's wasted (replayed) work over
+    the first's, the reset-vs-spill preemption score when called with
+    ``("preempt", "preempt-ckpt")`` (< 1.0 means the later policy
+    throws away less progress on the same stream; NaN when the first
+    policy wasted nothing) — and ``scheds`` carrying the raw
+    `SchedResult`s (pop before JSON-serializing).  Every run must
+    complete: a policy that strands an admitted job is a scheduler bug,
+    not a data point.
     """
+    import math
+
     from repro.sim.sched import run_policies, slo_summary
 
     out: dict = {"scheds": {}, "slo": {}}
@@ -170,6 +177,10 @@ def compare_policies(make_topo, jobs, policies=("fifo", "pack"), *,
         names.append(name)
     out["p99_speedup"] = (out["slo"][names[0]]["p99_jct_s"]
                           / out["slo"][names[-1]]["p99_jct_s"])
+    w_first = out["slo"][names[0]]["wasted_work"]
+    w_last = out["slo"][names[-1]]["wasted_work"]
+    out["wasted_work_ratio"] = (w_last / w_first if w_first > 0
+                                else math.nan)
     return out
 
 

@@ -45,6 +45,7 @@ spanning the whole cluster.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 from repro.sim.engine import EventKind, Task
@@ -53,6 +54,14 @@ from repro.sim.topology import Topology
 # TPU v5e-ish defaults for converting trace FLOPs/bytes to device-seconds
 DEFAULT_ACCEL_FLOPS = 1.97e14     # bf16 FLOP/s
 DEFAULT_HBM_BW = 8.19e11          # bytes/s
+
+
+def _sb(state_bytes: Optional[float]) -> float:
+    """Task.state_bytes from a generator's ``state_bytes=`` argument:
+    None means not checkpointable (inf — preemption resets, today's
+    semantics); a finite value is the resumable snapshot a preempting
+    scheduler may spill to a storage node instead of replaying."""
+    return math.inf if state_bytes is None else float(state_bytes)
 
 
 def _placed(topo: Topology, nodes, *, accel: bool = False,
@@ -81,15 +90,22 @@ def _placed(topo: Topology, nodes, *, accel: bool = False,
 def shuffle(topo: Topology, *, cpu_work_per_node: float,
             bytes_per_node: float, tasks_per_node: int = 2,
             reduce_work_per_node: float = 0.0, tag: str = "",
-            nodes: Optional[Sequence[str]] = None) -> list:
+            nodes: Optional[Sequence[str]] = None,
+            state_bytes: Optional[float] = None) -> list:
     """Map -> all-to-all exchange -> reduce over every compute node (or
     the placed ``nodes`` subset).
 
     ``bytes_per_node`` is the egress volume per node (bytes that actually
     cross its NIC); each node starts sending as soon as its own map tasks
     finish — no global barrier, like a real pipelined shuffle.
+
+    ``state_bytes`` (optional) marks the stages checkpointable: a
+    map/reduce task's partial aggregates — and an exchange leg's
+    received-so-far buffer cursor — of that size can be spilled to a
+    storage node on preemption instead of being recomputed or re-sent.
     """
     nodes = _placed(topo, nodes, who="shuffle")
+    sb = _sb(state_bytes)
     n = len(nodes)
     tasks = []
     maps: dict = {}
@@ -97,7 +113,8 @@ def shuffle(topo: Topology, *, cpu_work_per_node: float,
         maps[u] = tuple(f"map{tag}:{u}:{i}" for i in range(tasks_per_node))
         for tid in maps[u]:
             tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
-                              cpu_work_per_node / tasks_per_node, node=u))
+                              cpu_work_per_node / tasks_per_node, node=u,
+                              state_bytes=sb))
     inbound: dict = {v: [] for v in nodes}
     if n > 1:
         per_peer = bytes_per_node / (n - 1)
@@ -109,12 +126,12 @@ def shuffle(topo: Topology, *, cpu_work_per_node: float,
                 inbound[v].append(tid)
                 res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
                 tasks.append(Task(tid, EventKind.DMA, res, per_peer,
-                                  deps=maps[u], node=u))
+                                  deps=maps[u], node=u, state_bytes=sb))
     for v in nodes:
         deps = tuple(inbound[v]) or maps[v]
         tasks.append(Task(f"reduce{tag}:{v}", EventKind.COMPUTE,
                           (topo.cpu(v),), reduce_work_per_node, deps=deps,
-                          node=v))
+                          node=v, state_bytes=sb))
     return tasks
 
 
@@ -124,7 +141,8 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
                   reduce_work_per_node: float = 0.0, skew: float = 0.0,
                   hot: Optional[str] = None, tasks_per_node: int = 2,
                   tag: str = "",
-                  nodes: Optional[Sequence[str]] = None) -> list:
+                  nodes: Optional[Sequence[str]] = None,
+                  state_bytes: Optional[float] = None) -> list:
     """Multi-stage analytics DAG: scan -> partitioned shuffle -> hash
     join -> output shuffle -> reduce.
 
@@ -139,10 +157,16 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
     longer and then emits proportionally more of the
     ``output_bytes_per_node``-per-node second shuffle (its egress
     becomes the hot tx flow) before the final balanced reduce.
+
+    ``state_bytes`` (optional) marks the stages checkpointable: scan
+    cursors, hash-table partials, partial aggregates and the exchange
+    legs' received-so-far buffers of that size can be spilled on
+    preemption instead of being recomputed or re-sent.
     """
     if not 0.0 <= skew < 1.0:
         raise ValueError(f"skew must be in [0, 1), got {skew!r}")
     nodes = _placed(topo, nodes, minimum=2, who="analytics_dag")
+    sb = _sb(state_bytes)
     n = len(nodes)
     hot = hot or nodes[0]
     if hot not in nodes:
@@ -159,7 +183,7 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
         for tid in scans[u]:
             tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
                               scan_work_per_node / tasks_per_node,
-                              node=u))
+                              node=u, state_bytes=sb))
 
     # stage 1: partition both relations by join key (pipelined: a
     # sender starts as soon as its own scans finish)
@@ -176,7 +200,7 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
             received[v] += nbytes
             res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
             tasks.append(Task(tid, EventKind.DMA, res, nbytes,
-                              deps=scans[u], node=u))
+                              deps=scans[u], node=u, state_bytes=sb))
 
     # stage 2: per-joiner hash join, work proportional to received bytes
     total_recv = sum(received.values())
@@ -186,7 +210,8 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
         joins[v] = f"join{tag}:{v}"
         tasks.append(Task(joins[v], EventKind.COMPUTE, (topo.cpu(v),),
                           join_work_total * frac,
-                          deps=tuple(inbound[v]) + scans[v], node=v))
+                          deps=tuple(inbound[v]) + scans[v], node=v,
+                          state_bytes=sb))
 
     # stage 3: output shuffle — join output scales with join input, so
     # the hot joiner's egress is the fat flow; spread evenly over peers
@@ -203,12 +228,14 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
                 out_in[w].append(tid)
                 res = (topo.tx(v), topo.rx(w)) + topo.fabric_path(v, w)
                 tasks.append(Task(tid, EventKind.DMA, res, per_peer,
-                                  deps=(joins[v],), node=v))
+                                  deps=(joins[v],), node=v,
+                                  state_bytes=sb))
 
     for w in nodes:
         tasks.append(Task(f"reduce{tag}:{w}", EventKind.COMPUTE,
                           (topo.cpu(w),), reduce_work_per_node,
-                          deps=tuple(out_in[w]), node=w))
+                          deps=tuple(out_in[w]), node=w,
+                          state_bytes=sb))
     return tasks
 
 
@@ -216,14 +243,17 @@ def scatter_gather(topo: Topology, *, request_bytes_total: float,
                    response_bytes_total: float, cpu_work_per_worker: float,
                    root_work: float = 0.0, root: Optional[str] = None,
                    tag: str = "",
-                   nodes: Optional[Sequence[str]] = None) -> list:
+                   nodes: Optional[Sequence[str]] = None,
+                   state_bytes: Optional[float] = None) -> list:
     """Query fan-out: root scatters, workers compute, root gathers.
 
     The gather leg concentrates ``response_bytes_total`` on the root's
     ingress — the incast bottleneck that makes wide fan-outs
-    root-NIC-bound regardless of worker count.
+    root-NIC-bound regardless of worker count.  ``state_bytes``
+    (optional) marks the worker/aggregation compute checkpointable.
     """
     nodes = _placed(topo, nodes, minimum=2, who="scatter_gather")
+    sb = _sb(state_bytes)
     root = root or nodes[0]
     workers = [u for u in nodes if u != root]
     if not workers:
@@ -240,14 +270,16 @@ def scatter_gather(topo: Topology, *, request_bytes_total: float,
                           + topo.fabric_path(root, w),
                           request_bytes_total / len(workers), node=root))
         tasks.append(Task(wk, EventKind.COMPUTE, (topo.cpu(w),),
-                          cpu_work_per_worker, deps=(req,), node=w))
+                          cpu_work_per_worker, deps=(req,), node=w,
+                          state_bytes=sb))
         tasks.append(Task(rp, EventKind.DMA,
                           (topo.tx(w), topo.rx(root))
                           + topo.fabric_path(w, root),
                           response_bytes_total / len(workers), deps=(wk,),
                           node=w))
     tasks.append(Task(f"agg{tag}", EventKind.COMPUTE, (topo.cpu(root),),
-                      root_work, deps=tuple(resp), node=root))
+                      root_work, deps=tuple(resp), node=root,
+                      state_bytes=sb))
     return tasks
 
 
@@ -261,7 +293,8 @@ def storage_replay(topo: Topology, *, shard_bytes: float,
                    compute_s: float = 0.0,
                    ckpt_every: Optional[int] = None, failure_model=None,
                    tag: str = "",
-                   nodes: Optional[Sequence[str]] = None) -> list:
+                   nodes: Optional[Sequence[str]] = None,
+                   state_bytes: Optional[float] = None) -> list:
     """Disaggregated storage traffic against `NodeRole.STORAGE` nodes.
 
     Every step, each compute node streams a ``shard_bytes`` dataset shard
@@ -285,6 +318,7 @@ def storage_replay(topo: Topology, *, shard_bytes: float,
             failure_model = FailureComponent()
         ckpt_every = failure_model.ckpt_every
     compute = _placed(topo, nodes, accel=True, who="storage_replay")
+    sb = _sb(state_bytes)
     tasks = []
     for i, u in enumerate(compute):
         prev_read = None
@@ -305,7 +339,8 @@ def storage_replay(topo: Topology, *, shard_bytes: float,
             pid = f"proc{tag}:{u}:{s}"
             pdeps = (rid,) + ((prev_proc,) if prev_proc else ())
             tasks.append(Task(pid, EventKind.COMPUTE, (topo.accel(u),),
-                              compute_s, deps=pdeps, node=u))
+                              compute_s, deps=pdeps, node=u,
+                              state_bytes=sb))
             if ckpt_bytes > 0 and (s + 1) % ckpt_every == 0:
                 tasks.append(Task(f"ckpt{tag}:{u}:{s}", EventKind.DMA,
                                   (topo.tx(u), topo.rx(st))
@@ -527,7 +562,8 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
                         nodes: Optional[Sequence[str]] = None,
                         compute_scale: float = 1.0, first_step: int = 0,
                         after: Optional[str] = None,
-                        on_device_mismatch: str = "scale") -> list:
+                        on_device_mismatch: str = "scale",
+                        state_bytes: Optional[float] = None) -> list:
     """Replay ``steps`` synchronous training steps over compute nodes.
 
     Trace numbers are per-device; each node runs one device group.  A
@@ -556,6 +592,14 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
     ``first_step`` (step numbering offset) and ``after`` (external
     task id the first step's compute depends on) — let
     `training_with_stragglers` splice segments into one timeline.
+
+    ``state_bytes`` (optional) is the per-node resumable training state
+    — optimizer+params, sized with
+    `core.costmodel.checkpoint_state_bytes` for real byte scales (the
+    streaming-checkpoint chunk model) or given directly in a trace's
+    relative units.  It marks the step's compute and sync tasks
+    spillable, so a preempting scheduler can park the job's state on a
+    storage node instead of replaying the interrupted step.
     """
     if failures and failure_model is None:
         from repro.core.elastic import FailureComponent
@@ -567,6 +611,7 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
     # training lives on accelerator-bearing nodes (a lite-compute node's
     # accel resource has zero rate and would stall the step)
     nodes = _placed(topo, nodes, accel=True, who="training_from_trace")
+    sb = _sb(state_bytes)
     compute_s, coll = _trace_costs(trace, accel_flops, hbm_bw)
     compute_s *= compute_scale
     coll = _rescale_collectives(coll, int(trace.get("n_devices", 0) or 0),
@@ -580,7 +625,8 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
         for u in nodes:
             cid = f"fwd{tag}:{stag}:{u}"
             tasks.append(Task(cid, EventKind.COMPUTE, (topo.accel(u),),
-                              compute_s, deps=dep, node=u))
+                              compute_s, deps=dep, node=u,
+                              state_bytes=sb))
             last = cid
             for k, (tier, nbytes) in enumerate(coll):
                 gid = f"sync{tag}:{stag}:{u}:{k}"
@@ -588,7 +634,8 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
                        else (topo.tx(u), topo.rx(u))
                        + topo.dcn_path(u, nodes))
                 tasks.append(Task(gid, EventKind.COLLECTIVE_PHASE, res,
-                                  nbytes, deps=(last,), node=u))
+                                  nbytes, deps=(last,), node=u,
+                                  state_bytes=sb))
                 last = gid
             phase_ids.append(last)
         bid = f"step{tag}:{stag}"
@@ -621,7 +668,8 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
                              policy=None, failure_model=None,
                              accel_flops: float = DEFAULT_ACCEL_FLOPS,
                              hbm_bw: float = DEFAULT_HBM_BW,
-                             tag: str = "") -> dict:
+                             tag: str = "",
+                             state_bytes: Optional[float] = None) -> dict:
     """Close the detection->eviction loop the ROADMAP asks for.
 
     Simulate the training DAG, feed each step's per-node durations
@@ -638,15 +686,28 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
     count); survivor segments replay those same sync bytes, so every
     step time fed to the detector is scored under one sync-byte model.
 
+    With ``state_bytes`` (the evicted node's resumable optimizer+params
+    shard, e.g. `core.costmodel.checkpoint_state_bytes`), the hand-off
+    is priced instead of free: the survivors restore the evicted work
+    from the last streaming checkpoint — each survivor streams its
+    slice of the shard from a STORAGE node over the fabric before the
+    continuation starts — rather than replaying steps.  The topology
+    must carry storage nodes in that mode.
+
     Returns ``{"result": SimResult, "evictions": [(node, step, time)],
     "baseline_makespan": float, "active_nodes": [...],
-    "step_times": [[...], ...]}`` — ``baseline_makespan`` is the
-    detector-disabled counterfactual from the first probe run.
+    "step_times": [[...], ...], "restored_bytes": float}`` —
+    ``baseline_makespan`` is the detector-disabled counterfactual from
+    the first probe run.
     """
     from repro.core.elastic import FailureComponent, StragglerDetector
 
     failure_model = failure_model or FailureComponent()
     all_nodes = topo.accelerator_node_names
+    if state_bytes is not None and not topo.storage_node_names:
+        raise ValueError(
+            "state_bytes= needs a topology with storage nodes: the "
+            "evicted shard is restored from the last checkpoint there")
     trace = _reconcile_trace(trace, len(all_nodes))
     det = StragglerDetector(len(all_nodes), policy)
     idx = {u: i for i, u in enumerate(all_nodes)}
@@ -665,7 +726,8 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
             topo, trace, steps=n_steps, accel_flops=accel_flops,
             hbm_bw=hbm_bw, tag=tag, nodes=active,
             compute_scale=len(all_nodes) / len(active), first_step=first,
-            after=dep, on_device_mismatch="ignore")
+            after=dep, on_device_mismatch="ignore",
+            state_bytes=state_bytes)
 
     prefix: list = []             # frozen segments (steps already scored)
     prefix_barrier: Optional[str] = None
@@ -674,6 +736,7 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
     active = list(all_nodes)
     start = 0
     baseline = None
+    restored_total = 0.0
     while True:
         tasks = prefix + segment(steps - start, active, start,
                                  prefix_barrier)
@@ -701,7 +764,8 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
                 or len(active) <= len(evicted)):
             return {"result": result, "evictions": evictions,
                     "baseline_makespan": baseline,
-                    "active_nodes": active, "step_times": step_times}
+                    "active_nodes": active, "step_times": step_times,
+                    "restored_bytes": restored_total}
         # freeze steps start..estep, splice in the eviction + re-plan
         prefix += segment(estep - start + 1, active, start, prefix_barrier)
         bar = f"step{tag}:{estep}"
@@ -716,4 +780,24 @@ def training_with_stragglers(topo: Topology, trace: dict, *, steps: int,
             evictions.append((u, estep, t_evict))
             det.deactivate(idx[u])
             active.remove(u)
+        if state_bytes is not None:
+            # restore the evicted shards from the last streaming
+            # checkpoint: each survivor streams its slice from a
+            # storage node (round-robin), charged to the fabric, and
+            # the continuation waits on every restore
+            storage = topo.storage_node_names
+            per_node = float(state_bytes) * len(evicted) / len(active)
+            rids = []
+            for k, u in enumerate(active):
+                st = storage[k % len(storage)]
+                xid = f"ckptrestore{tag}:{estep}:{u}"
+                rids.append(xid)
+                prefix.append(Task(
+                    xid, EventKind.DMA, topo.spill_route(st, u),
+                    per_node, deps=(prefix_barrier,), node=u))
+                restored_total += per_node
+            bar_id = f"ckptrestored{tag}:{estep}"
+            prefix.append(Task(bar_id, EventKind.COMPUTE, (), 0.0,
+                               deps=tuple(rids)))
+            prefix_barrier = bar_id
         start = estep + 1
