@@ -5,10 +5,20 @@ fabric-contention cell (per-tenant slowdown at 1:1 vs 4:1
 oversubscription), the online-scheduler SLO cell (FIFO vs rack-aware
 packing p99 JCT + energy-per-job), the preemption-checkpointing cell
 (reset vs spill/restore preemption wasted work on the pinned urgent-job
-stream), plus the closed-form cross-validation:
+stream), the engine-scale events/sec cell (array vs legacy hot-loop
+backends on the pinned 64-node pipelined-shuffle-waves workload), plus
+the closed-form cross-validation:
 
     PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
     PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
+    PYTHONPATH=src python -m benchmarks.bench_sim \
+        --smoke --cell engine_scale                         # one cell
+
+Every scenario records its event count and events/sec (per-scenario
+wall times are `time.perf_counter` deltas); the ``engine_scale``
+scenario additionally runs both engine backends and records
+``alloc_speedup`` (array events/sec over legacy events/sec) and
+``bit_identical``, which the ``engine-perf`` CI job gates on.
 
 Training replays a dry-run trace from artifacts/dryrun when present,
 falling back to a synthetic llama-scale trace so the benchmark runs on a
@@ -28,9 +38,12 @@ import time
 from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile
 from repro.sim import (Fabric, append_bench_run, compare_allocators,
-                       compare_policies, cross_validate_bigquery,
+                       compare_backends, compare_policies,
+                       cross_validate_bigquery,
                        lovelock_cluster, measure_interference,
-                       multi_tenant, reference_tenants, scatter_gather,
+                       multi_tenant, perf_digest,
+                       pipelined_shuffle_waves,
+                       reference_tenants, scatter_gather,
                        simulate_mu, skewed_analytics_mix, summarize,
                        synthetic_trace, trace_from_record,
                        traditional_cluster, training_from_trace)
@@ -42,7 +55,9 @@ ART = ROOT / "artifacts" / "dryrun"
 
 # bump when the per-run dict shape changes incompatibly; the writer
 # refuses to append to a history with a different version
-SCHEMA_VERSION = 2
+# (v3: per-scenario n_events/events_per_sec, engine_scale cell,
+# perf_counter wall times)
+SCHEMA_VERSION = 3
 
 # physical-ish rates for the training scenario (bytes/s)
 NIC_BW = 25e9          # 200 Gb/s NIC
@@ -55,29 +70,32 @@ def _bigquery_profile():
 
 
 def scenario_shuffle(phis, n_servers):
-    out = {}
+    out = {"n_events": 0}
     prof = _bigquery_profile()
     for phi in phis:
         r = simulate_mu(prof, phi, n_servers=n_servers)
         out[str(phi)] = {"mu": r["mu"],
                          "t_traditional_s": r["t_traditional"],
                          "t_lovelock_s": r["t_lovelock"]}
+        out["n_events"] += sum(r["n_events"].values())
     return out
 
 
 def scenario_scatter_gather(phis, n_servers):
     """Fan-out query: the incast at the root is NIC-bound, so phi helps
     only the scatter/compute legs — a case the closed form cannot see."""
-    out = {}
     kw = dict(request_bytes_total=0.2, response_bytes_total=2.0,
               cpu_work_per_worker=0.5)
     base = traditional_cluster(n_servers, cpu_rate=cm.MILAN_SYSTEM_SPEEDUP)
-    t0 = base.engine().run(scatter_gather(base, **kw)).makespan
+    res0 = base.engine().run(scatter_gather(base, **kw))
+    t0 = res0.makespan
+    out = {"n_events": len(res0.events)}
     for phi in phis:
         topo = lovelock_cluster(n_servers, phi)
-        t1 = topo.engine().run(scatter_gather(topo, **kw)).makespan
-        out[str(phi)] = {"mu": t1 / t0, "t_traditional_s": t0,
-                         "t_lovelock_s": t1}
+        res1 = topo.engine().run(scatter_gather(topo, **kw))
+        out[str(phi)] = {"mu": res1.makespan / t0, "t_traditional_s": t0,
+                         "t_lovelock_s": res1.makespan}
+        out["n_events"] += len(res1.events)
     return out
 
 
@@ -92,7 +110,7 @@ def _load_trace():
 
 def scenario_training(phis, n_servers, steps):
     name, trace = _load_trace()
-    out = {"trace": name}
+    out = {"trace": name, "n_events": 0}
     for phi in phis:
         # accel_rate=1: the trace is per device group and each node runs
         # one; phi changes node count (and aggregate DCN load), not
@@ -105,11 +123,13 @@ def scenario_training(phis, n_servers, steps):
         out[str(phi)] = {"step_time_s": res.makespan / steps,
                          "makespan_s": res.makespan,
                          "utilization": s["utilization"]}
+        out["n_events"] += len(res.events)
     # failure scenario at phi=1: checkpoint/replay recovery cost
     topo = lovelock_cluster(n_servers, 1, nic_bw=NIC_BW, ici_bw=ICI_BW,
                             accel_rate=1.0)
     fail = topo.engine().run(training_from_trace(
         topo, trace, steps=steps, failures=[("nic0", steps // 2)]))
+    out["n_events"] += len(fail.events)
     out["failure_recovery_overhead_s"] = (
         fail.makespan - out["1"]["makespan_s"])
     return out
@@ -121,7 +141,7 @@ def scenario_multi_tenant(n_servers):
     — the disaggregation-claim stressor (§1/§5.2) the single-tenant
     scenarios cannot see."""
     tenants = reference_tenants(n_servers)
-    out = {}
+    out = {"n_events": 0}
     rack = max(2, n_servers // 2)
     for oversub in (1.0, 4.0):
         rep = measure_interference(
@@ -129,6 +149,7 @@ def scenario_multi_tenant(n_servers):
                 n_servers, 1, accel_rate=1.0, storage_nodes=2,
                 fabric=Fabric(rack_size=rack, oversubscription=oversub)),
             tenants)
+        out["n_events"] += rep["n_events"]
         out[f"{oversub:g}:1"] = {
             "slowdown": {k: round(v, 4) for k, v in
                          rep["slowdown"].items()},
@@ -168,6 +189,8 @@ def scenario_analytics_skew():
     return {
         "fabric": "2:1 core",
         "skew": skew,
+        "n_events": (sum(len(r.events) for r in cmp["results"].values())
+                     + rep["n_events"]),
         "progressive_makespan_s": cmp["progressive"],
         "waterfill_makespan_s": cmp["waterfill"],
         "waterfill_speedup": round(cmp["speedup"], 4),
@@ -206,6 +229,8 @@ def scenario_scheduler_slo():
         "fabric": "2:1 core",
         "arrival_rate_jobs_per_s": rate,
         "n_jobs": len(jobs),
+        "n_events": sum(len(sr.result.events)
+                        for sr in cmp["scheds"].values()),
         "fifo": {k: v for k, v in cmp["slo"]["fifo"].items()
                  if k != "policy"},
         "pack": {k: v for k, v in cmp["slo"]["pack"].items()
@@ -258,6 +283,8 @@ def scenario_preempt_ckpt():
     return {
         "fabric": "2:1 core",
         "n_jobs": len(jobs),
+        "n_events": sum(len(sr.result.events)
+                        for sr in cmp["scheds"].values()),
         "reset": {k: cmp["slo"]["preempt+pack"][k] for k in keep},
         "spill": {k: cmp["slo"]["preempt-ckpt+pack"][k] for k in keep},
         "spill_wasted_work_ratio": round(cmp["wasted_work_ratio"], 4),
@@ -266,10 +293,65 @@ def scenario_preempt_ckpt():
     }
 
 
+def scenario_engine_scale(smoke=False):
+    """Engine events/sec cell: the pinned 64-node / 4x16-rack / 2:1
+    fabric `pipelined_shuffle_waves` workload (per-task deterministic
+    work jitter, so completions spread into distinct events) run under
+    both hot-loop backends.  ``alloc_speedup`` is array events/sec over
+    legacy events/sec — the incremental-vectorized-core headline the
+    ``engine-perf`` CI job gates on (>= 5x in CI for runner headroom;
+    >= 10x on the full cell locally) — and ``bit_identical`` must stay
+    true: a perf number from a drifted trace is invalid.
+
+    The full cell is waves=5 (~5.8k tasks); --smoke drops to waves=2
+    (~2.3k tasks) to keep the CI lane short without changing the
+    topology or the per-event working set."""
+    waves = 2 if smoke else 5
+
+    def make_topo():
+        return lovelock_cluster(
+            64, 1, fabric=Fabric(rack_size=16, oversubscription=2.0))
+
+    def build(topo):
+        return pipelined_shuffle_waves(topo, waves=waves,
+                                       tasks_per_node=2,
+                                       jitter=0.35, seed=7)
+
+    cmp = compare_backends(make_topo, build)
+    cmp.pop("results")
+    out = {
+        "n_nodes": 64,
+        "racks": "4x16",
+        "fabric": "2:1",
+        "waves": waves,
+        "n_tasks": cmp["legacy"]["n_events"],
+        "n_events": (cmp["legacy"]["n_events"]
+                     + cmp["array"]["n_events"]),
+        "legacy": cmp["legacy"],
+        "array": cmp["array"],
+        "alloc_speedup": round(cmp["speedup"], 3),
+        "bit_identical": cmp["bit_identical"],
+    }
+    for side in ("legacy", "array"):
+        out[side] = dict(out[side],
+                         wall_s=round(out[side]["wall_s"], 3),
+                         events_per_sec=round(
+                             out[side]["events_per_sec"], 1))
+    return out
+
+
+SCENARIOS = ("shuffle", "scatter_gather", "training", "multi_tenant",
+             "analytics_skew", "scheduler_slo", "preempt_ckpt",
+             "engine_scale")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sweep for the CI lane")
+    ap.add_argument("--cell", choices=SCENARIOS, default=None,
+                    help="run a single scenario (the run still appends "
+                         "to the history; 'cells' records coverage)")
     ap.add_argument("--out", default=str(ROOT / "BENCH_sim.json"))
     args = ap.parse_args()
 
@@ -277,35 +359,61 @@ def main():
     n_servers = 4 if args.smoke else 16
     steps = 4 if args.smoke else 16
 
-    t0 = time.time()
+    runners = {
+        "shuffle": lambda: scenario_shuffle(phis, n_servers),
+        "scatter_gather":
+            lambda: scenario_scatter_gather(phis, n_servers),
+        "training": lambda: scenario_training(phis, n_servers, steps),
+        "multi_tenant": lambda: scenario_multi_tenant(n_servers),
+        "analytics_skew": scenario_analytics_skew,
+        "scheduler_slo": scenario_scheduler_slo,
+        "preempt_ckpt": scenario_preempt_ckpt,
+        "engine_scale": lambda: scenario_engine_scale(args.smoke),
+    }
+    cells = (args.cell,) if args.cell else SCENARIOS
+
+    t0 = time.perf_counter()
     bench = {
         "bench": "sim",
         "smoke": args.smoke,
+        "cells": list(cells),
         "n_servers": n_servers,
-        "cross_validation": cross_validate_bigquery(
-            n_servers=max(n_servers, 4)),
-        "scenarios": {
-            "shuffle": scenario_shuffle(phis, n_servers),
-            "scatter_gather": scenario_scatter_gather(phis, n_servers),
-            "training": scenario_training(phis, n_servers, steps),
-            "multi_tenant": scenario_multi_tenant(n_servers),
-            "analytics_skew": scenario_analytics_skew(),
-            "scheduler_slo": scenario_scheduler_slo(),
-            "preempt_ckpt": scenario_preempt_ckpt(),
-        },
+        "scenarios": {},
     }
-    bench["wall_s"] = round(time.time() - t0, 3)
+    if args.cell is None:
+        bench["cross_validation"] = cross_validate_bigquery(
+            n_servers=max(n_servers, 4))
+    for name in cells:
+        t1 = time.perf_counter()
+        scn = runners[name]()
+        scn["perf"] = perf_digest(scn.pop("n_events", 0),
+                                  time.perf_counter() - t1)
+        bench["scenarios"][name] = scn
+    bench["wall_s"] = round(time.perf_counter() - t0, 3)
     append_bench_run(args.out, bench, schema_version=SCHEMA_VERSION)
     print(json.dumps(bench, indent=1))
-    worst = max(r["rel_err"] for r in bench["cross_validation"])
-    speedup = bench["scenarios"]["analytics_skew"]["waterfill_speedup"]
-    p99 = bench["scenarios"]["scheduler_slo"]["packing_p99_speedup"]
-    wratio = bench["scenarios"]["preempt_ckpt"]["spill_wasted_work_ratio"]
-    print(f"\nappended to {args.out}  (cross-validation worst rel_err "
-          f"{worst:.2e}, water-filling speedup on skewed cell "
-          f"{speedup}x, packing p99-JCT speedup {p99}x, "
-          f"spill wasted-work ratio {wratio}, "
-          f"wall {bench['wall_s']}s)")
+    scns = bench["scenarios"]
+    digest = [f"wall {bench['wall_s']}s"]
+    if "cross_validation" in bench:
+        digest.append(f"cross-validation worst rel_err "
+                      f"{max(r['rel_err'] for r in bench['cross_validation']):.2e}")
+    if "analytics_skew" in scns:
+        digest.append(f"water-filling speedup on skewed cell "
+                      f"{scns['analytics_skew']['waterfill_speedup']}x")
+    if "scheduler_slo" in scns:
+        digest.append(f"packing p99-JCT speedup "
+                      f"{scns['scheduler_slo']['packing_p99_speedup']}x")
+    if "preempt_ckpt" in scns:
+        digest.append(f"spill wasted-work ratio "
+                      f"{scns['preempt_ckpt']['spill_wasted_work_ratio']}")
+    if "engine_scale" in scns:
+        es = scns["engine_scale"]
+        digest.append(
+            f"engine alloc_speedup {es['alloc_speedup']}x "
+            f"({es['array']['events_per_sec']:.0f} ev/s array vs "
+            f"{es['legacy']['events_per_sec']:.0f} legacy, "
+            f"bit_identical={es['bit_identical']})")
+    print(f"\nappended to {args.out}  ({', '.join(digest)})")
 
 
 if __name__ == "__main__":

@@ -43,20 +43,22 @@ from repro.sim.topology import (Fabric, NodeModel, Topology,
                                 lovelock_cluster, topology_from_plan,
                                 traditional_cluster)
 from repro.sim.workloads import (MultiTenantWorkload, analytics_dag,
-                                 multi_tenant, reference_tenants,
+                                 multi_tenant, pipelined_shuffle_waves,
+                                 reference_tenants,
                                  scatter_gather, shuffle,
                                  skewed_analytics_mix, storage_replay,
                                  synthetic_trace, trace_from_record,
                                  training_from_trace,
                                  training_with_stragglers)
-from repro.sim.validate import (compare_allocators, compare_policies,
+from repro.sim.validate import (compare_allocators, compare_backends,
+                                compare_policies,
                                 cross_validate_bigquery,
                                 measure_interference, simulate_mu,
                                 simulate_plan)
 from repro.sim.report import (append_bench_run, attach_scores,
                               attach_slo, attach_tenants,
-                              load_bench_history, per_tenant, render,
-                              summarize)
+                              load_bench_history, per_tenant,
+                              perf_digest, render, summarize)
 from repro.sim import sched
 
 __all__ = [
@@ -65,13 +67,15 @@ __all__ = [
     "Fabric", "NodeModel", "Topology", "lovelock_cluster",
     "topology_from_plan", "traditional_cluster",
     "MultiTenantWorkload", "analytics_dag", "multi_tenant",
+    "pipelined_shuffle_waves",
     "reference_tenants", "scatter_gather", "shuffle",
     "skewed_analytics_mix",
     "storage_replay", "synthetic_trace", "trace_from_record",
     "training_from_trace", "training_with_stragglers",
-    "compare_allocators", "compare_policies", "cross_validate_bigquery",
+    "compare_allocators", "compare_backends", "compare_policies",
+    "cross_validate_bigquery",
     "measure_interference", "simulate_mu",
     "simulate_plan", "append_bench_run", "attach_scores", "attach_slo",
-    "attach_tenants", "load_bench_history", "per_tenant",
+    "attach_tenants", "load_bench_history", "per_tenant", "perf_digest",
     "render", "summarize", "sched",
 ]

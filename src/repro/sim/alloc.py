@@ -1,0 +1,536 @@
+"""Numeric cores for the engine hot loop: dict reference vs flat arrays.
+
+`Engine.run` used to re-solve max-min water-filling over *all* flows x
+resources in pure-Python dicts at every event, which capped studies at a
+few dozen nodes.  This module factors the numeric state of the loop —
+remaining work, rates, busy/delivered accounting, completion detection —
+behind a small core interface with two implementations:
+
+  * `DictCore`   — the original dict hot loop, verbatim.  Kept as the
+                   bit-exact reference (``Engine(backend="legacy")``)
+                   and as the baseline the perf CI lane measures
+                   against.
+  * `ArrayCore`  — the default (``backend="array"``).  The flow/resource
+                   incidence is a CSR-style int-index structure over
+                   stable resource ids, updated incrementally as tasks
+                   start/stop; `vector_water_fill` /
+                   `vector_progressive_fill` run the allocator's
+                   bottleneck-freeze iteration as numpy array programs;
+                   and the solve is **incremental**: start/stop events
+                   dirty only the resources they touch, and the next
+                   solve recomputes just the connected components of the
+                   incidence graph that contain a dirty resource,
+                   splicing cached rates for every untouched component.
+                   Because dirt accrues between solves, N same-timestamp
+                   completions (or submissions) cost one re-solve, not N.
+
+Bit-compatibility with the dict reference is by construction, not by
+tolerance: the vectorized allocators replay the exact reference
+arithmetic — `np.subtract.at` applies the same per-hold sequential
+subtractions the dict loop does (never a fused ``k*m``), tie groups use
+exact float equality, and a per-component solve performs the identical
+operation sequence the global solve would (rounds never mix
+components' capacities).  Rates, progress updates, `min_dt` and
+completion thresholds are therefore bitwise equal and event traces are
+byte-identical across backends; only `delivered` (utilized-time)
+accumulates in a different association order and may differ at the last
+ulp.  `tests/test_sim_alloc.py` pins all of this.
+
+Max-min water-filling decomposes over connected components of the
+flow/resource graph: a round's global minimum fair share only ever pins
+flows — and subtracts capacity — inside the component that attains it,
+so solving a component in isolation performs the identical float
+operation sequence the global solve would.  That is the invariant that
+makes component-level caching sound *and* bit-exact.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import numpy as np
+
+_EPS = 1e-12                       # matches repro.sim.engine._EPS
+
+BACKENDS = ("array", "legacy")
+
+
+# ---------------------------------------------------------------------------
+# Vectorized allocators over a CSR flow -> resource incidence
+# ---------------------------------------------------------------------------
+
+
+def vector_progressive_fill(indptr: np.ndarray, indices: np.ndarray,
+                            cap: np.ndarray,
+                            holds: np.ndarray) -> np.ndarray:
+    """`engine.progressive_fill_rates` as an array program.
+
+    ``indptr``/``indices`` is the CSR incidence (flow i holds resources
+    ``indices[indptr[i]:indptr[i+1]]``, every flow holds >= 1), ``cap``
+    the aggregate rate per (local) resource, ``holds`` the hold count
+    per resource.  Bit-identical to the dict reference: each flow's rate
+    is the float min over the same ``cap/holds`` shares.  Resources
+    with zero holds (dead entries kept in a cached component
+    numbering) are skipped by the guarded divide; no pair references
+    them, so they never reach the min.
+    """
+    share = np.divide(cap, holds, out=np.zeros(cap.size), where=holds > 0)
+    return np.minimum.reduceat(share[indices], indptr[:-1])
+
+
+def vector_water_fill(indptr: np.ndarray, indices: np.ndarray,
+                      cap: np.ndarray) -> np.ndarray:
+    """`engine.water_filling_rates` as an array program.
+
+    Same bottleneck-freeze iteration: each round computes every live
+    resource's fair share, pins the flows holding a min-share bottleneck
+    at that share, and releases their holds.  The capacity update uses
+    `np.subtract.at` — one subtraction *per hold*, unbuffered, exactly
+    the reference's sequential ``remaining[r] -= m`` folds — and tie
+    grouping uses exact float equality, so the returned rates are
+    bitwise equal to the dict reference on any instance.
+    """
+    nf = indptr.size - 1
+    counts = np.diff(indptr)
+    pair_flow = np.repeat(np.arange(nf), counts)
+    remaining = np.array(cap, dtype=float, copy=True)
+    live = np.bincount(indices, minlength=cap.size)
+    rates = np.zeros(nf)
+    unpinned = np.ones(nf, bool)
+    n_left = nf
+    # dead resources (live == 0) divide to inf (remaining > 0) or nan
+    # (0/0); `fmin.reduce` skips nans and nothing pairs with them, so
+    # neither ever reaches the min.  While any flow is unpinned, some
+    # resource is live, so m stays finite and each round pins >= 1
+    # flow.  A flow's pairs only matter until the round that pins it —
+    # pins of already-pinned flows are filtered by `unpinned` — so no
+    # per-pair active mask is needed.
+    old = np.seterr(divide="ignore", invalid="ignore")
+    try:
+        while n_left:
+            fair = remaining / live
+            m = np.fmin.reduce(fair)
+            pin = np.zeros(nf, bool)
+            pin[pair_flow[fair[indices] == m]] = True
+            pin &= unpinned
+            rates[pin] = m
+            unpinned[pin] = False
+            idx = indices[pin[pair_flow]]
+            np.subtract.at(remaining, idx, m)
+            np.maximum(remaining, 0.0, out=remaining)
+            np.subtract.at(live, idx, 1)
+            n_left -= int(np.count_nonzero(pin))
+    finally:
+        np.seterr(**old)
+    return rates
+
+
+# ---------------------------------------------------------------------------
+# Dict reference core (the original hot loop, verbatim)
+# ---------------------------------------------------------------------------
+
+
+class DictCore:
+    """The engine's original pure-Python numeric state, behind the core
+    interface.  Every solve recomputes all flows from scratch with the
+    dict allocators — O(flows x resources) per event — which is exactly
+    what the array core is benchmarked (and bit-compared) against."""
+
+    backend = "legacy"
+
+    def __init__(self, resources: Dict[str, object],
+                 alloc_fn: Callable[[dict, dict, dict], dict]):
+        self.resources = resources          # name -> Resource, ordered
+        self._alloc = alloc_fn
+        self._remaining: dict = {}
+        self._scale: dict = {}
+        self._running: dict = {}            # tid -> resource tuple
+        self._busy = {name: 0.0 for name in resources}
+        self._delivered = {name: 0.0 for name in resources}
+        self._rate: dict = {}
+        self._holds: dict = {}
+        self.n_solves = 0
+        self.flows_solved = 0
+
+    # -- per-task progress state -------------------------------------------
+
+    def track(self, tid: str, work: float) -> None:
+        self._remaining[tid] = float(work)
+        self._scale[tid] = max(float(work), 1.0)
+
+    def remaining_of(self, tid: str) -> float:
+        return self._remaining[tid]
+
+    def set_remaining(self, tid: str, value: float) -> None:
+        self._remaining[tid] = value
+
+    # -- running-set incidence ---------------------------------------------
+
+    def start(self, tid: str, task) -> None:
+        self._running[tid] = task.resources
+
+    def stop(self, tid: str) -> None:
+        del self._running[tid]
+
+    # -- the numeric hot loop ----------------------------------------------
+
+    def solve(self) -> None:
+        holds: dict = {}
+        flows: dict = {}
+        out: dict = {}
+        for tid, res in self._running.items():
+            if not res:               # pure delay task
+                out[tid] = 1.0
+            else:
+                flows[tid] = res
+                for r in res:
+                    holds[r] = holds.get(r, 0) + 1
+        # blocked() keeps any task touching a down node out of the
+        # running set, so every held resource here is live
+        cap = {name: self.resources[name].aggregate_rate(n)
+               for name, n in holds.items()}
+        out.update(self._alloc(flows, cap, holds))
+        self._rate, self._holds = out, holds
+        if self._running:
+            self.n_solves += 1
+            self.flows_solved += len(self._running)
+
+    def min_dt(self) -> float:
+        dt = math.inf
+        rem = self._remaining
+        for tid, r in self._rate.items():
+            if r > _EPS:
+                dt = min(dt, rem[tid] / r)
+        return dt
+
+    def advance(self, dt: float) -> None:
+        rem = self._remaining
+        for tid, r in self._rate.items():
+            rem[tid] -= r * dt
+            for name in self._running[tid]:
+                self._delivered[name] += r * dt
+        for name in self._holds:
+            self._busy[name] += dt
+
+    def finished(self) -> list:
+        return [tid for tid in self._running
+                if self._remaining[tid] <= _EPS * self._scale[tid]]
+
+    # -- end-of-run accounting ---------------------------------------------
+
+    def busy_time(self) -> dict:
+        return self._busy
+
+    def delivered(self) -> dict:
+        return self._delivered
+
+    def stats(self) -> dict:
+        return {"backend": self.backend, "n_solves": self.n_solves,
+                "flows_solved": self.flows_solved}
+
+
+# ---------------------------------------------------------------------------
+# Incremental array core
+# ---------------------------------------------------------------------------
+
+
+class ArrayCore:
+    """Flat-array numeric state with incremental component re-solves.
+
+    Running flows live in slots of dense numpy arrays (``remaining``,
+    ``rate``, ...); each slot's resource ids sit in a strided flat
+    ``pool`` over the engine's stable resource indexing, so a solve
+    gathers its CSR with pure array ops — no per-flow Python.
+    `start`/`stop` update hold counts, the cached per-resource
+    capacity (`aggregate_rate` is a pure function of the hold count,
+    so it is re-evaluated only when the count changes) and mark the
+    touched resources dirty; `solve` recomputes rates only for the
+    components containing dirty resources.
+
+    Components are tracked with a merge-only union-find over
+    resources: `start` unions the flow's resources, `stop` never
+    splits.  Membership is therefore an *over*-approximation — a
+    historical component may span several current exact components —
+    which is safe and still bit-exact, because the solved set is then
+    a disjoint union of exact components and solving extra untouched
+    components just recomputes their rates to the identical floats
+    (see the module docstring's decomposition invariant).  What it
+    buys is O(alpha) incidence updates with no per-solve component
+    rebuild.  `advance`/`min_dt`/`finished` are whole-array
+    operations, so an event step costs O(slots) numpy time plus the
+    affected component's solve instead of O(all flows x resources)
+    Python time.
+    """
+
+    backend = "array"
+    _INITIAL_SLOTS = 64
+    _INITIAL_STRIDE = 8
+
+    def __init__(self, resources: Dict[str, object], allocator: str):
+        self.res_names = list(resources)
+        self.res_list = list(resources.values())
+        self.res_index = {n: i for i, n in enumerate(self.res_names)}
+        self.allocator = allocator
+        nres = len(self.res_list)
+        self.holds = np.zeros(nres, dtype=np.int64)
+        self.cap = np.zeros(nres)           # aggregate_rate @ current holds
+        self.inflow = np.zeros(nres)        # sum of member rates
+        self._busy = np.zeros(nres)
+        self._delivered = np.zeros(nres)
+        self.parent = list(range(nres))     # merge-only union-find
+        self.comp_flows: dict = {}          # root -> set of running slots
+        # root -> (global->local id map, local->global id list): the
+        # component's stable local resource numbering, so a
+        # single-component solve skips np.unique.  Entries are only
+        # ever appended (resources whose holds drop to 0 stay, with
+        # capacity 0 and no pairs — harmless to the allocators).
+        self.comp_cache: dict = {}
+        n = self._INITIAL_SLOTS
+        self.stride = self._INITIAL_STRIDE
+        self.remaining = np.zeros(n)
+        self.rate = np.zeros(n)
+        self.eps_scale = np.zeros(n)
+        self.active = np.zeros(n, bool)
+        self.nres_of = np.zeros(n, dtype=np.int64)
+        self.pool = np.zeros(n * self.stride, dtype=np.int64)
+        self.slot_tid = [None] * n
+        self.free = list(range(n - 1, -1, -1))
+        self.tid2slot: dict = {}
+        self.rem_map: dict = {}             # remaining while not running
+        self.scale_map: dict = {}
+        self.dirty_res: set = set()
+        self.n_solves = 0
+        self.flows_solved = 0
+
+    def _grow(self) -> None:
+        old = self.remaining.size
+        new = old * 2
+        for name in ("remaining", "rate", "eps_scale", "active", "nres_of"):
+            arr = getattr(self, name)
+            bigger = np.zeros(new, dtype=arr.dtype)
+            bigger[:old] = arr
+            setattr(self, name, bigger)
+        self.pool = np.concatenate(
+            [self.pool, np.zeros(old * self.stride, dtype=np.int64)])
+        self.slot_tid.extend([None] * old)
+        self.free.extend(range(new - 1, old - 1, -1))
+
+    def _widen(self, k: int) -> None:
+        """A task holds more resources than the pool stride fits."""
+        new = max(k, self.stride * 2)
+        nslots = self.remaining.size
+        pool = np.zeros(nslots * new, dtype=np.int64)
+        pool.reshape(nslots, new)[:, :self.stride] = \
+            self.pool.reshape(nslots, self.stride)
+        self.pool, self.stride = pool, new
+
+    def _cache_of(self, root: int):
+        cache = self.comp_cache.get(root)
+        if cache is None:
+            cache = self.comp_cache[root] = \
+                (np.full(len(self.res_list), -1, dtype=np.int64), [])
+        return cache
+
+    def _find(self, r: int) -> int:
+        parent = self.parent
+        root = r
+        while parent[root] != root:
+            root = parent[root]
+        while parent[r] != root:          # path compression
+            parent[r], r = root, parent[r]
+        return root
+
+    # -- per-task progress state -------------------------------------------
+
+    def track(self, tid: str, work: float) -> None:
+        self.rem_map[tid] = float(work)
+        self.scale_map[tid] = max(float(work), 1.0)
+
+    def remaining_of(self, tid: str) -> float:
+        s = self.tid2slot.get(tid)
+        return float(self.remaining[s]) if s is not None \
+            else self.rem_map[tid]
+
+    def set_remaining(self, tid: str, value: float) -> None:
+        self.rem_map[tid] = value
+        s = self.tid2slot.get(tid)
+        if s is not None:
+            self.remaining[s] = value
+
+    # -- running-set incidence ---------------------------------------------
+
+    def start(self, tid: str, task) -> None:
+        if not self.free:
+            self._grow()
+        s = self.free.pop()
+        self.tid2slot[tid] = s
+        self.slot_tid[s] = tid
+        self.remaining[s] = self.rem_map[tid]
+        self.eps_scale[s] = _EPS * self.scale_map[tid]
+        self.active[s] = True
+        if task.resources:
+            k = len(task.resources)
+            if k > self.stride:
+                self._widen(k)
+            base = s * self.stride
+            holds, cap, res_list = self.holds, self.cap, self.res_list
+            ridx = [self.res_index[r] for r in task.resources]
+            for j, r in enumerate(ridx):
+                self.pool[base + j] = r
+                holds[r] += 1
+                cap[r] = res_list[r].aggregate_rate(int(holds[r]))
+            self.nres_of[s] = k
+            find = self._find
+            root = find(ridx[0])
+            for r in ridx[1:]:
+                r2 = find(r)
+                if r2 != root:
+                    small = self.comp_flows.pop(r2, None)
+                    merged = self.comp_cache.pop(r2, None)
+                    self.parent[r2] = root
+                    if small:
+                        self.comp_flows.setdefault(root, set()) \
+                            .update(small)
+                    if merged is not None:
+                        cmap, cres = self._cache_of(root)
+                        for rr in merged[1]:
+                            if cmap[rr] < 0:
+                                cmap[rr] = len(cres)
+                                cres.append(rr)
+            self.comp_flows.setdefault(root, set()).add(s)
+            cmap, cres = self._cache_of(root)
+            for rr in ridx:
+                if cmap[rr] < 0:
+                    cmap[rr] = len(cres)
+                    cres.append(rr)
+            self.dirty_res.update(ridx)
+            self.rate[s] = 0.0            # set by the next solve
+        else:
+            self.nres_of[s] = 0
+            self.rate[s] = 1.0            # pure delay task
+
+    def stop(self, tid: str) -> None:
+        s = self.tid2slot.pop(tid)
+        self.rem_map[tid] = float(self.remaining[s])
+        self.active[s] = False
+        self.rate[s] = 0.0
+        k = int(self.nres_of[s])
+        if k:
+            base = s * self.stride
+            ridx = self.pool[base:base + k].tolist()
+            holds, cap, res_list = self.holds, self.cap, self.res_list
+            for r in ridx:
+                holds[r] -= 1
+                cap[r] = res_list[r].aggregate_rate(int(holds[r])) \
+                    if holds[r] > 0 else 0.0
+            self.dirty_res.update(ridx)
+            self.comp_flows[self._find(ridx[0])].discard(s)
+            self.nres_of[s] = 0
+        self.slot_tid[s] = None
+        self.free.append(s)
+
+    # -- the numeric hot loop ----------------------------------------------
+
+    def solve(self) -> None:
+        """Recompute rates for every component touching a dirty resource.
+
+        A removed flow's resources are dirty and their component still
+        files its old neighbours; an added flow's resources are dirty
+        and its component already files it — so the union of the dirty
+        resources' component member sets covers every flow whose rate
+        can have changed (plus, with merge-only components, possibly
+        whole untouched exact components, which resolve to identical
+        floats — see the class docstring).  The gather is pure numpy:
+        a ragged strided read of the pool, one `np.unique` for the
+        local resource relabelling, and cached capacities."""
+        if not self.dirty_res:
+            return
+        find = self._find
+        roots = {find(r) for r in self.dirty_res}
+        # a dirty resource with no holders left delivers nothing
+        self.inflow[np.fromiter(self.dirty_res, dtype=np.int64,
+                                count=len(self.dirty_res))] = 0.0
+        self.dirty_res.clear()
+        live_roots = [rt for rt in roots if self.comp_flows.get(rt)]
+        if not live_roots:
+            return
+        if len(live_roots) == 1:
+            g = self.comp_flows[live_roots[0]]
+            slots = np.fromiter(g, dtype=np.int64, count=len(g))
+        else:
+            slots = np.concatenate(
+                [np.fromiter(self.comp_flows[rt], dtype=np.int64,
+                             count=len(self.comp_flows[rt]))
+                 for rt in live_roots])
+        slots.sort()
+        counts = self.nres_of[slots]
+        total = int(counts.sum())
+        indptr = np.zeros(slots.size + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        rows = np.repeat(slots * self.stride - indptr[:-1], counts) \
+            + np.arange(total)
+        if len(live_roots) == 1:
+            # the component's cached numbering: one gather, no unique
+            cmap, cres = self.comp_cache[live_roots[0]]
+            local_res = np.fromiter(cres, dtype=np.int64,
+                                    count=len(cres))
+            indices = cmap[self.pool[rows]]
+        else:
+            local_res, indices = np.unique(self.pool[rows],
+                                           return_inverse=True)
+        cap = self.cap[local_res]
+        if self.allocator == "waterfill":
+            vals = vector_water_fill(indptr, indices, cap)
+        else:
+            vals = vector_progressive_fill(indptr, indices, cap,
+                                           self.holds[local_res])
+        self.rate[slots] = vals
+        pair_flow = np.repeat(np.arange(slots.size), counts)
+        self.inflow[local_res] = np.bincount(indices,
+                                             weights=vals[pair_flow],
+                                             minlength=local_res.size)
+        self.n_solves += 1
+        self.flows_solved += slots.size
+
+    def min_dt(self) -> float:
+        mask = self.rate > _EPS
+        if not mask.any():
+            return math.inf
+        return float((self.remaining[mask] / self.rate[mask]).min())
+
+    def advance(self, dt: float) -> None:
+        # inactive slots carry rate 0, so one fused array op advances
+        # exactly the running flows — same per-element float arithmetic
+        # as the dict reference's `remaining[tid] -= r * dt`
+        self.remaining -= self.rate * dt
+        self._busy[self.holds > 0] += dt
+        self._delivered += self.inflow * dt
+
+    def finished(self) -> list:
+        mask = self.active & (self.remaining <= self.eps_scale)
+        return [self.slot_tid[s] for s in np.flatnonzero(mask)]
+
+    # -- end-of-run accounting ---------------------------------------------
+
+    def busy_time(self) -> dict:
+        return {name: float(self._busy[i])
+                for i, name in enumerate(self.res_names)}
+
+    def delivered(self) -> dict:
+        return {name: float(self._delivered[i])
+                for i, name in enumerate(self.res_names)}
+
+    def stats(self) -> dict:
+        return {"backend": self.backend, "n_solves": self.n_solves,
+                "flows_solved": self.flows_solved}
+
+
+def make_core(backend: str, resources: Dict[str, object], allocator: str,
+              alloc_fn: Callable[[dict, dict, dict], dict]):
+    """One fresh numeric core per `Engine.run` call."""
+    if backend == "legacy":
+        return DictCore(resources, alloc_fn)
+    if backend == "array":
+        return ArrayCore(resources, allocator)
+    raise ValueError(f"unknown backend {backend!r}; "
+                     f"expected one of {BACKENDS}")

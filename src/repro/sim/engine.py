@@ -50,8 +50,20 @@ them, and schedule further callbacks; `on_task_done(fn)` observes every
 completion.  Event traces are byte-stable: same-timestamp `SimEvent`s
 are ordered by (kind, subject), never by hash or insertion accidents.
 
-No jax dependency: the engine is pure Python so planning/simulation runs
-on machines with no accelerator stack.
+The numeric hot loop — rate allocation, progress integration,
+completion detection — lives behind a core chosen by
+``Engine(backend=...)``: the default ``"array"`` runs the allocator as
+an incremental numpy array program over a CSR flow/resource incidence
+(re-solving only the connected components whose flow set changed, with
+dirty-set tracking fed by admission/completion/preemption/failure, so N
+same-timestamp events cost one re-solve); ``"legacy"`` keeps the
+original all-dict solve-everything-every-event loop as the bit-exact
+reference.  Event traces are byte-identical across backends (rates and
+progress use the same float operation sequence — see `repro.sim.alloc`);
+only utilized-time accumulation may differ at the last ulp.
+
+No jax dependency: the engine runs numpy-or-pure-Python so
+planning/simulation runs on machines with no accelerator stack.
 """
 from __future__ import annotations
 
@@ -60,6 +72,8 @@ import enum
 import heapq
 import math
 from typing import Callable, Dict, Iterable, Optional, Tuple
+
+from repro.sim.alloc import BACKENDS, make_core
 
 _EPS = 1e-12
 
@@ -143,6 +157,10 @@ class SimResult:
     # storage node -> byte-seconds of preempted state parked on it
     # (spill completion until restore completion, or end of run)
     storage_residency: dict = dataclasses.field(default_factory=dict)
+    # numeric-core counters for the perf lane: backend name, allocator
+    # solve invocations, and total flows solved across them — how much
+    # work the incremental dirty-set machinery actually avoided
+    alloc_stats: dict = dataclasses.field(default_factory=dict)
 
     def events_of(self, kind: EventKind) -> list:
         return [e for e in self.events if e.kind == kind]
@@ -255,17 +273,27 @@ class Engine:
     def __init__(self, resources: Iterable[Resource],
                  allocator: str = "waterfill",
                  spill_route: Optional[Callable[[str, str],
-                                               tuple]] = None):
+                                               tuple]] = None,
+                 backend: str = "array"):
         """``spill_route(src_node, dst_node)`` returns the resource
         names a spill/restore transfer between the two nodes must hold
         (`Topology.engine` wires it to NIC tx/rx + the fabric path);
         without it `Control.preempt(..., spill_to=...)` falls back to
-        reset semantics — the engine alone has no route to storage."""
+        reset semantics — the engine alone has no route to storage.
+        ``backend`` picks the numeric core: ``"array"`` (default) is the
+        incremental vectorized hot loop, ``"legacy"`` the original dict
+        reference (see `repro.sim.alloc`)."""
         self.resources = {r.name: r for r in resources}
+        self.resource_index = {name: i
+                               for i, name in enumerate(self.resources)}
         if allocator not in _ALLOC_FNS:
             raise ValueError(f"unknown allocator {allocator!r}; "
                              f"expected one of {ALLOCATORS}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
         self.allocator = allocator
+        self.backend = backend
         self._alloc = _ALLOC_FNS[allocator]
         self.spill_route = spill_route
         self._injected: list = []   # (time, EventKind, node), insert order
@@ -332,8 +360,6 @@ class Engine:
         by_id: dict = {}
         n_deps: dict = {}
         dependents: dict = {}
-        remaining: dict = {}
-        scale: dict = {}
         ready: list = []
         running: dict = {}            # tid -> Task (insertion ordered)
         held: list = []               # tasks touching a down node
@@ -342,8 +368,10 @@ class Engine:
         down: set = set()
         done: dict = {}
         events: list = []
-        busy = {name: 0.0 for name in self.resources}
-        delivered = {name: 0.0 for name in self.resources}
+        # the numeric core owns remaining/rates/busy/delivered and the
+        # flow/resource incidence; one fresh core per run
+        core = make_core(self.backend, self.resources, self.allocator,
+                         self._alloc)
         now = 0.0
         # -- spill/restore bookkeeping (preemption with snapshots) -----
         wasted: dict = {}             # tid -> work-units lost to resets
@@ -378,8 +406,7 @@ class Engine:
             for t in new_tasks:
                 by_id[t.tid] = t
                 dependents.setdefault(t.tid, [])
-                remaining[t.tid] = float(t.work)
-                scale[t.tid] = max(float(t.work), 1.0)
+                core.track(t.tid, t.work)
             for t in new_tasks:
                 nd = 0
                 for d in t.deps:
@@ -403,6 +430,17 @@ class Engine:
                     return True
             return False
 
+        def go(tid: str, t: Task) -> None:
+            """Add to the running set (and the core's incidence)."""
+            running[tid] = t
+            core.start(tid, t)
+
+        def drop(tid: str) -> None:
+            """Remove from the running set; the core syncs the task's
+            remaining progress out of its arrays."""
+            del running[tid]
+            core.stop(tid)
+
         def admit():
             nonlocal ready
             for tid in ready:
@@ -412,7 +450,7 @@ class Engine:
                 elif blocked(t):
                     held.append(tid)
                 else:
-                    running[tid] = t
+                    go(tid, t)
             ready = []
 
         def waste(tid: str) -> None:
@@ -423,7 +461,7 @@ class Engine:
             metric (and per-job attribution never sees their tids)."""
             if tid in synthetic:
                 return
-            lost = float(by_id[tid].work) - remaining[tid]
+            lost = float(by_id[tid].work) - core.remaining_of(tid)
             if lost > 0:
                 wasted[tid] = wasted.get(tid, 0.0) + lost
 
@@ -453,11 +491,11 @@ class Engine:
                 return False
             frozen.add(tid)
             if tid in running:
-                del running[tid]
+                drop(tid)
                 parked.append(tid)
                 if (spill_to is not None and self.spill_route is not None
                         and math.isfinite(t.state_bytes)):
-                    snapshot[tid] = remaining[tid]
+                    snapshot[tid] = core.remaining_of(tid)
                     sid = f"~spill:{tid}!{xfer_seq[0]}"
                     xfer_seq[0] += 1
                     spill_site[tid] = (spill_to, sid)
@@ -470,7 +508,7 @@ class Engine:
                                    t.state_bytes, node=t.node)])
                 else:
                     waste(tid)
-                    remaining[tid] = float(t.work)
+                    core.set_remaining(tid, float(t.work))
             return True
 
         def resume(tid: str) -> bool:
@@ -507,7 +545,7 @@ class Engine:
                     if blocked(t):
                         held.append(tid)
                     else:
-                        running[tid] = t
+                        go(tid, t)
             return True
 
         ctl = Control(now=lambda: now, submit=register, preempt=preempt,
@@ -515,44 +553,22 @@ class Engine:
                       call_at=lambda at, fn: push(max(float(at), now),
                                                   ("control", fn)))
 
-        def rates() -> Tuple[Dict[str, float], Dict[str, int]]:
-            holds: Dict[str, int] = {}
-            flows: Dict[str, tuple] = {}
-            out: Dict[str, float] = {}
-            for tid, t in running.items():
-                if not t.resources:       # pure delay task
-                    out[tid] = 1.0
-                else:
-                    flows[tid] = t.resources
-                    for r in t.resources:
-                        holds[r] = holds.get(r, 0) + 1
-            # blocked() keeps any task touching a down node out of
-            # `running`, so every held resource here is live
-            cap = {name: self.resources[name].aggregate_rate(n)
-                   for name, n in holds.items()}
-            out.update(self._alloc(flows, cap, holds))
-            return out, holds
-
         register(initial)
         admit()
         while running or timed:
-            rate, holds = rates() if running else ({}, {})
-            dt = math.inf
-            for tid, r in rate.items():
-                if r > _EPS:
-                    dt = min(dt, remaining[tid] / r)
+            # the core re-solves lazily: however many admissions,
+            # completions, preemptions or failures landed since the last
+            # step, the accumulated dirty set costs one (incremental)
+            # re-solve here — and a step with an unchanged running set
+            # costs none on the array backend
+            core.solve()
+            dt = core.min_dt()
             if timed:
                 dt = min(dt, timed[0][0] - now)
             if not math.isfinite(dt):
                 break                      # stalled: nodes down forever
             dt = max(dt, 0.0)
-
-            for tid, r in rate.items():
-                remaining[tid] -= r * dt
-                for name in by_id[tid].resources:
-                    delivered[name] += r * dt
-            for name in holds:
-                busy[name] += dt
+            core.advance(dt)
             now += dt
 
             # timed events due now: node failures/recoveries, deferred
@@ -567,9 +583,10 @@ class Engine:
                         lost = [tid for tid, t in running.items()
                                 if blocked(t)]
                         for tid in lost:
-                            del running[tid]
+                            drop(tid)
                             waste(tid)
-                            remaining[tid] = float(by_id[tid].work)
+                            core.set_remaining(tid,
+                                               float(by_id[tid].work))
                             held.append(tid)
                     else:
                         down.discard(node)
@@ -577,7 +594,7 @@ class Engine:
                                 if not blocked(by_id[tid])]
                         for tid in back:
                             held.remove(tid)
-                            running[tid] = by_id[tid]
+                            go(tid, by_id[tid])
                 elif item[0] == "submit":
                     register(item[1])
                 else:
@@ -586,11 +603,11 @@ class Engine:
             # completions — ordered by (kind, tid) so same-timestamp
             # traces are byte-stable across runs and task-list orderings
             finished = sorted(
-                (tid for tid in running
-                 if remaining[tid] <= _EPS * scale[tid]),
+                core.finished(),
                 key=lambda tid: (by_id[tid].kind.value, tid))
             for tid in finished:
-                t = running.pop(tid)
+                t = running[tid]
+                drop(tid)
                 done[tid] = now
                 events.append(SimEvent(now, t.kind, tid))
                 for dep in dependents[tid]:
@@ -614,13 +631,13 @@ class Engine:
                     t0 = resident_from.pop(target, now)
                     residency[site] = (residency.get(site, 0.0)
                                        + tt.state_bytes * (now - t0))
-                    remaining[target] = snapshot.pop(target)
+                    core.set_remaining(target, snapshot.pop(target))
                     if target not in frozen:
                         parked.remove(target)
                         if blocked(tt):
                             held.append(target)
                         else:
-                            running[target] = tt
+                            go(target, tt)
             for tid in finished:
                 for fn in self._done_listeners:
                     fn(ctl, tid)
@@ -628,6 +645,7 @@ class Engine:
                 admit()
 
         complete = len(done) == len(by_id)
+        delivered = core.delivered()
         utilized = {name: (delivered[name] / res.capacity
                            if res.capacity > 0 else 0.0)
                     for name, res in self.resources.items()}
@@ -639,7 +657,8 @@ class Engine:
                                + by_id[tid].state_bytes * (now - t0))
         events.sort(key=lambda e: (e.time, e.kind.value, e.subject))
         return SimResult(makespan=now, finish_times=done, events=events,
-                         busy_time=busy, complete=complete,
+                         busy_time=core.busy_time(), complete=complete,
                          utilized_time=utilized, wasted_work=wasted,
                          spilled_bytes=spilled, restored_bytes=restored,
-                         storage_residency=residency)
+                         storage_residency=residency,
+                         alloc_stats=core.stats())

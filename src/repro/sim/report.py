@@ -49,6 +49,7 @@ def summarize(result: SimResult, *, name: str = "") -> dict:
     return {"name": name, "makespan_s": result.makespan,
             "complete": result.complete,
             "n_tasks": len(result.finish_times),
+            "n_events": len(result.events),
             "events_by_kind": dict(kinds), "utilization": util,
             "utilized": utilized,
             # preemption/failure economics: replayed work, checkpoint
@@ -58,6 +59,17 @@ def summarize(result: SimResult, *, name: str = "") -> dict:
             "restored_bytes": sum(result.restored_bytes.values()),
             "storage_residency_byte_s":
                 sum(result.storage_residency.values())}
+
+
+def perf_digest(n_events: int, wall_s: float) -> dict:
+    """Events/sec accounting for one timed simulation (or scenario):
+    the engine-performance number `benchmarks/bench_sim.py` records per
+    scenario and the perf CI lane gates on.  ``wall_s`` must come from
+    `time.perf_counter` deltas — wall-clock `time.time` is not
+    monotonic and has too little resolution for sub-second runs."""
+    return {"n_events": int(n_events), "wall_s": round(wall_s, 3),
+            "events_per_sec": round(n_events / wall_s, 1)
+            if wall_s > 0 else float("inf")}
 
 
 def per_tenant(result: SimResult, workload) -> dict:

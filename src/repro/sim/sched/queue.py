@@ -123,7 +123,11 @@ class ClusterScheduler:
     """Online scheduler over one topology and one policy.
 
     ``policy`` is a name from `policies.make_policy` or a policy
-    instance; ``allocator`` picks the engine's rate allocator;
+    instance; ``allocator`` picks the engine's rate allocator and
+    ``backend`` its numeric core (the default incremental array hot
+    loop, or ``"legacy"`` for the dict reference — every churn the
+    scheduler drives through `Control` dirties the engine's incidence
+    and costs one incremental re-solve per event batch);
     ``admission=True`` turns on the SLO admission guard (jobs with a
     finite ``deadline_s`` that is infeasible even on an idle placement
     are rejected at submit time).  `run` consumes a `Job` list (see
@@ -131,11 +135,13 @@ class ClusterScheduler:
     """
 
     def __init__(self, topo, policy: Union[str, object] = "pack", *,
-                 allocator: str = "waterfill", admission: bool = False):
+                 allocator: str = "waterfill", admission: bool = False,
+                 backend: str = "array"):
         self.topo = topo
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
         self.allocator = allocator
+        self.backend = backend
         self.admission = admission
 
     def run(self, jobs: Iterable[Job],
@@ -149,7 +155,7 @@ class ClusterScheduler:
         callbacks against finalized records, and is refused."""
         topo, policy = self.topo, self.policy
         engine = engine if engine is not None else \
-            topo.engine(self.allocator)
+            topo.engine(self.allocator, backend=self.backend)
         if getattr(engine, "_sched_bound", False):
             raise ValueError(
                 "this engine already carries a scheduler's callbacks "
@@ -324,12 +330,14 @@ class ClusterScheduler:
 
 
 def run_policies(topo_factory, jobs, policies=("fifo", "pack"), *,
-                 allocator: str = "waterfill") -> dict:
+                 allocator: str = "waterfill",
+                 backend: str = "array") -> dict:
     """Run one arrival stream under several policies on fresh topologies;
     returns ``{policy_name: SchedResult}`` (see
     `validate.compare_policies` for the summarized comparison)."""
     out = {}
     for p in policies:
-        sched = ClusterScheduler(topo_factory(), p, allocator=allocator)
+        sched = ClusterScheduler(topo_factory(), p, allocator=allocator,
+                                 backend=backend)
         out[sched.policy.name] = sched.run(jobs)
     return out

@@ -140,6 +140,11 @@ class Topology:
         return out
 
     def resources(self) -> list:
+        """Engine resources in **stable topology order**: five per node
+        (cpu/tx/rx/accel/ici, nodes in insertion order) followed by the
+        fabric tier.  The order is the contract behind
+        `resource_index` — the engine's array backend indexes its
+        incidence structure by these integer ids."""
         out = []
         for n in self.nodes.values():
             rf = self._cpu_rate_fn(n) if self._cpu_rate_fn else None
@@ -153,9 +158,17 @@ class Topology:
         out.extend(self.fabric_resources())
         return out
 
-    def engine(self, allocator: str = "waterfill") -> Engine:
+    def resource_index(self) -> dict:
+        """Stable resource-name -> integer-id map (the order
+        `resources` emits).  Rebuilding a topology with the same nodes
+        and fabric yields the same ids, so incidence structures and
+        traces are reproducible across runs."""
+        return {r.name: i for i, r in enumerate(self.resources())}
+
+    def engine(self, allocator: str = "waterfill",
+               backend: str = "array") -> Engine:
         return Engine(self.resources(), allocator=allocator,
-                      spill_route=self.spill_route)
+                      spill_route=self.spill_route, backend=backend)
 
     def spill_route(self, src: str, dst: str) -> tuple:
         """Resources a preemption spill/restore transfer holds between

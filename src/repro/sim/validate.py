@@ -113,6 +113,7 @@ def measure_interference(make_topo, tenants) -> dict:
         "slowdown": {n: colocated[n] / isolated[n] for n in isolated},
         "makespan": res.makespan,
         "complete": res.complete,
+        "n_events": len(res.events),
     }
 
 
@@ -138,6 +139,48 @@ def compare_allocators(make_topo, build) -> dict:
         out["results"][allocator] = res
         out[allocator] = res.makespan
     out["speedup"] = out["progressive"] / out["waterfill"]
+    return out
+
+
+def compare_backends(make_topo, build, *,
+                     allocator: str = "waterfill") -> dict:
+    """One workload under the legacy dict hot loop vs the incremental
+    array hot loop — the engine-performance regression cell.
+
+    ``make_topo()``/``build(topo)`` as in `compare_allocators`.  Both
+    runs use the same ``allocator``; the returned dict carries
+    per-backend wall time (`time.perf_counter`), event counts,
+    ``events_per_sec``, ``speedup`` (array events/sec over legacy
+    events/sec), the engines' ``alloc_stats`` (solve counts — how much
+    the dirty-set machinery avoided), and ``bit_identical`` — whether
+    the two `SimResult` event traces and finish times matched exactly,
+    which they must (`tests/test_sim_alloc.py` pins the same invariant;
+    the benchmark records it so a perf run that drifted is visibly
+    invalid).  ``results`` carries the raw `SimResult`s (pop before
+    JSON-serializing).
+    """
+    import time
+
+    out: dict = {"results": {}, "allocator": allocator}
+    for backend in ("legacy", "array"):
+        topo = make_topo()
+        tasks = build(topo)
+        eng = topo.engine(allocator=allocator, backend=backend)
+        t0 = time.perf_counter()
+        res = eng.run(tasks)
+        wall = time.perf_counter() - t0
+        if not res.complete:
+            raise RuntimeError(f"{backend} run stalled")
+        out["results"][backend] = res
+        out[backend] = {"wall_s": wall, "n_events": len(res.events),
+                        "events_per_sec": len(res.events) / wall
+                        if wall > 0 else float("inf"),
+                        "alloc_stats": res.alloc_stats}
+    a, l = out["results"]["array"], out["results"]["legacy"]
+    out["bit_identical"] = (a.events == l.events
+                            and a.finish_times == l.finish_times)
+    out["speedup"] = (out["array"]["events_per_sec"]
+                      / out["legacy"]["events_per_sec"])
     return out
 
 

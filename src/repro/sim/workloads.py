@@ -135,6 +135,76 @@ def shuffle(topo: Topology, *, cpu_work_per_node: float,
     return tasks
 
 
+def pipelined_shuffle_waves(topo: Topology, *, waves: int = 8,
+                            cpu_work_per_node: float = 1.0,
+                            bytes_per_node: float = 2.0,
+                            tasks_per_node: int = 2,
+                            reduce_work_per_node: float = 0.25,
+                            jitter: float = 0.0, seed: int = 0,
+                            tag: str = "",
+                            state_bytes: Optional[float] = None) -> list:
+    """Rack-local shuffle waves, chained per rack — the engine scale cell.
+
+    Every rack runs ``waves`` successive `shuffle` rounds on its own
+    compute nodes (wave *k*'s map tasks depend on wave *k-1*'s reduce on
+    the same node), the steady-state shape of a rack-packed analytics
+    or training-input pipeline: thousands of tasks overall, a bounded
+    working set per rack, and — because no flow leaves its ToR — a
+    flow/resource incidence whose connected components stay rack-sized.
+    That makes it the pinned workload for the events/sec perf lane: the
+    legacy dict hot loop pays O(all flows) per event while the
+    incremental array core re-solves one rack's component, which is
+    exactly the gap `benchmarks/bench_sim.py --cell engine_scale`
+    tracks.  Requires a topology with a `Fabric` (racks); racks with
+    fewer than 2 compute nodes idle.
+
+    ``jitter`` > 0 scales every task's work by a deterministic
+    per-task factor in ``[1, 1 + jitter)`` drawn from
+    ``random.Random(seed)`` — skewed partition sizes, in effect.
+    Without it the symmetric racks finish their waves at identical
+    timestamps and the whole run collapses into ~3*waves batched event
+    steps — realistic clusters are not lock-step, and a perf cell that
+    batches everything never exercises the per-event hot loop it is
+    supposed to measure.  The draw order is fixed by task generation
+    order, so traces stay reproducible.
+    """
+    import random
+
+    if waves < 1:
+        raise ValueError(f"waves must be >= 1, got {waves!r}")
+    rng = random.Random(seed)
+    tasks: list = []
+    for rack in range(topo.n_racks):
+        nodes = topo.rack_nodes(rack, topo.compute_node_names)
+        if len(nodes) < 2:
+            continue
+        prev_reduce: dict = {}
+        for w in range(waves):
+            wtag = f"{tag}:r{rack}.{w}"
+            wave = shuffle(topo, cpu_work_per_node=cpu_work_per_node,
+                           bytes_per_node=bytes_per_node,
+                           tasks_per_node=tasks_per_node,
+                           reduce_work_per_node=reduce_work_per_node,
+                           tag=wtag, nodes=nodes,
+                           state_bytes=state_bytes)
+            if jitter > 0:
+                wave = [dataclasses.replace(
+                            t, work=t.work * (1.0 + jitter * rng.random()))
+                        for t in wave]
+            if prev_reduce:
+                wave = [dataclasses.replace(
+                            t, deps=t.deps + (prev_reduce[t.node],))
+                        if t.tid.startswith(f"map{wtag}:") else t
+                        for t in wave]
+            prev_reduce = {u: f"reduce{wtag}:{u}" for u in nodes}
+            tasks.extend(wave)
+    if not tasks:
+        raise ValueError("pipelined_shuffle_waves needs a topology with "
+                         "at least one rack of >= 2 compute nodes "
+                         "(pass a Fabric)")
+    return tasks
+
+
 def analytics_dag(topo: Topology, *, scan_work_per_node: float,
                   shuffle_bytes_per_node: float, join_work_total: float,
                   output_bytes_per_node: float = 0.0,

@@ -1,0 +1,184 @@
+"""Numeric-core bit compatibility: the vectorized array hot loop must
+reproduce the legacy dict hot loop exactly — bitwise-equal allocator
+rates on random instances, byte-identical engine event traces and
+finish times on every pinned workload cell, and utilized-time that
+agrees to the last-ulp association-order tolerance."""
+import random
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.sim import (Fabric, analytics_dag, compare_backends,
+                       lovelock_cluster, multi_tenant,
+                       pipelined_shuffle_waves, progressive_fill_rates,
+                       reference_tenants, scatter_gather, shuffle,
+                       training_from_trace, water_filling_rates)
+from repro.sim.alloc import (ArrayCore, DictCore, make_core,
+                             vector_progressive_fill, vector_water_fill)
+
+REL_TRACE = {"n_devices": 8, "phases": [
+    {"kind": "compute", "flops": 0.5},
+    {"kind": "collective_phase", "tier": "dcn", "bytes": 3.0}]}
+
+
+# ---------------------------------------------------------------------------
+# vectorized allocators == dict allocators, bitwise, on random instances
+# ---------------------------------------------------------------------------
+
+
+def _random_instance(seed):
+    rng = random.Random(seed)
+    n_res = rng.randint(1, 7)
+    names = [f"r{i}" for i in range(n_res)]
+    cap = {n: rng.uniform(0.25, 4.0) for n in names}
+    flows = {}
+    for i in range(rng.randint(1, 12)):
+        k = rng.randint(1, n_res)
+        flows[f"f{i}"] = tuple(rng.sample(names, k))
+    holds = {}
+    for res in flows.values():
+        for r in res:
+            holds[r] = holds.get(r, 0) + 1
+    cap = {n: c for n, c in cap.items() if n in holds}
+    return flows, cap, holds
+
+
+def _csr(flows, cap, holds):
+    """The dict instance as the CSR the array core feeds its allocators.
+    The local id order is arbitrary (the allocators' arithmetic is
+    order-independent); sorted names keep the mapping reproducible."""
+    names = sorted(cap)
+    index = {n: i for i, n in enumerate(names)}
+    indptr = [0]
+    indices = []
+    for res in flows.values():
+        indices.extend(index[r] for r in res)
+        indptr.append(len(indices))
+    cap_v = np.array([cap[n] for n in names])
+    holds_v = np.array([holds[n] for n in names], dtype=np.int64)
+    return (np.array(indptr, dtype=np.int64),
+            np.array(indices, dtype=np.int64), cap_v, holds_v)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=120, deadline=None)
+def test_vector_waterfill_bitwise_equals_dict_reference(seed):
+    flows, cap, holds = _random_instance(seed)
+    ref = water_filling_rates(flows, cap, holds)
+    indptr, indices, cap_v, holds_v = _csr(flows, cap, holds)
+    vec = vector_water_fill(indptr, indices, cap_v)
+    for i, tid in enumerate(flows):
+        assert vec[i] == ref[tid], (seed, tid, vec[i], ref[tid])
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=120, deadline=None)
+def test_vector_progressive_bitwise_equals_dict_reference(seed):
+    flows, cap, holds = _random_instance(seed)
+    ref = progressive_fill_rates(flows, cap, holds)
+    indptr, indices, cap_v, holds_v = _csr(flows, cap, holds)
+    vec = vector_progressive_fill(indptr, indices, cap_v, holds_v)
+    for i, tid in enumerate(flows):
+        assert vec[i] == ref[tid], (seed, tid, vec[i], ref[tid])
+
+
+def test_vector_waterfill_tolerates_dead_cached_resources():
+    """The core's cached component numbering keeps resources whose
+    holds dropped to 0 (cap 0, no pairs).  They must be inert: same
+    rates as an instance without them."""
+    indptr = np.array([0, 2, 3], dtype=np.int64)
+    indices = np.array([0, 2, 2], dtype=np.int64)   # resource 1 is dead
+    cap = np.array([1.0, 0.0, 1.0])
+    live = vector_water_fill(indptr, indices, cap)
+    squeezed = vector_water_fill(indptr,
+                                 np.array([0, 1, 1], dtype=np.int64),
+                                 np.array([1.0, 1.0]))
+    assert live.tolist() == squeezed.tolist()
+    holds = np.array([1, 0, 2], dtype=np.int64)
+    prog = vector_progressive_fill(indptr, indices, cap, holds)
+    assert prog.tolist() == [0.5, 0.5]
+
+
+def test_make_core_dispatch_and_rejection():
+    resources = {}
+    assert isinstance(make_core("legacy", resources, "waterfill",
+                                water_filling_rates), DictCore)
+    assert isinstance(make_core("array", resources, "waterfill",
+                                water_filling_rates), ArrayCore)
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_core("numpy", resources, "waterfill", water_filling_rates)
+
+
+# ---------------------------------------------------------------------------
+# engine traces byte-identical across backends on pinned workload cells
+# ---------------------------------------------------------------------------
+
+
+def _two_rack_2to1(**kw):
+    return lovelock_cluster(8, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4,
+                                          oversubscription=2.0,
+                                          core_oversubscription=2.0),
+                            **kw)
+
+
+CELLS = (
+    ("shuffle_fabric", _two_rack_2to1,
+     lambda t: shuffle(t, cpu_work_per_node=0.5, bytes_per_node=7.0)),
+    ("analytics_skew", _two_rack_2to1,
+     lambda t: analytics_dag(t, scan_work_per_node=0.5,
+                             shuffle_bytes_per_node=6.0,
+                             join_work_total=4.0,
+                             output_bytes_per_node=3.0, skew=0.6)),
+    ("training", lambda: lovelock_cluster(8, 1, accel_rate=1.0),
+     lambda t: training_from_trace(t, REL_TRACE, steps=3,
+                                   accel_flops=1.0, hbm_bw=1.0)),
+    ("scatter_gather", lambda: lovelock_cluster(8, 1, accel_rate=1.0),
+     lambda t: scatter_gather(t, request_bytes_total=0.8,
+                              response_bytes_total=8.0,
+                              cpu_work_per_worker=0.5)),
+    ("multi_tenant", lambda: _two_rack_2to1(storage_nodes=2),
+     lambda t: list(multi_tenant(t, reference_tenants()).tasks)),
+    ("shuffle_waves", _two_rack_2to1,
+     lambda t: pipelined_shuffle_waves(t, waves=2, tasks_per_node=2,
+                                       jitter=0.35, seed=7)),
+)
+
+
+@pytest.mark.parametrize("allocator", ["waterfill", "progressive"])
+@pytest.mark.parametrize("name,make_topo,build", CELLS,
+                         ids=[n for n, _, _ in CELLS])
+def test_backends_byte_identical_traces(name, make_topo, build,
+                                        allocator):
+    """The contract the perf lane rests on: on every pinned cell the
+    array core's event trace and finish times equal the dict core's
+    byte for byte (not approximately), under both allocators."""
+    cmp = compare_backends(make_topo, build, allocator=allocator)
+    a = cmp["results"]["array"]
+    l = cmp["results"]["legacy"]
+    assert cmp["bit_identical"], (name, allocator)
+    assert a.events == l.events
+    assert a.finish_times == l.finish_times
+    assert a.spilled_bytes == l.spilled_bytes
+    assert a.restored_bytes == l.restored_bytes
+    # only delivered/utilized accounting may differ, and only at the
+    # last ulp (different association order of the same float terms)
+    for rname, secs in l.utilized_time.items():
+        assert a.utilized_time[rname] == pytest.approx(secs, rel=1e-9)
+    for rname, secs in l.busy_time.items():
+        assert a.busy_time[rname] == pytest.approx(secs, rel=1e-9)
+
+
+def test_backends_report_solve_stats():
+    """The perf lane's denominator: both runs expose their solve
+    counters, and the incremental core solves far less work than the
+    from-scratch dict core on the wave workload."""
+    cmp = compare_backends(
+        _two_rack_2to1,
+        lambda t: pipelined_shuffle_waves(t, waves=2, tasks_per_node=2,
+                                          jitter=0.35, seed=7))
+    a, l = cmp["array"]["alloc_stats"], cmp["legacy"]["alloc_stats"]
+    assert a["backend"] == "array" and l["backend"] == "legacy"
+    assert a["flows_solved"] < l["flows_solved"] * 0.8, (a, l)
+    assert cmp["speedup"] > 0

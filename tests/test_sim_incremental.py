@@ -1,0 +1,259 @@
+"""Incremental re-solve churn: the array core's dirty-set machinery
+must survive every way the running set changes mid-run — preempt/resume
+(with and without spill), node failure/recovery, mid-run submission —
+and still replay the legacy dict core's event trace byte for byte.
+Also pins the batching win (N same-timestamp events cost one re-solve,
+not N) and the determinism of the jittered scale workload."""
+import dataclasses
+
+import pytest
+
+from repro.sim import (EventKind, Fabric, NodeModel, Topology,
+                       lovelock_cluster, pipelined_shuffle_waves,
+                       shuffle)
+from repro.sim.sched import reference_preempt_stream, run_policies
+
+ALLOCATORS = ("waterfill", "progressive")
+
+
+def _mini_topo(n=4, storage=1):
+    return Topology(
+        [NodeModel(f"n{i}", "smartnic", 1.0, accel_rate=1.0)
+         for i in range(n)]
+        + [NodeModel(f"st{i}", "storage", 1.0, accel_rate=0.0,
+                     ici_bw=0.0) for i in range(storage)])
+
+
+def _trace(res):
+    return (res.events, res.finish_times, res.spilled_bytes,
+            res.restored_bytes, res.storage_residency)
+
+
+def _both(make_engine, drive):
+    """Run ``drive`` on a legacy engine and an array engine built by
+    ``make_engine(backend)``; returns both SimResults after asserting
+    the traces are byte-identical."""
+    out = {}
+    for backend in ("legacy", "array"):
+        eng = make_engine(backend)
+        out[backend] = drive(eng)
+    assert _trace(out["array"]) == _trace(out["legacy"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# preempt / resume churn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("allocator", ALLOCATORS)
+@pytest.mark.parametrize("t_preempt,t_resume",
+                         [(0.7, 1.3), (1.0, 1.0001), (2.0, 5.0)])
+def test_preempt_resume_traces_match_legacy(allocator, t_preempt,
+                                            t_resume):
+    """Reset-preemption at varying points of a shuffle (including a
+    near-immediate resume) releases and re-acquires resources through
+    the dirty-set path; the trace must match the from-scratch core."""
+    def drive(eng):
+        topo = _mini_topo()
+        eng.call_at(t_preempt, lambda ctl: ctl.preempt("xfer:n0:n1"))
+        eng.call_at(t_resume, lambda ctl: ctl.resume("xfer:n0:n1"))
+        res = eng.run(shuffle(topo, cpu_work_per_node=0.5,
+                              bytes_per_node=3.0))
+        assert res.complete
+        return res
+
+    _both(lambda b: _mini_topo().engine(allocator=allocator, backend=b),
+          drive)
+
+
+@pytest.mark.parametrize("allocator", ALLOCATORS)
+def test_spill_restore_traces_match_legacy(allocator):
+    """Spill-to-storage preemption adds checkpoint flows (spill out,
+    restore back) on top of the churn; byte traces — including
+    spilled/restored byte maps and storage residency — must agree."""
+    def drive(eng):
+        topo = _mini_topo()
+        eng.call_at(1.0, lambda ctl: ctl.preempt("xfer:n0:n1",
+                                                 spill_to="st0"))
+        eng.call_at(3.0, lambda ctl: ctl.resume("xfer:n0:n1"))
+        res = eng.run(shuffle(topo, cpu_work_per_node=0.5,
+                              bytes_per_node=3.0, state_bytes=0.5))
+        assert res.complete
+        assert res.spilled_bytes and res.restored_bytes
+        return res
+
+    _both(lambda b: _mini_topo().engine(allocator=allocator, backend=b),
+          drive)
+
+
+# ---------------------------------------------------------------------------
+# node failure / recovery churn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("allocator", ALLOCATORS)
+@pytest.mark.parametrize("t_fail", [0.3, 0.9, 1.7])
+def test_fail_recover_traces_match_legacy(allocator, t_fail):
+    """A node failing mid-run blocks its whole slice of the running set
+    at once (a maximally-batched dirty set) and recovery re-admits it;
+    sweep the failure time across the run's phases."""
+    def make(backend):
+        topo = lovelock_cluster(8, 1, accel_rate=1.0,
+                                fabric=Fabric(rack_size=4))
+        eng = topo.engine(allocator=allocator, backend=backend)
+        eng.inject_failure("nic0", at=t_fail, recover_at=t_fail + 0.7)
+        return eng
+
+    def drive(eng):
+        topo = lovelock_cluster(8, 1, accel_rate=1.0,
+                                fabric=Fabric(rack_size=4))
+        res = eng.run(shuffle(topo, cpu_work_per_node=0.5,
+                              bytes_per_node=4.0))
+        assert res.complete
+        assert res.events_of(EventKind.NODE_FAIL)
+        return res
+
+    _both(make, drive)
+
+
+# ---------------------------------------------------------------------------
+# mid-run submission churn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("allocator", ALLOCATORS)
+@pytest.mark.parametrize("t_submit", [0.0, 0.6, 1.5])
+def test_midrun_submit_traces_match_legacy(allocator, t_submit):
+    """Tasks arriving while others run dirty only their components;
+    sweep the arrival across solve boundaries (0.0 lands in the same
+    batch as the initial admission)."""
+    def drive(eng):
+        topo = _mini_topo()
+        late = shuffle(topo, cpu_work_per_node=0.25,
+                       bytes_per_node=2.0, tag="late")
+        eng.submit(late, at=t_submit)
+        res = eng.run(shuffle(topo, cpu_work_per_node=0.5,
+                              bytes_per_node=3.0))
+        assert res.complete
+        assert set(t.tid for t in late) <= set(res.finish_times)
+        return res
+
+    _both(lambda b: _mini_topo().engine(allocator=allocator, backend=b),
+          drive)
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end: policies drive preempt/spill/submit churn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fifo", "preempt", "preempt-ckpt"])
+def test_scheduled_stream_traces_match_legacy(policy):
+    """The online scheduler exercises every churn path at once
+    (arrivals, placement, priority preemption, spill/restore); its
+    event trace must not depend on the numeric core."""
+    jobs = reference_preempt_stream(n_jobs=8, seed=3)
+    traces = {}
+    for backend in ("legacy", "array"):
+        out = run_policies(
+            lambda: lovelock_cluster(8, 1, accel_rate=1.0,
+                                     storage_nodes=2,
+                                     fabric=Fabric(rack_size=5,
+                                                   oversubscription=2.0)),
+            jobs, policies=(policy,), backend=backend)
+        (sr,) = out.values()
+        traces[backend] = _trace(sr.result)
+    assert traces["array"] == traces["legacy"]
+
+
+# ---------------------------------------------------------------------------
+# batching: N same-timestamp events -> one re-solve
+# ---------------------------------------------------------------------------
+
+
+def test_same_timestamp_batch_costs_one_solve():
+    """32 identical flows through one bottleneck start together and
+    finish together: the array core must charge O(1) solves, not O(N)
+    — dirt accrues across a same-timestamp batch and is drained once."""
+    from repro.sim import Task
+    topo = _mini_topo(n=2, storage=0)
+    tasks = [Task(f"t{i}", EventKind.DMA,
+                  (topo.tx("n0"), topo.rx("n1")), 1.0, node="n0")
+             for i in range(32)]
+    res = topo.engine(backend="array").run(tasks)
+    assert res.complete
+    stats = res.alloc_stats
+    assert stats["backend"] == "array"
+    assert stats["n_solves"] <= 3, stats
+    legacy = _mini_topo(n=2, storage=0).engine(backend="legacy").run(
+        [Task(f"t{i}", EventKind.DMA,
+              (topo.tx("n0"), topo.rx("n1")), 1.0, node="n0")
+         for i in range(32)])
+    assert _trace(res) == _trace(legacy)
+
+
+def test_staggered_completions_resolve_incrementally():
+    """Distinct-work flows complete at distinct times across two
+    *disjoint* components (n0->n1 and n2->n3 never share a resource):
+    each completion re-solves only its own component, so the array
+    core's total flows-solved stays below the legacy core's
+    all-flows-every-event cost."""
+    from repro.sim import Task
+    topo = _mini_topo(n=4, storage=0)
+    tasks = [Task(f"t{i}:{j}", EventKind.DMA,
+                  (topo.tx(f"n{2 * i}"), topo.rx(f"n{2 * i + 1}")),
+                  1.0 + 0.1 * j + 0.05 * i, node=f"n{2 * i}")
+             for i in range(2) for j in range(4)]
+    res = topo.engine(backend="array").run(tasks)
+    legacy = _mini_topo(n=4, storage=0).engine(backend="legacy").run(
+        [dataclasses.replace(t) for t in tasks])
+    assert _trace(res) == _trace(legacy)
+    assert res.alloc_stats["flows_solved"] < \
+        legacy.alloc_stats["flows_solved"], (res.alloc_stats,
+                                             legacy.alloc_stats)
+
+
+# ---------------------------------------------------------------------------
+# the pinned scale workload is deterministic
+# ---------------------------------------------------------------------------
+
+
+def _scale_topo():
+    return lovelock_cluster(16, 1,
+                            fabric=Fabric(rack_size=8,
+                                          oversubscription=2.0))
+
+
+def test_shuffle_waves_jitter_is_deterministic():
+    """Same seed -> identical task list (tids and float-exact works);
+    different seed -> different works.  The perf cell's workload must
+    be reproducible or its events/sec floor is meaningless."""
+    a = pipelined_shuffle_waves(_scale_topo(), waves=2, jitter=0.35,
+                                seed=7)
+    b = pipelined_shuffle_waves(_scale_topo(), waves=2, jitter=0.35,
+                                seed=7)
+    assert [(t.tid, t.work) for t in a] == [(t.tid, t.work) for t in b]
+    c = pipelined_shuffle_waves(_scale_topo(), waves=2, jitter=0.35,
+                                seed=8)
+    assert [t.work for t in a] != [t.work for t in c]
+    assert [t.tid for t in a] == [t.tid for t in c]
+
+
+def test_shuffle_waves_zero_jitter_is_uniform():
+    base = pipelined_shuffle_waves(_scale_topo(), waves=2)
+    jit = pipelined_shuffle_waves(_scale_topo(), waves=2, jitter=0.35,
+                                  seed=7)
+    by_id = {t.tid: t.work for t in base}
+    assert set(by_id) == {t.tid for t in jit}
+    # jitter only ever inflates work, by at most the jitter fraction
+    for t in jit:
+        assert by_id[t.tid] <= t.work <= by_id[t.tid] * 1.35 + 1e-12
+    # and zero-jitter runs complete identically under both backends
+    topo = _scale_topo()
+    res_a = topo.engine(backend="array").run(
+        pipelined_shuffle_waves(topo, waves=2))
+    topo2 = _scale_topo()
+    res_l = topo2.engine(backend="legacy").run(
+        pipelined_shuffle_waves(topo2, waves=2))
+    assert _trace(res_a) == _trace(res_l)
