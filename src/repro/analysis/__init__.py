@@ -1,0 +1,32 @@
+"""simlint — AST static analysis for the simulator's two contracts:
+deterministic (byte-identical) traces and honest units.
+
+    python -m repro.analysis src            # lint, exit 1 on findings
+    python -m repro.analysis --list-rules
+
+Rule families (stable codes; suppress per line with
+``# simlint: ok[CODE] why``):
+
+  DET001-005  determinism: global RNG, wall-clock measurement,
+              hash-order iteration, partial-order sort keys, id() order
+  UNIT001-004 units: mixed +/-, bandwidth products, declared-vs-
+              returned mismatch, ambiguous `_gbps` names
+  FLOAT001    exact float == / != (bit-exact modules whitelisted via
+              [tool.simlint] per-module)
+  STATE001    module-level mutable state mutated from sim/sched code
+
+Importing this package loads every rule module, filling the registry.
+"""
+from repro.analysis.config import SimlintConfig, load_config
+from repro.analysis.core import (Finding, LintResult, RULES,
+                                 SCHEMA_VERSION, lint_paths, lint_source)
+from repro.analysis import (rules_det, rules_float,  # noqa: F401 (register)
+                            rules_state, rules_unit)
+from repro.analysis.reporting import (render_json, render_rules,
+                                      render_text)
+
+__all__ = [
+    "Finding", "LintResult", "RULES", "SCHEMA_VERSION", "SimlintConfig",
+    "lint_paths", "lint_source", "load_config", "render_json",
+    "render_rules", "render_text",
+]

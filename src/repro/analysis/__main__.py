@@ -1,0 +1,62 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean, 1 findings, 2 bad invocation/config.  With no
+paths, lints the ``include`` roots from ``[tool.simlint]`` (default:
+``src``).  ``--format json --out SIMLINT.json`` is what the CI
+``static-analysis`` lane uploads.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.analysis import (load_config, lint_paths, render_json,
+                            render_rules, render_text)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="simlint: determinism + units static analysis")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories (default: [tool.simlint] "
+                         "include roots)")
+    ap.add_argument("--root", default=".",
+                    help="project root holding pyproject.toml")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the report to this file")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(render_rules())
+        return 0
+
+    root = pathlib.Path(args.root)
+    try:
+        config = load_config(root)
+    except ValueError as e:
+        print(f"simlint: bad [tool.simlint] config: {e}",
+              file=sys.stderr)
+        return 2
+    paths = args.paths or [root / p for p in config.include]
+    missing = [str(p) for p in paths if not pathlib.Path(p).exists()]
+    if missing:
+        print(f"simlint: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    result = lint_paths(paths, config)
+    text = (render_json(result) if args.format == "json"
+            else render_text(result))
+    print(text)
+    if args.out:
+        pathlib.Path(args.out).write_text(
+            render_json(result) if args.out.endswith(".json") else text)
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,218 @@
+"""simlint configuration: ``[tool.simlint]`` in pyproject.toml.
+
+Schema (all keys optional; paths are posix, relative to the pyproject
+directory, and match by exact-file or directory prefix):
+
+    [tool.simlint]
+    include = ["src"]                 # default lint roots (CLI no-args)
+    exclude = ["src/generated"]       # never linted
+    timed-paths = ["src/repro/sim"]   # DET002 scope (wall-clock rules)
+    ordered-paths = ["src/repro/sim/engine.py"]   # DET004 scope
+    state-paths = ["src/repro/sim"]   # STATE001 scope
+
+    [tool.simlint.per-module]
+    "src/repro/sim/alloc.py" = ["FLOAT001"]   # codes disabled there
+
+Python 3.10 (the CI pin) has no ``tomllib``, and the repo bakes in no
+TOML dependency, so `_parse_toml_min` implements the small deterministic
+subset the schema above needs (tables, quoted keys, strings, string
+arrays, ints/floats/bools).  ``tomllib`` is preferred when present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import List, Optional
+
+try:                                    # python >= 3.11
+    import tomllib as _tomllib
+except ImportError:                     # python 3.10: minimal fallback
+    _tomllib = None
+
+# Scopes the path-sensitive rules consult.  The defaults mirror the
+# repo's own contracts; a pyproject [tool.simlint] table overrides them.
+DEFAULT_INCLUDE = ["src"]
+DEFAULT_TIMED = ["src/repro/sim", "src/repro/launch", "benchmarks"]
+DEFAULT_ORDERED = ["src/repro/sim"]
+DEFAULT_STATE = ["src/repro/sim"]
+
+
+def _norm(p: str) -> str:
+    return str(p).replace("\\", "/").strip("/")
+
+
+def _under(path: str, prefix: str) -> bool:
+    """True when ``path`` is ``prefix`` or inside that directory."""
+    return path == prefix or path.startswith(prefix + "/")
+
+
+@dataclasses.dataclass
+class SimlintConfig:
+    root: Path = dataclasses.field(default_factory=Path.cwd)
+    include: List[str] = dataclasses.field(
+        default_factory=lambda: list(DEFAULT_INCLUDE))
+    exclude: List[str] = dataclasses.field(default_factory=list)
+    timed_paths: List[str] = dataclasses.field(
+        default_factory=lambda: list(DEFAULT_TIMED))
+    ordered_paths: List[str] = dataclasses.field(
+        default_factory=lambda: list(DEFAULT_ORDERED))
+    state_paths: List[str] = dataclasses.field(
+        default_factory=lambda: list(DEFAULT_STATE))
+    per_module: dict = dataclasses.field(default_factory=dict)
+
+    def relpath(self, p) -> str:
+        """Config-root-relative posix path (falls back to the given
+        path when outside the root, e.g. a tmpdir fixture)."""
+        p = Path(p)
+        root = Path(self.root)
+        try:
+            return _norm(str(p.resolve().relative_to(root.resolve())))
+        except ValueError:
+            return _norm(str(p))
+
+    def path_excluded(self, rel: str) -> bool:
+        return any(_under(rel, _norm(e)) for e in self.exclude)
+
+    def rule_disabled(self, rel: str, code: str) -> bool:
+        for prefix, codes in self.per_module.items():
+            if _under(rel, _norm(prefix)) and code in codes:
+                return True
+        return False
+
+    def in_timed_paths(self, rel: str) -> bool:
+        return any(_under(rel, _norm(p)) for p in self.timed_paths)
+
+    def in_ordered_paths(self, rel: str) -> bool:
+        return any(_under(rel, _norm(p)) for p in self.ordered_paths)
+
+    def in_state_paths(self, rel: str) -> bool:
+        return any(_under(rel, _norm(p)) for p in self.state_paths)
+
+
+# ---------------------------------------------------------------------------
+# TOML subset parser (fallback for interpreters without tomllib)
+# ---------------------------------------------------------------------------
+
+_KEY_RE = re.compile(r'^\s*(?:"([^"]+)"|([A-Za-z0-9_.-]+))\s*=\s*(.+?)\s*$')
+_TABLE_RE = re.compile(r"^\s*\[([^\]]+)\]\s*$")
+
+
+def _strip_comment(line: str) -> str:
+    out, in_str = [], False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out).rstrip()
+
+
+def _parse_value(text: str):
+    text = text.strip()
+    if text.startswith("["):
+        inner = text[1:-1].strip()
+        if not inner:
+            return []
+        parts = re.findall(r'"((?:[^"\\]|\\.)*)"|([^,\s][^,]*)', inner)
+        return [_parse_value(f'"{a}"' if a else b) for a, b in parts]
+    if text.startswith('"') and text.endswith('"'):
+        return text[1:-1].encode().decode("unicode_escape")
+    if len(text) >= 2 and text.startswith("'") and text.endswith("'"):
+        return text[1:-1]               # TOML literal string: no escapes
+    if text in ("true", "false"):
+        return text == "true"
+    try:
+        return int(text)
+    except ValueError:
+        pass
+    try:
+        return float(text)
+    except ValueError:
+        raise ValueError(f"unsupported TOML value: {text!r}")
+
+
+def _table_parts(header: str) -> List[str]:
+    """Split a table header on dots outside quoted segments."""
+    parts, buf, in_str = [], "", False
+    for ch in header:
+        if ch == '"':
+            in_str = not in_str
+            continue
+        if ch == "." and not in_str:
+            parts.append(buf.strip())
+            buf = ""
+        else:
+            buf += ch
+    parts.append(buf.strip())
+    return parts
+
+
+def _parse_toml_min(text: str) -> dict:
+    """Parse the TOML subset `[tool.simlint]` needs (see module doc).
+
+    Multi-line arrays are joined first: an unclosed ``[`` on a
+    key-value line consumes following lines until brackets balance.
+    """
+    root: dict = {}
+    table = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i])
+        i += 1
+        if not line.strip():
+            continue
+        m = _TABLE_RE.match(line)
+        if m:
+            table = root
+            for part in _table_parts(m.group(1)):
+                table = table.setdefault(part, {})
+            continue
+        while line.count("[") > line.count("]") and i < len(lines):
+            line += " " + _strip_comment(lines[i]).strip()
+            i += 1
+        m = _KEY_RE.match(line)
+        if not m:
+            raise ValueError(f"unparseable TOML line: {line!r}")
+        key = m.group(1) if m.group(1) is not None else m.group(2)
+        table[key] = _parse_value(m.group(3))
+    return root
+
+
+def _load_toml(path: Path) -> dict:
+    if _tomllib is not None:
+        return _tomllib.loads(path.read_text())
+    return _parse_toml_min(path.read_text())
+
+
+def load_config(root: Optional[Path] = None) -> SimlintConfig:
+    """Build a `SimlintConfig` from ``<root>/pyproject.toml``; missing
+    file or missing ``[tool.simlint]`` table means pure defaults."""
+    root = Path(root) if root is not None else Path.cwd()
+    cfg = SimlintConfig(root=root)
+    py = root / "pyproject.toml"
+    if not py.is_file():
+        return cfg
+    data = _load_toml(py)
+    table = data.get("tool", {}).get("simlint", {})
+    if not table:
+        return cfg
+    mapping = {"include": "include", "exclude": "exclude",
+               "timed-paths": "timed_paths",
+               "ordered-paths": "ordered_paths",
+               "state-paths": "state_paths"}
+    for toml_key, attr in mapping.items():
+        if toml_key in table:
+            val = table[toml_key]
+            if (not isinstance(val, list)
+                    or not all(isinstance(v, str) for v in val)):
+                raise ValueError(
+                    f"[tool.simlint] {toml_key} must be a string list")
+            setattr(cfg, attr, val)
+    pm = table.get("per-module", {})
+    if not isinstance(pm, dict):
+        raise ValueError("[tool.simlint.per-module] must be a table")
+    cfg.per_module = {k: list(v) for k, v in pm.items()}
+    return cfg

@@ -1,0 +1,234 @@
+"""simlint core: findings, the rule registry, suppressions, the driver.
+
+The simulator's trust rests on two *static* contracts that the dynamic
+test suite can only spot-check:
+
+  * determinism — byte-identical event traces across allocators,
+    backends, hash seeds and re-runs (the DET rules), and
+  * honest units — bytes vs seconds vs Gbit/s vs GB/s never silently
+    mixed in the cost model or the engine (the UNIT rules).
+
+simlint walks Python ASTs and enforces both at review time.  A rule is
+a class with a stable ``code`` (e.g. ``DET002``) registered via
+`@register`; a finding on a line carrying ``# simlint: ok[CODE]`` is
+suppressed (the suppression is itself counted, so reports stay honest
+about what was waved through).  Configuration comes from
+``[tool.simlint]`` in pyproject.toml (see `repro.analysis.config`).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+from repro.analysis.config import SimlintConfig
+
+#: bumped whenever the JSON reporter's shape changes incompatibly;
+#: tests pin the schema so downstream CI parsers never break silently.
+SCHEMA_VERSION = 1
+
+_SUPPRESS_RE = re.compile(r"#\s*simlint:\s*ok\[([A-Za-z0-9_,\s]+)\]")
+
+#: code used for files the parser rejects (not suppressible: a file
+#: that does not parse cannot carry a trustworthy suppression comment)
+PARSE_ERROR_CODE = "E001"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location (1-based line)."""
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "code": self.code, "message": self.message}
+
+
+def walk_scope(node):
+    """Like ``ast.walk`` but does not descend into nested function
+    definitions — each def is its own scope for scope-local rules.
+    The root is yielded even when it is itself a function def."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.append(child)
+
+
+def scopes(tree: ast.Module):
+    """The module plus every (nested) function definition."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+class Rule:
+    """Base class: subclasses set ``code``/``name``/``summary`` and
+    implement `check`, yielding `Finding`s for one parsed module."""
+
+    code: str = ""
+    name: str = ""
+    summary: str = ""
+
+    def check(self, tree: ast.Module,
+              ctx: "FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+#: code -> Rule instance; populated by `@register` at import time
+RULES: dict = {}
+
+
+def register(cls):
+    """Class decorator adding one rule instance to the registry."""
+    if not cls.code:
+        raise ValueError(f"rule {cls.__name__} has no code")
+    if cls.code in RULES:
+        raise ValueError(f"duplicate rule code {cls.code}")
+    RULES[cls.code] = cls()
+    return cls
+
+
+class FileContext:
+    """Per-file state shared by every rule: source text, the config,
+    and the import-alias table for resolving dotted call names."""
+
+    def __init__(self, path: str, source: str, config: SimlintConfig):
+        self.path = path              # config-root-relative, posix
+        self.source = source
+        self.lines = source.splitlines()
+        self.config = config
+        self.aliases: dict = {}       # local name -> canonical dotted
+
+    def build_aliases(self, tree: ast.Module) -> None:
+        """Map local names to canonical module paths so rules can match
+        ``from time import time as clk; clk()`` as ``time.time``."""
+        canon = {"np": "numpy"}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    top = canon.get(a.name, a.name)
+                    self.aliases[a.asname or a.name.split(".")[0]] = \
+                        top if a.asname else top.split(".")[0]
+                    if a.asname:
+                        self.aliases[a.asname] = canon.get(a.name, a.name)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mod = canon.get(node.module, node.module)
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = f"{mod}.{a.name}"
+
+    def resolve_call(self, func: ast.expr) -> Optional[str]:
+        """Canonical dotted name of a call target, or None.
+
+        ``random.shuffle`` -> "random.shuffle"; ``np.random.rand`` ->
+        "numpy.random.rand"; a bare name imported from a module
+        resolves through the alias table.
+        """
+        parts: List[str] = []
+        node = func
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.aliases.get(node.id, node.id)
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    def suppressed_codes(self, line: int) -> set:
+        """Codes waved through by ``# simlint: ok[...]`` on ``line``."""
+        if not (1 <= line <= len(self.lines)):
+            return set()
+        m = _SUPPRESS_RE.search(self.lines[line - 1])
+        if not m:
+            return set()
+        return {c.strip() for c in m.group(1).split(",") if c.strip()}
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    n_files: int
+    n_suppressed: int
+
+    @property
+    def counts(self) -> dict:
+        out: dict = {}
+        for f in self.findings:
+            out[f.code] = out.get(f.code, 0) + 1
+        return dict(sorted(out.items()))
+
+
+def _active_rules(config: SimlintConfig, path: str) -> List[Rule]:
+    return [r for code, r in sorted(RULES.items())
+            if not config.rule_disabled(path, code)]
+
+
+def lint_source(source: str, path: str,
+                config: Optional[SimlintConfig] = None,
+                *, count_suppressed: Optional[list] = None
+                ) -> List[Finding]:
+    """Lint one file's text; ``path`` scopes path-sensitive rules."""
+    config = config or SimlintConfig()
+    ctx = FileContext(path, source, config)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, (e.offset or 1) - 1,
+                        PARSE_ERROR_CODE,
+                        f"file does not parse: {e.msg}")]
+    ctx.build_aliases(tree)
+    findings: List[Finding] = []
+    n_supp = 0
+    for rule in _active_rules(config, path):
+        for f in rule.check(tree, ctx):
+            if f.code in ctx.suppressed_codes(f.line):
+                n_supp += 1
+            else:
+                findings.append(f)
+    if count_suppressed is not None:
+        count_suppressed.append(n_supp)
+    return sorted(findings)
+
+
+def iter_python_files(paths: Iterable, config: SimlintConfig):
+    """Expand files/dirs to a deterministic, config-filtered file list."""
+    out = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        else:
+            out.append(p)
+    seen = set()
+    for p in out:
+        rel = config.relpath(p)
+        if rel in seen or config.path_excluded(rel):
+            continue
+        seen.add(rel)
+        yield p, rel
+
+
+def lint_paths(paths: Iterable,
+               config: Optional[SimlintConfig] = None) -> LintResult:
+    """Lint files and directories (recursively); the public entry the
+    CLI, the CI gate, and the self-check test all share."""
+    config = config or SimlintConfig()
+    findings: List[Finding] = []
+    supp: list = []
+    n_files = 0
+    for p, rel in iter_python_files(paths, config):
+        n_files += 1
+        findings.extend(lint_source(p.read_text(), rel, config,
+                                    count_suppressed=supp))
+    return LintResult(sorted(findings), n_files, sum(supp))

@@ -1,0 +1,46 @@
+"""simlint reporters: human text and stable-schema JSON.
+
+The JSON shape is pinned by `SCHEMA_VERSION` and
+`tests/test_simlint_framework.py`; the CI ``static-analysis`` lane
+uploads it as an artifact, so the keys here are a public contract.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.analysis.core import RULES, SCHEMA_VERSION, LintResult
+
+
+def render_text(result: LintResult) -> str:
+    lines = [f"{f.path}:{f.line}:{f.col + 1}: {f.code} {f.message}"
+             for f in result.findings]
+    counts = " ".join(f"{code}={n}" for code, n in result.counts.items())
+    lines.append(
+        f"simlint: {len(result.findings)} finding"
+        f"{'' if len(result.findings) == 1 else 's'}"
+        + (f" ({counts})" if counts else "")
+        + f", {result.n_suppressed} suppressed, "
+        f"{result.n_files} files checked")
+    return "\n".join(lines)
+
+
+def render_json(result: LintResult) -> str:
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "tool": "simlint",
+        "findings": [f.to_dict() for f in result.findings],
+        "counts": result.counts,
+        "n_findings": len(result.findings),
+        "n_suppressed": result.n_suppressed,
+        "n_files": result.n_files,
+    }
+    return json.dumps(payload, indent=1, sort_keys=True)
+
+
+def render_rules() -> str:
+    """The registry, one rule per line (``--list-rules``)."""
+    out = []
+    for code, rule in sorted(RULES.items()):
+        out.append(f"{code}  {rule.name}")
+        out.append(f"       {rule.summary}")
+    return "\n".join(out)

@@ -1,0 +1,255 @@
+"""DET rules: the byte-identical-trace contract, checked statically.
+
+The engine guarantees (PR 3/4/6, `tests/test_sim_incremental.py`) that
+event traces are byte-identical across allocators, backends, task-list
+orderings and re-runs.  Every rule here targets a way new code silently
+breaks that: global RNG state, wall-clock time in measurements,
+hash-order iteration, partial-order sort keys, and memory-address
+ordering.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.core import (Finding, Rule, register, scopes,
+                                 walk_scope)
+
+# random-module functions that draw from (or mutate) the process-global
+# generator; `random.Random(seed)` instances are the sanctioned form
+_GLOBAL_RANDOM_FNS = frozenset({
+    "random", "randint", "randrange", "shuffle", "choice", "choices",
+    "sample", "uniform", "triangular", "gauss", "normalvariate",
+    "lognormvariate", "expovariate", "vonmisesvariate", "betavariate",
+    "paretovariate", "weibullvariate", "getrandbits", "seed",
+})
+# numpy.random attributes that are fine to call (seeded-generator
+# constructors); every lowercase module-level draw function is not
+_NP_RANDOM_OK = frozenset({"default_rng", "Generator", "SeedSequence",
+                           "RandomState", "PCG64", "Philox", "MT19937"})
+
+
+def _sort_calls(tree: ast.Module):
+    """Yield (call, key_expr_or_None) for sorted(...) / list.sort(...)."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        is_sorted = isinstance(node.func, ast.Name) \
+            and node.func.id == "sorted"
+        is_sort = isinstance(node.func, ast.Attribute) \
+            and node.func.attr == "sort"
+        if not (is_sorted or is_sort):
+            continue
+        key = None
+        for kw in node.keywords:
+            if kw.arg == "key":
+                key = kw.value
+        yield node, key
+
+
+@register
+class UnseededGlobalRng(Rule):
+    code = "DET001"
+    name = "unseeded-global-rng"
+    summary = ("module-level random/np.random draws use hidden global "
+               "state; use random.Random(seed) / np.random.default_rng(seed)")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.resolve_call(node.func)
+            if target is None:
+                continue
+            if target.startswith("numpy.random."):
+                attr = target.split(".", 2)[2]
+                if "." not in attr and attr not in _NP_RANDOM_OK:
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.code,
+                        f"np.random.{attr}() draws from the global "
+                        "generator; seed an np.random.default_rng(seed)")
+            elif target.startswith("random."):
+                attr = target.split(".", 1)[1]
+                if attr in _GLOBAL_RANDOM_FNS:
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.code,
+                        f"random.{attr}() uses the process-global RNG; "
+                        "use a seeded random.Random(seed) instance")
+
+
+@register
+class WallClockMeasurement(Rule):
+    code = "DET002"
+    name = "wall-clock-measurement"
+    summary = ("time.time() in sim/bench/launch code measures the "
+               "NTP-adjusted wall clock; use time.perf_counter()")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        if not ctx.config.in_timed_paths(ctx.path):
+            return
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and ctx.resolve_call(node.func) == "time.time":
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, self.code,
+                    "time.time() is wall-clock (non-monotonic, "
+                    "NTP-stepped); measure with time.perf_counter()")
+
+
+class _SetNames:
+    """Collect names bound to set values within one scope (no nesting:
+    inner functions are separate scopes handled by the rule driver)."""
+
+    def __init__(self, scope):
+        self.names: Set[str] = set()
+        for node in walk_scope(scope):
+            if isinstance(node, ast.Assign) \
+                    and self._is_set_expr(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.names.add(t.id)
+            elif isinstance(node, ast.AnnAssign) \
+                    and isinstance(node.target, ast.Name):
+                ann = node.annotation
+                ann_name = (ann.id if isinstance(ann, ast.Name)
+                            else ann.attr
+                            if isinstance(ann, ast.Attribute) else None)
+                if ann_name in ("set", "Set", "frozenset", "FrozenSet") \
+                        or self._is_set_expr(node.value):
+                    self.names.add(node.target.id)
+
+    def _is_set_expr(self, node: Optional[ast.expr]) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return (self._is_set_expr(node.left)
+                    or self._is_set_expr(node.right)
+                    or (isinstance(node.left, ast.Name)
+                        and node.left.id in self.names))
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        return False
+
+
+@register
+class UnorderedSetIteration(Rule):
+    code = "DET003"
+    name = "unordered-iteration"
+    summary = ("iterating a set feeds hash order (PYTHONHASHSEED-"
+               "dependent) into downstream work; wrap in sorted(...)")
+
+    _MSG = ("iteration order of a set depends on PYTHONHASHSEED; "
+            "iterate sorted(...) or keep an explicit order")
+
+    # consuming a set (or a generator over one) through these erases
+    # iteration order, so hash order never escapes
+    _ORDER_INSENSITIVE = frozenset({
+        "sorted", "set", "frozenset", "sum", "min", "max", "any", "all",
+        "len", "Counter"})
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        for scope in scopes(tree):
+            collector = _SetNames(scope)
+            benign = set()
+            for node in walk_scope(scope):
+                if isinstance(node, ast.Call):
+                    fn = node.func
+                    name = (fn.id if isinstance(fn, ast.Name)
+                            else fn.attr
+                            if isinstance(fn, ast.Attribute) else None)
+                    if name in self._ORDER_INSENSITIVE:
+                        benign.update(id(a) for a in node.args)
+            for node in walk_scope(scope):
+                if id(node) in benign:
+                    continue
+                if isinstance(node, ast.For) \
+                        and collector._is_set_expr(node.iter):
+                    yield Finding(ctx.path, node.iter.lineno,
+                                  node.iter.col_offset, self.code,
+                                  self._MSG)
+                elif isinstance(node, (ast.ListComp, ast.DictComp,
+                                       ast.GeneratorExp)):
+                    # a SetComp's own result is unordered, so hash
+                    # order feeding a *set* comprehension is harmless
+                    # and is deliberately not matched here
+                    for gen in node.generators:
+                        if collector._is_set_expr(gen.iter):
+                            yield Finding(ctx.path, gen.iter.lineno,
+                                          gen.iter.col_offset,
+                                          self.code, self._MSG)
+                elif isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in ("list", "tuple", "enumerate") \
+                        and node.args \
+                        and collector._is_set_expr(node.args[0]):
+                    yield Finding(ctx.path, node.lineno, node.col_offset,
+                                  self.code,
+                                  f"{node.func.id}() materializes a "
+                                  "set's hash order; use sorted(...)")
+
+
+@register
+class SortWithoutTiebreak(Rule):
+    code = "DET004"
+    name = "sort-needs-total-order"
+    summary = ("sort keys in engine/sched code must impose a total "
+               "order: return a tuple ending in a unique tiebreak id")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        if not ctx.config.in_ordered_paths(ctx.path):
+            return
+        for call, key in _sort_calls(tree):
+            if key is None:
+                continue
+            if isinstance(key, ast.Lambda) \
+                    and isinstance(key.body, ast.Tuple) \
+                    and len(key.body.elts) >= 2:
+                continue
+            yield Finding(
+                ctx.path, call.lineno, call.col_offset, self.code,
+                "sort key does not guarantee a total order on ties; "
+                "key a tuple ending in a unique id (e.g. (t, tid))")
+
+
+@register
+class IdBasedOrdering(Rule):
+    code = "DET005"
+    name = "id-based-ordering"
+    summary = ("id() is a memory address — ordering by it varies per "
+               "process; order by a stable identifier instead")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        def has_id_call(expr) -> bool:
+            return any(isinstance(n, ast.Call)
+                       and isinstance(n.func, ast.Name)
+                       and n.func.id == "id"
+                       for n in ast.walk(expr))
+
+        for call, key in _sort_calls(tree):
+            if key is None:
+                continue
+            if (isinstance(key, ast.Name) and key.id == "id") \
+                    or has_id_call(key):
+                yield Finding(
+                    ctx.path, call.lineno, call.col_offset, self.code,
+                    "sorting by id() orders by memory address; use a "
+                    "stable identifier")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Compare) \
+                    and any(isinstance(op, (ast.Lt, ast.LtE, ast.Gt,
+                                            ast.GtE))
+                            for op in node.ops):
+                sides: List[ast.expr] = [node.left] + list(node.comparators)
+                id_sides = [s for s in sides
+                            if isinstance(s, ast.Call)
+                            and isinstance(s.func, ast.Name)
+                            and s.func.id == "id"]
+                if len(id_sides) >= 2:
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.code,
+                        "comparing id() values orders by memory "
+                        "address; use a stable identifier")

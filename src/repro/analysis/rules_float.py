@@ -1,0 +1,104 @@
+"""FLOAT rule: exact float equality outside bit-exactness modules.
+
+Float ``==`` is almost always a latent tolerance bug — *except* where
+bit-exactness is the contract: `repro.sim.alloc`'s water-filling tie
+grouping is exact-equality **by design** (the vector allocator must pin
+the same tie set as the dict reference, ulp for ulp), so that module is
+whitelisted in ``[tool.simlint] per-module`` — a deliberate, visible
+config decision rather than a hole in the rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from repro.analysis.core import Finding, Rule, register, scopes, walk_scope
+from repro.analysis.units import (BANDWIDTH, PER_SECOND, SECONDS,
+                                  unit_of_name)
+
+_FLOAT_UNITS = (SECONDS, PER_SECOND, BANDWIDTH)
+
+
+def _name_is_floaty(name: str) -> bool:
+    unit = unit_of_name(name)
+    if unit is None:
+        return False
+    # byte counts are integer-valued; time/rate quantities are floats
+    return any(unit == u for u in _FLOAT_UNITS)
+
+
+class _Floaty:
+    """Conservative intra-scope taint analysis: which expressions are
+    float-valued arithmetic results (not mere float storage)."""
+
+    def __init__(self, scope):
+        self.names: Set[str] = set()
+        # two passes pick up forward references like
+        #   m = fair.min();  fair = remaining / live
+        for _ in range(2):
+            for node in walk_scope(scope):
+                if isinstance(node, ast.Assign) \
+                        and self.is_floaty(node.value):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            self.names.add(t.id)
+                elif isinstance(node, (ast.AnnAssign, ast.AugAssign)) \
+                        and node.value is not None \
+                        and self.is_floaty(node.value) \
+                        and isinstance(node.target, ast.Name):
+                    self.names.add(node.target.id)
+
+    def is_floaty(self, node) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, float)
+        if isinstance(node, ast.Name):
+            return node.id in self.names or _name_is_floaty(node.id)
+        if isinstance(node, ast.Attribute):
+            return _name_is_floaty(node.attr)
+        if isinstance(node, ast.Subscript):
+            return self.is_floaty(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_floaty(node.operand)
+        if isinstance(node, ast.BinOp):
+            if isinstance(node.op, ast.Div):
+                return True               # true division is float
+            return self.is_floaty(node.left) or self.is_floaty(node.right)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = (fn.id if isinstance(fn, ast.Name)
+                    else fn.attr if isinstance(fn, ast.Attribute)
+                    else None)
+            if name == "float":
+                return True
+            if name in ("min", "max", "abs", "sum", "fsum"):
+                return any(self.is_floaty(a) for a in node.args)
+            return bool(name) and _name_is_floaty(name)
+        return False
+
+
+@register
+class ExactFloatEquality(Rule):
+    code = "FLOAT001"
+    name = "exact-float-equality"
+    summary = ("== / != on float arithmetic results; compare with a "
+               "tolerance (math.isclose) unless bit-exactness is the "
+               "module's contract (whitelist it in [tool.simlint])")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        for scope in scopes(tree):
+            taint = _Floaty(scope)
+            for node in walk_scope(scope):
+                if not isinstance(node, ast.Compare):
+                    continue
+                sides = [node.left] + list(node.comparators)
+                for op, lhs, rhs in zip(node.ops, sides, sides[1:]):
+                    if not isinstance(op, (ast.Eq, ast.NotEq)):
+                        continue
+                    if taint.is_floaty(lhs) or taint.is_floaty(rhs):
+                        sym = "==" if isinstance(op, ast.Eq) else "!="
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset,
+                            self.code,
+                            f"exact float '{sym}' on an arithmetic "
+                            "result; use a tolerance, or whitelist the "
+                            "module if bit-exactness is the contract")

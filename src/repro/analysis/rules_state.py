@@ -1,0 +1,154 @@
+"""STATE rule: module-level mutable state mutated from function bodies.
+
+`Engine.run` must be a pure function of its inputs — two runs of the
+same cell must produce byte-identical traces (the PR 2 replay
+invariant).  A module-level list/dict/set that engine or scheduler code
+mutates survives across runs inside one process, so the second run sees
+different state than the first.  The rule flags, within the configured
+``state-paths``, every mutation of a module-level mutable binding from
+inside a function: method mutators, subscript stores/deletes, augmented
+assignment, and ``global`` rebinding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from repro.analysis.core import Finding, Rule, register, walk_scope
+
+_MUTATORS = frozenset({
+    "append", "add", "update", "extend", "insert", "remove", "discard",
+    "pop", "popitem", "clear", "setdefault", "sort", "reverse",
+})
+
+_MUTABLE_CALLS = frozenset({"list", "dict", "set", "defaultdict",
+                            "OrderedDict", "deque", "Counter"})
+
+
+def _module_mutables(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in walk_scope(tree):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        value = node.value
+        mutable = isinstance(value, (ast.List, ast.Dict, ast.Set,
+                                     ast.ListComp, ast.DictComp,
+                                     ast.SetComp))
+        if isinstance(value, ast.Call):
+            fn = value.func
+            name = (fn.id if isinstance(fn, ast.Name)
+                    else fn.attr if isinstance(fn, ast.Attribute)
+                    else None)
+            mutable = name in _MUTABLE_CALLS
+        if not mutable:
+            continue
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out.add(t.id)
+    return out
+
+
+def _binding_names(target) -> Iterable[str]:
+    """Names a target actually BINDS.  `x = v` and `x, y = v` bind;
+    `x[k] = v` and `x.a = v` mutate an existing object and bind
+    nothing, so Subscript/Attribute targets must not shadow globals."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, ast.Starred):
+        yield from _binding_names(target.value)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _binding_names(elt)
+
+
+def _local_bindings(fn) -> Set[str]:
+    """Names bound locally in a function (parameters + assignments +
+    loop/with targets) — these shadow any module global."""
+    out: Set[str] = set()
+    declared_global: Set[str] = set()
+    a = fn.args
+    for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                + ([a.vararg] if a.vararg else [])
+                + ([a.kwarg] if a.kwarg else [])):
+        out.add(arg.arg)
+    for node in walk_scope(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                out.update(_binding_names(t))
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+        elif isinstance(node, ast.For):
+            out.update(_binding_names(node.target))
+        elif isinstance(node, ast.withitem) \
+                and node.optional_vars is not None:
+            out.update(_binding_names(node.optional_vars))
+        elif isinstance(node, ast.Global):
+            declared_global.update(node.names)
+    # `global x` makes x *not* local no matter where the assignment sits
+    return out - declared_global
+
+
+@register
+class ModuleStateMutation(Rule):
+    code = "STATE001"
+    name = "module-state-mutation"
+    summary = ("mutating module-level mutable state from sim/sched "
+               "functions breaks deterministic re-runs; pass state "
+               "explicitly or keep it per-Engine")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        if not ctx.config.in_state_paths(ctx.path):
+            return
+        mutables = _module_mutables(tree)
+        if not mutables:
+            return
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            locals_ = _local_bindings(fn)
+            globals_declared: Set[str] = set()
+            for node in walk_scope(fn):
+                if isinstance(node, ast.Global):
+                    globals_declared.update(
+                        n for n in node.names if n in mutables)
+
+            def hits(name_node) -> bool:
+                return (isinstance(name_node, ast.Name)
+                        and name_node.id in mutables
+                        and (name_node.id not in locals_
+                             or name_node.id in globals_declared))
+
+            for node in walk_scope(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _MUTATORS \
+                        and hits(node.func.value):
+                    yield self._finding(ctx, node, node.func.value.id,
+                                        f".{node.func.attr}()")
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        if isinstance(t, ast.Subscript) and hits(t.value):
+                            yield self._finding(ctx, node, t.value.id,
+                                                "[...] = store")
+                        elif isinstance(node, ast.AugAssign) \
+                                and hits(t):
+                            yield self._finding(ctx, node, t.id,
+                                                "augmented assignment")
+                elif isinstance(node, ast.Delete):
+                    for t in node.targets:
+                        if isinstance(t, ast.Subscript) and hits(t.value):
+                            yield self._finding(ctx, node, t.value.id,
+                                                "del of an item")
+
+    def _finding(self, ctx, node, name: str, how: str) -> Finding:
+        return Finding(
+            ctx.path, node.lineno, node.col_offset, self.code,
+            f"module-level mutable '{name}' mutated via {how}; "
+            "state that engine/scheduler paths touch must be "
+            "per-instance to keep re-runs deterministic")

@@ -1,0 +1,235 @@
+"""Unit inference for the UNIT rule family.
+
+Units are a tiny dimensional algebra over two exponents — ``data``
+(bytes/bits moved) and ``time`` — plus a data *flavor* (``bit`` vs
+``byte``), because the repo's one recorded unit bug was exactly a
+bit/byte mixup: ``HardwareSpec`` carried NIC line rate in Gbit/s and
+DRAM bandwidth in GB/s under the same ``_gbps`` suffix
+(`core/costmodel.py`).  Seconds are ``Unit(time=1)``, bytes are
+``Unit(data=1, flavor='byte')``, a bandwidth is ``data/time``; multiply
+and divide compose exponents, so ``state_bytes / bw`` infers seconds.
+
+Inference sources, strongest first:
+
+  1. `NAME_UNITS` — the explicit annotation registry for the cost-model
+     API (exact identifier names: fields, properties, paper symbols).
+  2. Suffix conventions (`SUFFIX_UNITS`): ``_bytes``, ``_s``/
+     ``_seconds``, ``_gbit_per_s``/``_gbyte_per_s``, ``_per_s``,
+     ``_rate``, ``_bw``, ...
+  3. The one sanctioned conversion idiom: dividing a bit-flavored
+     quantity by a literal ``8`` (or multiplying a byte-flavored one)
+     flips the flavor, so ``nic_gbit_per_s / 8.0`` honestly infers
+     GB/s instead of flagging.
+
+Anything else is *unknown*, and unknown never produces a finding —
+the rules only fire when both sides of an operation carry confident,
+conflicting units.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """data/time dimension exponents + bit-vs-byte flavor (flavor is
+    None when unknown or when the data exponent is zero)."""
+    data: int = 0
+    time: int = 0
+    flavor: Optional[str] = None      # 'bit' | 'byte' | None
+
+    @property
+    def dimensionless(self) -> bool:
+        return self.data == 0 and self.time == 0
+
+    @property
+    def is_bandwidth(self) -> bool:
+        return self.data >= 1 and self.time <= -1
+
+    def mul(self, other: "Unit") -> "Unit":
+        return Unit(self.data + other.data, self.time + other.time,
+                    _combine_flavor(self, other))
+
+    def div(self, other: "Unit") -> "Unit":
+        return self.mul(Unit(-other.data, -other.time, other.flavor))
+
+    def conflicts_with(self, other: "Unit") -> bool:
+        """True when adding/subtracting these two is a unit error."""
+        if self.dimensionless or other.dimensionless:
+            return False
+        if (self.data, self.time) != (other.data, other.time):
+            return True
+        return (self.flavor is not None and other.flavor is not None
+                and self.flavor != other.flavor)
+
+    def describe(self) -> str:
+        if self.dimensionless:
+            return "dimensionless"
+        flavor = self.flavor or "data"
+        if (self.data, self.time) == (1, 0):
+            return f"{flavor}s"
+        if (self.data, self.time) == (0, 1):
+            return "seconds"
+        if (self.data, self.time) == (1, -1):
+            return f"{flavor}s/second"
+        if (self.data, self.time) == (0, -1):
+            return "1/second"
+        return f"data^{self.data}*time^{self.time}({flavor})"
+
+
+def _combine_flavor(a: Unit, b: Unit) -> Optional[str]:
+    keep = a.flavor if a.data != 0 else None
+    other = b.flavor if b.data != 0 else None
+    return keep or other
+
+
+DIMENSIONLESS = Unit()
+BYTES = Unit(data=1, flavor="byte")
+BITS = Unit(data=1, flavor="bit")
+SECONDS = Unit(time=1)
+PER_SECOND = Unit(time=-1)
+BYTES_PER_S = Unit(data=1, time=-1, flavor="byte")
+BITS_PER_S = Unit(data=1, time=-1, flavor="bit")
+BANDWIDTH = Unit(data=1, time=-1)     # flavor unknown
+
+# Longest suffix wins; checked against the last name segments so
+# ``spill_restore_seconds`` and ``arrival_s`` both resolve to SECONDS.
+SUFFIX_UNITS = [
+    ("_gbit_per_s", BITS_PER_S),
+    ("_gbyte_per_s", BYTES_PER_S),
+    ("_bytes_per_s", BYTES_PER_S),
+    ("_gbps", BANDWIDTH),             # ambiguous — see rule UNIT004
+    ("_bytes", BYTES),
+    ("_nbytes", BYTES),
+    ("_bits", BITS),
+    ("_seconds", SECONDS),
+    ("_sec", SECONDS),
+    ("_s", SECONDS),
+    ("_per_s", PER_SECOND),
+    ("_rate", PER_SECOND),
+    ("_bw", BANDWIDTH),
+]
+
+# The explicit annotation registry for the cost-model API
+# (`repro.core.costmodel`): exact identifier names -> unit.  The paper's
+# §4 symbols are *ratios* (dimensionless), which keeps the ``_s``
+# suffix heuristic from misreading ``c_s``/``p_s`` as seconds; the
+# Table-1 fields carry the honest bandwidth flavors the PR-7 rename
+# gave them, so UNIT003 can check `nic_per_core`'s declared GB/s
+# against the ``/ 8.0`` conversion in its body.
+NAME_UNITS = {
+    # paper symbols: cost/power ratios and factors, all dimensionless
+    "c_s": DIMENSIONLESS, "p_s": DIMENSIONLESS,
+    "c_p": DIMENSIONLESS, "p_p": DIMENSIONLESS,
+    "c_f": DIMENSIONLESS, "phi": DIMENSIONLESS, "mu": DIMENSIONLESS,
+    "cores": DIMENSIONLESS, "fraction": DIMENSIONLESS,
+    "optimizer_multiplier": DIMENSIONLESS,
+    # Table 1 / HardwareSpec (post-rename honest names)
+    "nic_gbit_per_s": BITS_PER_S,
+    "dram_gbyte_per_s": BYTES_PER_S,
+    "nic_per_core": BYTES_PER_S,
+    "dram_per_core": BYTES_PER_S,
+    # cost-model API return units
+    "spill_restore_seconds": SECONDS,
+    "checkpoint_state_bytes": BYTES,
+    "CKPT_CHUNK_BYTES": BYTES,
+    "state_bytes": BYTES, "param_bytes": BYTES, "chunk_bytes": BYTES,
+}
+
+
+def unit_of_name(name: str) -> Optional[Unit]:
+    """Unit of one identifier: registry first, then suffix."""
+    if name in NAME_UNITS:
+        return NAME_UNITS[name]
+    for suffix, unit in SUFFIX_UNITS:
+        if name.endswith(suffix) and len(name) > len(suffix):
+            return unit
+    return None
+
+
+def _flavor_flip(u: Unit) -> Unit:
+    if u.flavor == "bit":
+        return dataclasses.replace(u, flavor="byte")
+    if u.flavor == "byte":
+        return dataclasses.replace(u, flavor="bit")
+    return u
+
+
+def _is_eight(node: ast.expr) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and node.value == 8)
+
+
+def infer_unit(node: ast.expr) -> Optional[Unit]:
+    """Infer the unit of an expression, or None when unknown.
+
+    Conservative by construction: any sub-expression that fails to
+    infer poisons the whole expression to unknown, so the UNIT rules
+    only ever act on confident conclusions.
+    """
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, bool) or not isinstance(
+                node.value, (int, float)):
+            return None
+        return DIMENSIONLESS
+    if isinstance(node, ast.Name):
+        return unit_of_name(node.id)
+    if isinstance(node, ast.Attribute):
+        return unit_of_name(node.attr)
+    if isinstance(node, ast.Call):
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        if name in ("float", "int", "abs", "round", "max", "min"):
+            units = [infer_unit(a) for a in node.args]
+            units = [u for u in units if u is not None]
+            if name in ("max", "min") and len(units) == len(node.args) \
+                    and units and all(u == units[0] for u in units):
+                return units[0]
+            if name in ("float", "int", "abs", "round") and units:
+                return units[0]
+            return None
+        return unit_of_name(name) if name else None
+    if isinstance(node, ast.UnaryOp):
+        return infer_unit(node.operand)
+    if isinstance(node, ast.IfExp):
+        a, b = infer_unit(node.body), infer_unit(node.orelse)
+        return a if a == b else None
+    if isinstance(node, ast.BinOp):
+        left, right = infer_unit(node.left), infer_unit(node.right)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            if left is not None and left == right:
+                return left
+            if left is not None and right == DIMENSIONLESS:
+                return left
+            if right is not None and left == DIMENSIONLESS:
+                return right
+            return None
+        if isinstance(node.op, ast.Mult):
+            # the sanctioned bit<->byte conversion: `* 8` on bytes
+            if left is not None and left.flavor == "byte" \
+                    and _is_eight(node.right):
+                return _flavor_flip(left)
+            if right is not None and right.flavor == "byte" \
+                    and _is_eight(node.left):
+                return _flavor_flip(right)
+            if left is None or right is None:
+                return None
+            return left.mul(right)
+        if isinstance(node.op, ast.Div):
+            if left is not None and left.flavor == "bit" \
+                    and _is_eight(node.right):
+                return _flavor_flip(left)
+            if left is None or right is None:
+                return None
+            return left.div(right)
+        if isinstance(node.op, ast.FloorDiv):
+            if left is None or right is None:
+                return None
+            return left.div(right)
+    return None

@@ -50,10 +50,10 @@ def run_model(sys: HardwareSpec, *, smt: bool | None = None)\
     solo, loaded = [], []
     for i in TPCH_INTENSITIES:
         solo.append(min(sys.single_core_speed,
-                        min(SOLO_BW_CAP, eff * sys.dram_gbps) / i))
+                        min(SOLO_BW_CAP, eff * sys.dram_gbyte_per_s) / i))
         compute_cap = sys.single_core_speed * (SMT_COMPUTE_SHARE if smt
                                                else 1.0)
-        share = eff * sys.dram_gbps / sys.cores
+        share = eff * sys.dram_gbyte_per_s / sys.cores
         loaded.append(min(compute_cap, share / i))
     drop = [1 - l / s for l, s in zip(loaded, solo)]
     return ContentionResult(sys.name, solo, loaded, drop)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 # [6] DPU power-efficiency white paper
@@ -151,20 +152,74 @@ def project_bigquery(phi: float, *, cpu_frac: float = BIGQUERY_CPU_FRACTION,
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
+    """One Table-1 row.  NIC line rate is quoted in **Gbit/s** (the
+    vendor convention) but DRAM bandwidth in **GB/s** — the field names
+    carry the honest units so the two can never be conflated again
+    (simlint rule UNIT004 rejects the old ambiguous ``_gbps`` suffix;
+    the per-core properties convert both to GB/s)."""
     name: str
     cores: int                      # vCPUs / SMT threads
-    nic_gbps: float
-    dram_gbps: float                # GB/s theoretical
+    nic_gbit_per_s: float           # NIC line rate, Gbit/s
+    dram_gbyte_per_s: float         # DRAM bandwidth, GB/s theoretical
     kind: str                       # 'host' | 'smartnic'
     single_core_speed: float = 1.0  # relative to E2000 ARM N1 core
 
+    def __init__(self, name: str, cores: int,
+                 nic_gbit_per_s: Optional[float] = None,
+                 dram_gbyte_per_s: Optional[float] = None,
+                 kind: str = "", single_core_speed: float = 1.0, *,
+                 nic_gbps: Optional[float] = None,       # simlint: ok[UNIT004] deprecated compat kwarg
+                 dram_gbps: Optional[float] = None):     # simlint: ok[UNIT004] deprecated compat kwarg
+        if nic_gbps is not None or dram_gbps is not None:
+            # validate before warning so a usage error stays a clean
+            # TypeError instead of a warning followed by a raise
+            if nic_gbps is not None and nic_gbit_per_s is not None:
+                raise TypeError("pass nic_gbit_per_s or nic_gbps, "
+                                "not both")
+            if dram_gbps is not None and dram_gbyte_per_s is not None:
+                raise TypeError("pass dram_gbyte_per_s or "
+                                "dram_gbps, not both")
+            warnings.warn(
+                "HardwareSpec(nic_gbps=, dram_gbps=) is deprecated: the"
+                " suffix hid that NIC is Gbit/s but DRAM is GB/s; use"
+                " nic_gbit_per_s= / dram_gbyte_per_s=",
+                DeprecationWarning, stacklevel=2)
+            if nic_gbps is not None:
+                nic_gbit_per_s = nic_gbps
+            if dram_gbps is not None:
+                dram_gbyte_per_s = dram_gbps
+        if nic_gbit_per_s is None or dram_gbyte_per_s is None:
+            raise TypeError("HardwareSpec requires nic_gbit_per_s and "
+                            "dram_gbyte_per_s")
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "cores", cores)
+        object.__setattr__(self, "nic_gbit_per_s", float(nic_gbit_per_s))
+        object.__setattr__(self, "dram_gbyte_per_s",
+                           float(dram_gbyte_per_s))
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "single_core_speed", single_core_speed)
+
+    @property
+    def nic_gbps(self) -> float:            # simlint: ok[UNIT004] deprecated alias, reads Gbit/s
+        warnings.warn("HardwareSpec.nic_gbps is deprecated (Gbit/s); "
+                      "read nic_gbit_per_s", DeprecationWarning,
+                      stacklevel=2)
+        return self.nic_gbit_per_s
+
+    @property
+    def dram_gbps(self) -> float:           # simlint: ok[UNIT004] deprecated alias, reads GB/s
+        warnings.warn("HardwareSpec.dram_gbps is deprecated (GB/s, "
+                      "despite the name); read dram_gbyte_per_s",
+                      DeprecationWarning, stacklevel=2)
+        return self.dram_gbyte_per_s
+
     @property
     def nic_per_core(self) -> float:       # GB/s
-        return self.nic_gbps / 8.0 / self.cores
+        return self.nic_gbit_per_s / 8.0 / self.cores
 
     @property
     def dram_per_core(self) -> float:      # GB/s
-        return self.dram_gbps / self.cores
+        return self.dram_gbyte_per_s / self.cores
 
 
 TABLE1 = [

@@ -155,16 +155,16 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     n_dev = mesh.size
     pod_size = (n_dev // mesh.shape["pod"]) if "pod" in mesh.axis_names \
         else None
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, aux = lower_cell(arch, shape_name, mesh, grad_sync=grad_sync,
                               remat=remat, compute_dtype=compute_dtype,
                               attn_block=attn_block,
                               cfg_overrides=cfg_overrides, fsdp=fsdp,
                               cache_in_carry=cache_in_carry,
                               microbatches=microbatches)
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     mem = compiled.memory_analysis()
     # trip-count-aware HLO costs (XLA's cost_analysis counts scan bodies
     # once — see hlo_cost.py)

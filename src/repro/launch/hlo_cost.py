@@ -224,7 +224,7 @@ def analyze(text: str, *, pod_size: Optional[int] = None,
             arg_bytes += _shape_elems_bytes(t)[1]
     for name, comp in comps.items():
         m = mult.get(name, 0.0)
-        if m == 0.0:
+        if m == 0.0:  # simlint: ok[FLOAT001] exact sentinel: absent == 0.0
             continue
         is_fusion_body = name != entry and not name.startswith("%wide") \
             and "region" not in name

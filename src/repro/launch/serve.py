@@ -32,21 +32,21 @@ def serve(cfg, *, batch, prompt_len, gen, seed=0, use_pallas=False):
     step = jax.jit(make_serve_step(cfg, use_pallas=use_pallas),
                    donate_argnums=(1,))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, caches = prefill(params, caches,
                              {"tokens": prompts, "extra": extra}
                              if extra else {"tokens": prompts})
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(gen - 1):
         tok, caches = step(params, caches, tok)
         out.append(tok)
     jax.block_until_ready(out[-1])
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     gen_tokens = jnp.concatenate(out, axis=1)
     return gen_tokens, {
         "prefill_s": t_prefill,

@@ -68,7 +68,7 @@ def train_loop(cfg, *, steps, batch, seq, ckpt_dir=None, ckpt_every=50,
     logf = open(log_path, "a") if log_path else None
     losses = []
     it = Prefetcher(iter(ds), depth=2)
-    t_start = time.time()
+    t_start = time.perf_counter()
     start_step = int(state.step)
     for batch_np in it:
         step = int(state.step)
@@ -76,10 +76,10 @@ def train_loop(cfg, *, steps, batch, seq, ckpt_dir=None, ckpt_every=50,
             break
         if step < start_step:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         state, metrics = step_fn(state, batch_np)
         loss = float(metrics["loss"])
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         detector.observe([dt])
         losses.append(loss)
         if step % log_every == 0:
@@ -94,7 +94,7 @@ def train_loop(cfg, *, steps, batch, seq, ckpt_dir=None, ckpt_every=50,
             ckpt.save(step + 1, state)
     if ckpt:
         ckpt.save(int(state.step), state)
-    wall = time.time() - t_start
+    wall = time.perf_counter() - t_start
     return state, {"losses": losses, "wall_s": wall}
 
 

@@ -451,7 +451,11 @@ class ArrayCore:
         self.inflow[np.fromiter(self.dirty_res, dtype=np.int64,
                                 count=len(self.dirty_res))] = 0.0
         self.dirty_res.clear()
-        live_roots = [rt for rt in roots if self.comp_flows.get(rt)]
+        # sorted: `roots` is a set of int root ids and its hash order
+        # must not pick the concatenation order below (slots are
+        # re-sorted anyway, but the invariant is cheap to keep exact)
+        live_roots = [rt for rt in sorted(roots)
+                      if self.comp_flows.get(rt)]
         if not live_roots:
             return
         if len(live_roots) == 1:

@@ -111,10 +111,11 @@ def poisson_stream(templates: Sequence[JobTemplate], *, rate: float,
 def trace_stream(entries) -> list:
     """Explicit arrival log: ``[(arrival_s, template), ...]`` (any
     order) -> sorted `Job` list with stable ids."""
-    ordered = sorted(((float(at), tpl) for at, tpl in entries),
-                     key=lambda e: e[0])
+    ordered = sorted(((float(at), i, tpl)
+                      for i, (at, tpl) in enumerate(entries)),
+                     key=lambda e: (e[0], e[1]))
     return [Job(f"j{i:03d}", tpl, at)
-            for i, (at, tpl) in enumerate(ordered)]
+            for i, (at, _, tpl) in enumerate(ordered)]
 
 
 # ---------------------------------------------------------------------------

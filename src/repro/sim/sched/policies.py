@@ -276,7 +276,7 @@ class PriorityPreemptPolicy:
 
     def _try_preempt(self, qj, pool, free, cluster, victimized):
         """Victims for ``qj``, or (None, ()) when preemption can't help."""
-        cands = sorted(
+        cands = sorted(  # simlint: ok[DET004] _victim_key ends in rj.jid
             (rj for rj in cluster.running.values()
              if rj.priority < qj.priority and rj.jid not in victimized),
             key=lambda rj: self._victim_key(rj, cluster))

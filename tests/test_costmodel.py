@@ -82,3 +82,61 @@ def test_predict_mu_matches_paper():
                            network_fraction=cm.BIGQUERY_NETWORK_FRACTION)
     assert predict_mu(prof, 2) == pytest.approx(1.22, abs=0.02)
     assert predict_mu(prof, 3) == pytest.approx(0.81, abs=0.02)
+
+
+# ---------------------------------------------------------------------------
+# HardwareSpec unit-honest rename: nic_gbps -> nic_gbit_per_s (Gbit/s),
+# dram_gbps -> dram_gbyte_per_s (GB/s), with a deprecation compat path
+# ---------------------------------------------------------------------------
+
+
+def test_hardwarespec_new_names_no_warning():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        spec = cm.HardwareSpec("x", 16, nic_gbit_per_s=200.0,
+                               dram_gbyte_per_s=100.0)
+        positional = cm.HardwareSpec("y", 16, 200.0, 100.0)
+    assert spec.nic_gbit_per_s == positional.nic_gbit_per_s == 200.0
+    assert spec.dram_gbyte_per_s == positional.dram_gbyte_per_s == 100.0
+
+
+def test_hardwarespec_deprecated_kwargs_warn_and_match():
+    with pytest.warns(DeprecationWarning):
+        old = cm.HardwareSpec("x", 16, nic_gbps=200.0, dram_gbps=100.0)
+    new = cm.HardwareSpec("x", 16, nic_gbit_per_s=200.0,
+                          dram_gbyte_per_s=100.0)
+    assert old == new
+
+
+def test_hardwarespec_deprecated_properties_warn():
+    spec = cm.HardwareSpec("x", 16, 200.0, 100.0)
+    with pytest.warns(DeprecationWarning):
+        assert spec.nic_gbps == 200.0
+    with pytest.warns(DeprecationWarning):
+        assert spec.dram_gbps == 100.0
+
+
+def test_hardwarespec_rejects_mixing_old_and_new():
+    with pytest.raises(TypeError):
+        cm.HardwareSpec("x", 16, nic_gbit_per_s=200.0, nic_gbps=200.0)
+    with pytest.raises(TypeError):
+        cm.HardwareSpec("x", 16)          # NIC bandwidth missing entirely
+
+
+def test_hardwarespec_per_core_units_pinned():
+    """nic_per_core converts Gbit/s -> GB/s (the /8 the old ambiguous
+    names papered over); dram is already GB/s.  Pin E2000 so the
+    paper-table projections cannot silently shift."""
+    e2000 = cm.E2000
+    assert e2000.nic_gbit_per_s == 200.0
+    assert e2000.nic_per_core == pytest.approx(200.0 / 8.0 / e2000.cores)
+    assert e2000.dram_per_core == pytest.approx(
+        e2000.dram_gbyte_per_s / e2000.cores)
+
+
+def test_hardwarespec_replace_keeps_working():
+    import dataclasses
+    faster = dataclasses.replace(cm.E2000, nic_gbit_per_s=400.0)
+    assert faster.nic_gbit_per_s == 400.0
+    assert faster.dram_gbyte_per_s == cm.E2000.dram_gbyte_per_s

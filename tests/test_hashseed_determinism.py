@@ -1,0 +1,54 @@
+"""PYTHONHASHSEED regression gate (the contract DET003 polices).
+
+`PYTHONHASHSEED` randomizes str/bytes hashing per process, so any set
+or dict-key ordering that leaks into event emission produces different
+traces on different runs of the *same* cell.  The repo's determinism
+contract says it must not: we run one pinned simulation cell in two
+fresh interpreters under different hash seeds and require byte-identical
+JSON — events, finish times and spill accounting.  A failure here means
+somebody consumed an unordered set on an engine-visible path (simlint's
+DET003/DET004 are the static half of this check)."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# the child builds a cell with contention, storage spill and preemption
+# so the trace exercises dict/set-heavy paths, then dumps it as JSON
+_CHILD = r"""
+import json, sys
+from repro.sim import NodeModel, Topology, shuffle
+
+topo = Topology(
+    [NodeModel(f"n{i}", "smartnic", 1.0, accel_rate=1.0) for i in range(6)]
+    + [NodeModel("st0", "storage", 1.0, accel_rate=0.0, ici_bw=0.0)])
+tasks = shuffle(topo, cpu_work_per_node=0.25, bytes_per_node=6.0,
+                tasks_per_node=2, reduce_work_per_node=0.1,
+                state_bytes=1.0)
+res = topo.engine().run(tasks)
+trace = {
+    "events": [(e.time, e.kind.value, e.subject) for e in res.events],
+    "finish_times": sorted(res.finish_times.items()),
+    "spilled": res.spilled_bytes,
+    "restored": res.restored_bytes,
+}
+json.dump(trace, sys.stdout, sort_keys=True)
+"""
+
+
+def _run(hashseed: str) -> str:
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD],
+        env={"PYTHONPATH": str(REPO / "src"),
+             "PYTHONHASHSEED": hashseed,
+             "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    return proc.stdout
+
+
+def test_trace_is_byte_identical_across_hash_seeds():
+    traces = {seed: _run(seed) for seed in ("0", "42", "1337")}
+    assert traces["0"] == traces["42"] == traces["1337"]
+    assert '"events"' in traces["0"]  # the child actually produced a trace

@@ -1,0 +1,249 @@
+"""Framework-level simlint tests: suppression accounting, config
+loading (include/exclude, per-module disables, the mini-TOML parser),
+JSON reporter schema stability, CLI exit codes, and the self-check
+that keeps the repo's own source at zero findings."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (RULES, SCHEMA_VERSION, SimlintConfig,
+                            lint_paths, lint_source, load_config,
+                            render_json, render_rules, render_text)
+from repro.analysis.config import _parse_toml_min
+
+REPO = Path(__file__).resolve().parents[1]
+
+DIRTY = "import random\nx = random.random()\n"
+
+
+# ---------------------------------------------------------------------------
+# registry + suppression mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_codes_are_stable():
+    # the published rule set; additions are fine, renames/removals are
+    # a breaking change for suppression comments already in the tree
+    expected = {"DET001", "DET002", "DET003", "DET004", "DET005",
+                "UNIT001", "UNIT002", "UNIT003", "UNIT004",
+                "FLOAT001", "STATE001"}
+    assert expected <= set(RULES)
+    for code, rule in RULES.items():
+        assert rule.code == code
+        assert rule.name and rule.summary
+
+
+def test_suppression_requires_matching_code():
+    ok = lint_source("x = random.random()  # simlint: ok[DET001] seeded upstream\n"
+                     .replace("x =", "import random\nx ="),
+                     "m.py", SimlintConfig())
+    assert ok == []
+    # a *different* code on the line does not silence DET001
+    wrong = lint_source("import random\n"
+                        "x = random.random()  # simlint: ok[UNIT001]\n",
+                        "m.py", SimlintConfig())
+    assert [f.code for f in wrong] == ["DET001"]
+
+
+def test_suppression_multiple_codes_one_comment():
+    src = ("import random\n"
+           "x = random.random()  # simlint: ok[UNIT001, DET001] both\n")
+    assert lint_source(src, "m.py", SimlintConfig()) == []
+
+
+def test_suppressed_findings_are_counted():
+    src = ("import random\n"
+           "x = random.random()  # simlint: ok[DET001]\n")
+    supp = []
+    findings = lint_source(src, "m.py", SimlintConfig(),
+                           count_suppressed=supp)
+    assert findings == [] and supp == [1]
+
+
+# ---------------------------------------------------------------------------
+# config: include/exclude + per-module disables
+# ---------------------------------------------------------------------------
+
+
+def test_lint_paths_include_exclude(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "a.py").write_text(DIRTY)
+    (tmp_path / "src" / "vendored").mkdir()
+    (tmp_path / "src" / "vendored" / "b.py").write_text(DIRTY)
+    cfg = SimlintConfig(root=str(tmp_path),
+                        exclude=["src/vendored"])
+    res = lint_paths([str(tmp_path / "src")], cfg)
+    assert res.n_files == 1
+    assert [f.code for f in res.findings] == ["DET001"]
+    assert res.findings[0].path == "src/a.py"
+
+
+def test_per_module_disable():
+    cfg = SimlintConfig(per_module={"src/special.py": ["DET001"]})
+    assert lint_source(DIRTY, "src/special.py", cfg) == []
+    assert [f.code for f in lint_source(DIRTY, "src/other.py", cfg)] \
+        == ["DET001"]
+
+
+def test_load_config_from_pyproject(tmp_path):
+    (tmp_path / "pyproject.toml").write_text(textwrap.dedent("""
+        [project]
+        name = "x"
+
+        [tool.simlint]
+        include = ["lib"]
+        exclude = ["lib/gen"]
+        timed-paths = ["lib/hot"]
+
+        [tool.simlint.per-module]
+        "lib/ties.py" = ["FLOAT001"]
+        """))
+    cfg = load_config(str(tmp_path))
+    assert cfg.include == ["lib"]
+    assert cfg.exclude == ["lib/gen"]
+    assert cfg.timed_paths == ["lib/hot"]
+    assert cfg.rule_disabled("lib/ties.py", "FLOAT001")
+    assert not cfg.rule_disabled("lib/ties.py", "DET001")
+    assert cfg.in_timed_paths("lib/hot/x.py")
+    assert not cfg.in_timed_paths("lib/cold/x.py")
+
+
+def test_load_config_defaults_without_section(tmp_path):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname = 'x'\n")
+    cfg = load_config(str(tmp_path))
+    assert cfg.include == SimlintConfig().include
+
+
+def test_load_config_rejects_bad_types(tmp_path):
+    (tmp_path / "pyproject.toml").write_text(
+        "[tool.simlint]\ninclude = 'src'\n")
+    with pytest.raises(ValueError):
+        load_config(str(tmp_path))
+
+
+def test_repo_pyproject_whitelists_alloc_ties():
+    cfg = load_config(str(REPO))
+    assert cfg.rule_disabled("src/repro/sim/alloc.py", "FLOAT001")
+
+
+# ---------------------------------------------------------------------------
+# mini-TOML parser (the tomllib fallback must handle our config shapes)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_toml_min_shapes():
+    data = _parse_toml_min(textwrap.dedent("""
+        [tool.simlint]
+        include = ["src", "benchmarks"]  # trailing comment
+        flag = true
+        n = 3
+
+        [tool.simlint.per-module]
+        "src/a b.py" = ["FLOAT001", "DET003"]
+
+        [tool.other]
+        s = "has # no comment"
+        multi = [
+            "one",
+            "two",
+        ]
+        """))
+    sl = data["tool"]["simlint"]
+    assert sl["include"] == ["src", "benchmarks"]
+    assert sl["flag"] is True and sl["n"] == 3
+    assert sl["per-module"]["src/a b.py"] == ["FLOAT001", "DET003"]
+    assert data["tool"]["other"]["s"] == "has # no comment"
+    assert data["tool"]["other"]["multi"] == ["one", "two"]
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+
+
+def _result_for(tmp_path):
+    (tmp_path / "m.py").write_text(DIRTY)
+    return lint_paths([str(tmp_path / "m.py")],
+                      SimlintConfig(root=str(tmp_path)))
+
+
+def test_render_text_format(tmp_path):
+    res = _result_for(tmp_path)
+    out = render_text(res)
+    assert "m.py:2:5: DET001" in out
+    assert "simlint: 1 finding" in out.splitlines()[-1]
+
+
+def test_render_json_schema_stability(tmp_path):
+    res = _result_for(tmp_path)
+    doc = json.loads(render_json(res))
+    # the CI artifact contract: these exact top-level keys
+    assert set(doc) == {"schema_version", "tool", "findings", "counts",
+                        "n_findings", "n_suppressed", "n_files"}
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert doc["tool"] == "simlint"
+    assert doc["n_findings"] == 1 and doc["counts"] == {"DET001": 1}
+    (finding,) = doc["findings"]
+    assert set(finding) == {"path", "line", "col", "code", "message"}
+
+
+def test_render_rules_lists_every_rule():
+    out = render_rules()
+    for code in RULES:
+        assert code in out
+
+
+def test_parse_error_is_a_finding():
+    bad = lint_source("def f(:\n", "m.py", SimlintConfig())
+    assert [f.code for f in bad] == ["E001"]
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+
+
+def _cli(args, cwd):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exit_codes(tmp_path):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text(DIRTY)
+    assert _cli([str(clean)], tmp_path).returncode == 0
+    proc = _cli([str(dirty)], tmp_path)
+    assert proc.returncode == 1
+    assert "DET001" in proc.stdout
+    assert _cli([str(tmp_path / "missing.py")], tmp_path).returncode == 2
+
+
+def test_cli_json_out(tmp_path):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    (tmp_path / "m.py").write_text(DIRTY)
+    out = tmp_path / "report.json"
+    proc = _cli([str(tmp_path / "m.py"), "--out", str(out)], tmp_path)
+    assert proc.returncode == 1
+    doc = json.loads(out.read_text())
+    assert doc["tool"] == "simlint" and doc["n_findings"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the gate itself: the repo's own source must stay clean
+# ---------------------------------------------------------------------------
+
+
+def test_src_is_simlint_clean():
+    cfg = load_config(str(REPO))
+    res = lint_paths([str(REPO / "src")], cfg)
+    assert res.findings == [], render_text(res)
+    assert res.n_files > 50  # sanity: the walk actually saw the tree

@@ -1,0 +1,348 @@
+"""Per-rule fixtures: every shipped simlint rule demonstrably fires on
+a minimal violation and is demonstrably suppressible with
+``# simlint: ok[CODE]`` on the finding line.  Path-scoped rules are
+exercised both inside and outside their configured scope."""
+import textwrap
+
+import pytest
+
+from repro.analysis import SimlintConfig, lint_source
+
+# a path inside every default rule scope (timed/ordered/state)
+SIM_PATH = "src/repro/sim/somefile.py"
+# a path outside all of them
+PLAIN_PATH = "src/repro/models/somefile.py"
+
+
+def lint(src, path=SIM_PATH, config=None, codes=None):
+    """Lint a dedented snippet; return finding codes (optionally
+    filtered to one family so unrelated rules can't leak in)."""
+    found = lint_source(textwrap.dedent(src), path,
+                        config or SimlintConfig())
+    out = [f.code for f in found]
+    if codes is not None:
+        out = [c for c in out if c in codes]
+    return out
+
+
+def assert_fires_and_suppresses(src, code, path=SIM_PATH, config=None):
+    """The core per-rule contract: the snippet yields exactly the
+    expected code, and tagging the finding line silences it."""
+    src = textwrap.dedent(src)
+    findings = lint_source(src, path, config or SimlintConfig())
+    lines = [f.line for f in findings if f.code == code]
+    assert lines, f"{code} did not fire:\n{src}"
+    srclines = src.splitlines()
+    for ln in set(lines):
+        srclines[ln - 1] += f"  # simlint: ok[{code}] fixture"
+    suppressed = lint_source("\n".join(srclines), path,
+                             config or SimlintConfig())
+    assert not [f for f in suppressed if f.code == code], \
+        f"{code} not suppressible on line(s) {lines}"
+
+
+# ---------------------------------------------------------------------------
+# DET001 — unseeded global RNG
+# ---------------------------------------------------------------------------
+
+
+def test_det001_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        import random
+        x = random.random()
+        """, "DET001", path=PLAIN_PATH)
+
+
+def test_det001_numpy_and_aliases():
+    assert lint("""
+        import numpy as np
+        v = np.random.rand(4)
+        """, PLAIN_PATH) == ["DET001"]
+    assert lint("""
+        from random import shuffle
+        shuffle(items)
+        """, PLAIN_PATH) == ["DET001"]
+    assert lint("""
+        import random
+        random.seed(0)
+        """, PLAIN_PATH) == ["DET001"]
+
+
+def test_det001_seeded_forms_are_clean():
+    assert lint("""
+        import random
+        import numpy as np
+        rng = random.Random(7)
+        g = np.random.default_rng(7)
+        x = rng.random() + g.random()
+        """, PLAIN_PATH) == []
+
+
+# ---------------------------------------------------------------------------
+# DET002 — wall-clock measurement (timed-paths scope)
+# ---------------------------------------------------------------------------
+
+
+def test_det002_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        import time
+        t0 = time.time()
+        """, "DET002", path="src/repro/launch/x.py")
+
+
+def test_det002_scope_and_aliases():
+    src = """
+        from time import time as now
+        t = now()
+        """
+    assert lint(src, "src/repro/sim/x.py") == ["DET002"]
+    # outside timed-paths the wall clock is fine (e.g. log timestamps)
+    assert lint(src, PLAIN_PATH) == []
+    assert lint("""
+        import time
+        t = time.perf_counter()
+        """, "src/repro/sim/x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# DET003 — unordered set iteration
+# ---------------------------------------------------------------------------
+
+
+def test_det003_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        def emit(events):
+            pending = set(events)
+            out = []
+            for e in pending:
+                out.append(e)
+            return out
+        """, "DET003", path=PLAIN_PATH)
+
+
+@pytest.mark.parametrize("snippet,expect", [
+    # direct set expressions and tracked names
+    ("for x in {1, 2, 3}:\n    print(x)", ["DET003"]),
+    ("s = set(xs)\nys = [x for x in s]", ["DET003"]),
+    ("s: set = set()\nout = list(s)", ["DET003"]),
+    ("s = set(a) - set(b)\nfor x in s:\n    go(x)", ["DET003"]),
+    # order-erasing consumers are fine
+    ("s = set(xs)\nys = sorted(s)", []),
+    ("s = set(xs)\nn = sum(1 for x in s)", []),
+    ("s = set(xs)\nm = max(s)", []),
+    # membership and set-building never leak order
+    ("s = set(xs)\nok = y in s", []),
+    ("s = set(xs)\nt = {f(x) for x in s}", []),
+])
+def test_det003_matrix(snippet, expect):
+    assert lint(snippet, PLAIN_PATH, codes={"DET003"}) == expect
+
+
+# ---------------------------------------------------------------------------
+# DET004 — sort keys need a total order (ordered-paths scope)
+# ---------------------------------------------------------------------------
+
+
+def test_det004_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        jobs.sort(key=lambda j: j.arrival)
+        """, "DET004", path=SIM_PATH)
+
+
+def test_det004_scope_and_tuple_keys():
+    bare = "out = sorted(jobs, key=lambda j: j.arrival)\n"
+    assert lint(bare, SIM_PATH, codes={"DET004"}) == ["DET004"]
+    assert lint(bare, PLAIN_PATH, codes={"DET004"}) == []
+    # a tuple key ending in a unique id is the sanctioned form
+    assert lint(
+        "out = sorted(jobs, key=lambda j: (j.arrival, j.jid))\n",
+        SIM_PATH, codes={"DET004"}) == []
+    # no key at all relies on natural total order — allowed
+    assert lint("out = sorted(xs)\n", SIM_PATH, codes={"DET004"}) == []
+
+
+# ---------------------------------------------------------------------------
+# DET005 — id()-based ordering
+# ---------------------------------------------------------------------------
+
+
+def test_det005_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        out = sorted(objs, key=id)
+        """, "DET005", path=PLAIN_PATH)
+
+
+def test_det005_forms():
+    assert lint("out = sorted(objs, key=lambda o: id(o))\n",
+                PLAIN_PATH, codes={"DET005"}) == ["DET005"]
+    assert lint("first = id(a) < id(b)\n",
+                PLAIN_PATH, codes={"DET005"}) == ["DET005"]
+    assert lint("same = id(a) == id(b)\n",   # identity test, not order
+                PLAIN_PATH, codes={"DET005"}) == []
+
+
+# ---------------------------------------------------------------------------
+# UNIT001 — mixed-unit arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_unit001_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        total = state_bytes + wall_s
+        """, "UNIT001", path=PLAIN_PATH)
+
+
+@pytest.mark.parametrize("snippet,expect", [
+    ("x = spill_bytes - elapsed_seconds\n", ["UNIT001"]),
+    # Gbit/s vs GB/s is a *flavor* conflict at equal dimensions
+    ("bw = nic_gbit_per_s + dram_gbyte_per_s\n", ["UNIT001"]),
+    # the sanctioned /8 conversion makes the sum honest
+    ("bw = nic_gbit_per_s / 8.0 + dram_gbyte_per_s\n", []),
+    ("x = a_bytes + b_bytes\n", []),
+    ("x = a_bytes + 1\n", []),              # dimensionless constant ok
+    ("x = a_bytes + unknown_thing\n", []),  # unknown side -> silent
+])
+def test_unit001_matrix(snippet, expect):
+    assert lint(snippet, PLAIN_PATH, codes={"UNIT001"}) == expect
+
+
+# ---------------------------------------------------------------------------
+# UNIT002 — bandwidth x bandwidth
+# ---------------------------------------------------------------------------
+
+
+def test_unit002_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        x = nic_gbit_per_s * dram_gbyte_per_s
+        """, "UNIT002", path=PLAIN_PATH)
+
+
+def test_unit002_bandwidth_times_seconds_is_fine():
+    assert lint("moved = dram_gbyte_per_s * window_s\n",
+                PLAIN_PATH, codes={"UNIT002"}) == []
+
+
+# ---------------------------------------------------------------------------
+# UNIT003 — declared vs returned unit
+# ---------------------------------------------------------------------------
+
+
+def test_unit003_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        def transfer_seconds(size_bytes):
+            return size_bytes
+        """, "UNIT003", path=PLAIN_PATH)
+
+
+def test_unit003_division_derives_seconds():
+    # bytes / bandwidth = seconds: inference follows the algebra
+    assert lint("""
+        def transfer_seconds(size_bytes, link_bw):
+            return size_bytes / link_bw
+        """, PLAIN_PATH, codes={"UNIT003"}) == []
+
+
+def test_unit003_catches_dropped_gbit_conversion():
+    # the costmodel poster child: nic_per_core declares GB/s in the
+    # registry; forgetting the /8 returns Gbit/s and must flag
+    assert lint("""
+        def nic_per_core(spec):
+            return spec.nic_gbit_per_s / spec.cores
+        """, PLAIN_PATH, codes={"UNIT003"}) == ["UNIT003"]
+    assert lint("""
+        def nic_per_core(spec):
+            return spec.nic_gbit_per_s / 8.0 / spec.cores
+        """, PLAIN_PATH, codes={"UNIT003"}) == []
+
+
+# ---------------------------------------------------------------------------
+# UNIT004 — ambiguous `_gbps` names
+# ---------------------------------------------------------------------------
+
+
+def test_unit004_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        link_gbps = 100.0
+        """, "UNIT004", path=PLAIN_PATH)
+
+
+def test_unit004_definitions_not_uses():
+    assert lint("def f(port_gbps):\n    return port_gbps\n",
+                PLAIN_PATH, codes={"UNIT004"}) == ["UNIT004"]
+    # *using* a legacy name is clean; only definitions fire
+    assert lint("x = spec.nic_gbps * 2\n",
+                PLAIN_PATH, codes={"UNIT004"}) == []
+    assert lint("link_gbit_per_s = 100.0\n",
+                PLAIN_PATH, codes={"UNIT004"}) == []
+
+
+# ---------------------------------------------------------------------------
+# FLOAT001 — exact float equality
+# ---------------------------------------------------------------------------
+
+
+def test_float001_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        def close(a, b):
+            return a / b == 1.0
+        """, "FLOAT001", path=PLAIN_PATH)
+
+
+@pytest.mark.parametrize("snippet,expect", [
+    # taint flows through assignment, like alloc.py's tie grouping
+    ("def f(remaining, live):\n"
+     "    fair = remaining / live\n"
+     "    m = min(fair)\n"
+     "    return fair == m\n", ["FLOAT001"]),
+    ("x = wall_s == 3.5\n", ["FLOAT001"]),
+    ("ok = n == 3\n", []),                     # ints: fine
+    ("ok = name == 'xfer'\n", []),             # strings: fine
+    ("ok = a_bytes == b_bytes\n", []),         # byte counts are ints
+])
+def test_float001_matrix(snippet, expect):
+    assert lint(snippet, PLAIN_PATH, codes={"FLOAT001"}) == expect
+
+
+def test_float001_module_whitelist():
+    cfg = SimlintConfig(
+        per_module={"src/repro/sim/alloc.py": ["FLOAT001"]})
+    src = "def f(a, b):\n    return a / b == 1.0\n"
+    assert lint(src, "src/repro/sim/alloc.py", cfg,
+                codes={"FLOAT001"}) == []
+    assert lint(src, "src/repro/sim/engine.py", cfg,
+                codes={"FLOAT001"}) == ["FLOAT001"]
+
+
+# ---------------------------------------------------------------------------
+# STATE001 — module-level mutable state (state-paths scope)
+# ---------------------------------------------------------------------------
+
+
+def test_state001_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        _CACHE = {}
+
+        def run(engine):
+            _CACHE[engine.name] = engine
+        """, "STATE001", path=SIM_PATH)
+
+
+@pytest.mark.parametrize("snippet,expect", [
+    ("REG = []\ndef f(x):\n    REG.append(x)\n", ["STATE001"]),
+    ("SEEN = set()\ndef f(x):\n    SEEN.add(x)\n", ["STATE001"]),
+    ("N = 0\ndef f():\n    global N\n    N += 1\n", []),  # int, not container
+    # a local of the same name shadows the module global
+    ("REG = []\ndef f(x):\n    REG = []\n    REG.append(x)\n", []),
+    # `global` re-establishes the module binding despite assignment
+    ("REG = []\ndef f(x):\n    global REG\n    REG = []\n"
+     "    REG.append(x)\n", ["STATE001"]),
+    # read-only access is fine (BACKENDS-style registries)
+    ("TABLE = {'a': 1}\ndef f(k):\n    return TABLE[k]\n", []),
+])
+def test_state001_matrix(snippet, expect):
+    assert lint(snippet, SIM_PATH, codes={"STATE001"}) == expect
+
+
+def test_state001_out_of_scope_path_is_clean():
+    assert lint("REG = []\ndef f(x):\n    REG.append(x)\n",
+                PLAIN_PATH, codes={"STATE001"}) == []
