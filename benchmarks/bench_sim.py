@@ -5,9 +5,12 @@ fabric-contention cell (per-tenant slowdown at 1:1 vs 4:1
 oversubscription), the online-scheduler SLO cell (FIFO vs rack-aware
 packing p99 JCT + energy-per-job), the preemption-checkpointing cell
 (reset vs spill/restore preemption wasted work on the pinned urgent-job
-stream), the engine-scale events/sec cell (array vs legacy hot-loop
-backends on the pinned 64-node pipelined-shuffle-waves workload), plus
-the closed-form cross-validation:
+stream), the gang-scheduled pipeline cell (1F1B/GPipe bubble fraction
+vs the (p-1)/(m+p-1) analytic, whole-gang preempt wasted work under
+reset vs spill, backend trace identity), the engine-scale events/sec
+cell (array vs legacy hot-loop backends on the pinned 64-node
+pipelined-shuffle-waves workload), plus the closed-form
+cross-validation:
 
     PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
     PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
@@ -42,13 +45,16 @@ from repro.sim import (Fabric, append_bench_run, compare_allocators,
                        cross_validate_bigquery,
                        lovelock_cluster, measure_interference,
                        multi_tenant, perf_digest,
+                       pipeline_bubble_report,
                        pipelined_shuffle_waves,
                        reference_tenants, scatter_gather,
                        simulate_mu, skewed_analytics_mix, summarize,
                        synthetic_trace, trace_from_record,
                        traditional_cluster, training_from_trace)
-from repro.sim.sched import (energy_report, reference_job_stream,
-                             reference_preempt_stream)
+from repro.sim.sched import (ClusterScheduler, analytics_template,
+                             energy_report, gang_summary,
+                             pipeline_template, reference_job_stream,
+                             reference_preempt_stream, trace_stream)
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ART = ROOT / "artifacts" / "dryrun"
@@ -340,9 +346,90 @@ def scenario_engine_scale(smoke=False):
     return out
 
 
+def scenario_pipeline_gang():
+    """Gang-scheduled pipeline cell: a 4-stage 1F1B x 8-microbatch
+    pipeline-parallel training job (one gang) on an 8-node 2-rack
+    2:1-core fabric with two storage nodes, hit mid-run by an urgent
+    arrival that preempts it.
+
+    Three tracked numbers.  ``bubble_fraction`` per schedule must sit
+    within 5% of the analytic (p-1)/(m+p-1) = 3/11 on the bubble-only
+    cell (equal fwd/bwd cost, no transfers) — the engine's
+    idle-while-peer-busy gang accounting reproducing the pipeline
+    textbook figure.  ``gang_wasted_work_ratio`` (preempt-ckpt wasted
+    work / reset-preempt wasted work on the same stream) must stay
+    strictly below 1.0: spilling every stage's state and holding the
+    gang at the restore barrier replays strictly less progress than
+    resetting all stages.  ``bit_identical`` must stay true: the
+    gang-preempted scheduled run produces byte-identical event traces
+    across the array and legacy engine backends.
+
+    Pinned at 8 nodes / 2 racks / 2 storage / p=4 / m=8 / urgent at
+    t=8 so the tracked numbers are identical between --smoke and the
+    full sweep."""
+    n_servers = 8
+
+    def make_topo():
+        # same pinned layout as preempt_ckpt: nic0-4 | nic5-7 + both
+        # storage nodes span exactly 2 racks on a 2:1 core
+        return lovelock_cluster(
+            n_servers, 1, accel_rate=1.0, storage_nodes=2,
+            fabric=Fabric(rack_size=5, oversubscription=2.0,
+                          core_oversubscription=2.0))
+
+    p, m = 4, 8
+    bubbles = pipeline_bubble_report(make_topo, stages=p,
+                                     microbatches=m)
+    n_events = 0
+
+    jobs = trace_stream([
+        (0.0, pipeline_template(p, microbatches=m)),
+        (8.0, analytics_template(6, priority=5, name="urgent")),
+    ])
+    cmp = compare_policies(make_topo, jobs,
+                           policies=("preempt", "preempt-ckpt"))
+    n_events += sum(len(sr.result.events)
+                    for sr in cmp["scheds"].values())
+    gangs = {name: gang_summary(sr)
+             for name, sr in cmp["scheds"].items()}
+
+    # backend identity on the gang-preempted stream: spill, restore
+    # barrier and urgent arrival all replayed on both numeric cores
+    traces = {}
+    for backend in ("legacy", "array"):
+        sr = ClusterScheduler(make_topo(), "preempt-ckpt",
+                              backend=backend).run(jobs)
+        traces[backend] = sr.result
+        n_events += len(sr.result.events)
+    bit_identical = (
+        traces["legacy"].events == traces["array"].events
+        and traces["legacy"].finish_times == traces["array"].finish_times)
+
+    keep = ("p99_jct_s", "preemptions", "spill_preemptions",
+            "wasted_work", "spilled_bytes", "restored_bytes", "complete")
+    return {
+        "fabric": "2:1 core",
+        "stages": p,
+        "microbatches": m,
+        "n_events": n_events,
+        "bubble_analytic": round(bubbles["analytic"], 6),
+        "bubble_fraction": {
+            s: round(r["bubble_fraction"], 6)
+            for s, r in bubbles["schedules"].items()},
+        "reset": {k: cmp["slo"]["preempt+pack"][k] for k in keep},
+        "spill": {k: cmp["slo"]["preempt-ckpt+pack"][k] for k in keep},
+        "gangs": {name: {g: {k: round(v, 4) if isinstance(v, float)
+                             else v for k, v in row.items()}
+                         for g, row in gg.items()}
+                  for name, gg in gangs.items()},
+        "gang_wasted_work_ratio": round(cmp["wasted_work_ratio"], 4),
+        "bit_identical": bit_identical,
+    }
+
+
 SCENARIOS = ("shuffle", "scatter_gather", "training", "multi_tenant",
              "analytics_skew", "scheduler_slo", "preempt_ckpt",
-             "engine_scale")
+             "pipeline_gang", "engine_scale")
 
 
 def main():
@@ -368,6 +455,7 @@ def main():
         "analytics_skew": scenario_analytics_skew,
         "scheduler_slo": scenario_scheduler_slo,
         "preempt_ckpt": scenario_preempt_ckpt,
+        "pipeline_gang": scenario_pipeline_gang,
         "engine_scale": lambda: scenario_engine_scale(args.smoke),
     }
     cells = (args.cell,) if args.cell else SCENARIOS
@@ -406,6 +494,13 @@ def main():
     if "preempt_ckpt" in scns:
         digest.append(f"spill wasted-work ratio "
                       f"{scns['preempt_ckpt']['spill_wasted_work_ratio']}")
+    if "pipeline_gang" in scns:
+        pg = scns["pipeline_gang"]
+        digest.append(
+            f"pipeline bubble {pg['bubble_fraction']['1f1b']} "
+            f"(analytic {pg['bubble_analytic']}), gang wasted-work "
+            f"ratio {pg['gang_wasted_work_ratio']}, "
+            f"bit_identical={pg['bit_identical']}")
     if "engine_scale" in scns:
         es = scns["engine_scale"]
         digest.append(

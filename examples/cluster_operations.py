@@ -17,7 +17,15 @@ preempt/spill counts, and the work replayed because of resets (spill
 preemption drives it to ~0 at the price of checkpoint bytes on the
 fabric).
 
-The second half closes the loop to the paper's §4 energy claim: the
+The gang section runs the pinned pipeline-gang cell: a 4-stage 1F1B
+pipeline-parallel training job (8 microbatches, one gang) hit mid-run
+by an urgent analytics arrival.  Reset preemption replays the
+interrupted stage work; checkpointing preemption spills every stage's
+state to storage and holds the whole gang at the restore barrier, so
+the pipeline resumes in lockstep — the per-gang bubble fraction and
+wasted work land in the table via `gang_summary`.
+
+The final section closes the loop to the paper's §4 energy claim: the
 same job stream served by a traditional server cluster vs the
 phi-NICs-per-server Lovelock layout, energy-per-job side by side, with
 the measured traditional/Lovelock ratio checked against Eq. 2's
@@ -27,10 +35,12 @@ the measured traditional/Lovelock ratio checked against Eq. 2's
 """
 from repro.core import costmodel as cm
 from repro.sim import Fabric, lovelock_cluster, traditional_cluster
-from repro.sim.sched import (ClusterScheduler, energy_comparison,
-                             energy_report, reference_job_stream,
+from repro.sim.sched import (ClusterScheduler, analytics_template,
+                             energy_comparison, energy_report,
+                             gang_summary, pipeline_template,
+                             reference_job_stream,
                              reference_preempt_stream, run_policies,
-                             slo_summary)
+                             slo_summary, trace_stream)
 
 N_SERVERS = 8
 PHI = 2
@@ -72,6 +82,27 @@ def policy_table():
               f"{s['wasted_work']:7.2f} {ckpt_b:7.1f}")
 
 
+def gang_pipeline():
+    """The pinned gang cell: a 1F1B pipeline gang preempted mid-run."""
+    jobs = trace_stream([
+        (0.0, pipeline_template(4, microbatches=8)),
+        (8.0, analytics_template(6, priority=5, name="urgent"))])
+    print("\ngang-scheduled pipeline (4 stages x 8 microbatches, 1F1B) "
+          "preempted by an urgent arrival at t=8:")
+    print(f"  {'policy':>17s} {'gang JCT':>9s} {'bubble':>7s} "
+          f"{'preempts':>8s} {'spills':>6s} {'wasted':>7s}")
+    for name, sr in run_policies(
+            make_topo, jobs,
+            policies=("preempt", "preempt-ckpt")).items():
+        s = slo_summary(sr)
+        assert s["complete"], name
+        (gang,) = gang_summary(sr).values()
+        print(f"  {name:>17s} {gang['jct_s']:8.1f}s "
+              f"{gang['bubble_fraction']:6.1%} "
+              f"{gang['preemptions']:8d} {gang['spills']:6d} "
+              f"{s['wasted_work']:7.2f}")
+
+
 def energy_loop():
     """Same stream, traditional servers vs phi-per-server smart NICs."""
     jobs = reference_job_stream()
@@ -106,6 +137,7 @@ def energy_loop():
 
 def main():
     policy_table()
+    gang_pipeline()
     energy_loop()
 
 

@@ -215,6 +215,142 @@ class SortWithoutTiebreak(Rule):
                 "key a tuple ending in a unique id (e.g. (t, tid))")
 
 
+class _IdentityHashClasses:
+    """Names of classes defined in this module whose instances hash by
+    identity (memory address): no ``__hash__`` of their own and not a
+    frozen / unsafe_hash dataclass.  A plain class keeps object's
+    id-based hash; a non-frozen ``eq=False`` dataclass does too; a
+    frozen (or ``unsafe_hash=True``) dataclass derives a value hash
+    from its fields and is fine."""
+
+    def __init__(self, tree: ast.Module):
+        self.names: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) \
+                    and not self._pins_hash(node):
+                self.names.add(node.name)
+
+    @staticmethod
+    def _pins_hash(cls: ast.ClassDef) -> bool:
+        for stmt in cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name == "__hash__":
+                return True
+            if isinstance(stmt, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "__hash__"
+                            for t in stmt.targets):
+                return True
+        for dec in cls.decorator_list:
+            call = dec if isinstance(dec, ast.Call) else None
+            fn = call.func if call else dec
+            name = (fn.id if isinstance(fn, ast.Name)
+                    else fn.attr if isinstance(fn, ast.Attribute)
+                    else None)
+            if name != "dataclass":
+                continue
+            if call is None:
+                # bare @dataclass: eq=True sets __hash__ = None, so
+                # instances are unhashable — they can never key a dict
+                return True
+            kw = {k.arg: k.value for k in call.keywords}
+            for flag in ("frozen", "unsafe_hash"):
+                v = kw.get(flag)
+                if isinstance(v, ast.Constant) and v.value is True:
+                    return True
+            eq = kw.get("eq")
+            if not (isinstance(eq, ast.Constant) and eq.value is False):
+                return True           # eq defaults True -> unhashable
+        return False
+
+
+@register
+class IdentityKeyedDictIteration(Rule):
+    code = "DET006"
+    name = "identity-keyed-dict-iteration"
+    summary = ("iterating a dict keyed by objects hashing by identity "
+               "(no pinned __hash__) bakes per-process addresses into "
+               "downstream order; key by a stable id instead")
+
+    _MSG = ("dict keyed by {cls} instances, which hash by identity "
+            "(no __hash__ pinned): any set of these keys — or a tie "
+            "broken by hash — varies per process; key the dict by a "
+            "stable identifier or pin __hash__")
+
+    def _keyed_dicts(self, scope, classes: Set[str]) -> dict:
+        """Names of dicts keyed by identity-hash class instances in
+        this scope -> the offending class name."""
+
+        def key_class(expr) -> Optional[str]:
+            if isinstance(expr, ast.Call) \
+                    and isinstance(expr.func, ast.Name) \
+                    and expr.func.id in classes:
+                return expr.func.id
+            if isinstance(expr, ast.Name) and expr.id in classes:
+                return expr.id        # keyed by the class object itself
+            return None
+
+        out: dict = {}
+        for node in walk_scope(scope):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Dict):
+                for k in node.value.keys:
+                    cls = key_class(k)
+                    if cls:
+                        for t in node.targets:
+                            if isinstance(t, ast.Name):
+                                out[t.id] = cls
+            elif isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.DictComp):
+                cls = key_class(node.value.key)
+                if cls:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out[t.id] = cls
+            elif isinstance(node, ast.Assign) \
+                    and isinstance(node.targets[0], ast.Subscript) \
+                    and isinstance(node.targets[0].value, ast.Name):
+                cls = key_class(node.targets[0].slice)
+                if cls:
+                    out[node.targets[0].value.id] = cls
+        return out
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        classes = _IdentityHashClasses(tree).names
+        if not classes:
+            return
+        for scope in scopes(tree):
+            keyed = self._keyed_dicts(scope, classes)
+            if not keyed:
+                continue
+
+            def dict_name(it) -> Optional[str]:
+                # `d`, `d.items()`, `d.keys()`, `d.values()`
+                if isinstance(it, ast.Name) and it.id in keyed:
+                    return it.id
+                if isinstance(it, ast.Call) \
+                        and isinstance(it.func, ast.Attribute) \
+                        and it.func.attr in ("items", "keys", "values") \
+                        and isinstance(it.func.value, ast.Name) \
+                        and it.func.value.id in keyed:
+                    return it.func.value.id
+                return None
+
+            for node in walk_scope(scope):
+                iters = []
+                if isinstance(node, ast.For):
+                    iters = [node.iter]
+                elif isinstance(node, (ast.ListComp, ast.DictComp,
+                                       ast.SetComp, ast.GeneratorExp)):
+                    iters = [g.iter for g in node.generators]
+                for it in iters:
+                    name = dict_name(it)
+                    if name:
+                        yield Finding(
+                            ctx.path, it.lineno, it.col_offset,
+                            self.code,
+                            self._MSG.format(cls=keyed[name]))
+
+
 @register
 class IdBasedOrdering(Rule):
     code = "DET005"

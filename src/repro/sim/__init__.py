@@ -20,6 +20,14 @@ multi-stage analytics DAGs with a configurable hot joiner
 `core.elastic.StragglerDetector` and injects its evictions back into
 the timeline).
 
+Workloads are built on a shared staged-program IR (`program`:
+`Stage`/`Instr`/`Program` lowered to engine tasks by `lower`), which
+also carries gang semantics: `pipeline_training` (1F1B / GPipe
+instruction schedules over accelerator stages) and `rlhf_dataflow`
+(generation fan-out feeding a co-scheduled trainer) tag their tasks
+with a ``gang_id`` so the engine books pipeline-bubble time and
+preempts/resumes the gang as a unit.
+
 The `sched` subpackage adds the online control plane: job streams
 arriving over time (Poisson or trace-driven), queueing and rack/role-
 aware placement with priority preemption, incremental admission through
@@ -42,9 +50,12 @@ from repro.sim.engine import (ALLOCATORS, Engine, EventKind, Resource,
 from repro.sim.topology import (Fabric, NodeModel, Topology,
                                 lovelock_cluster, topology_from_plan,
                                 traditional_cluster)
-from repro.sim.workloads import (MultiTenantWorkload, analytics_dag,
-                                 multi_tenant, pipelined_shuffle_waves,
-                                 reference_tenants,
+from repro.sim.program import Instr, Program, Stage, lower
+from repro.sim.workloads import (PIPELINE_SCHEDULES,
+                                 MultiTenantWorkload, analytics_dag,
+                                 multi_tenant, pipeline_training,
+                                 pipelined_shuffle_waves,
+                                 reference_tenants, rlhf_dataflow,
                                  scatter_gather, shuffle,
                                  skewed_analytics_mix, storage_replay,
                                  synthetic_trace, trace_from_record,
@@ -53,7 +64,8 @@ from repro.sim.workloads import (MultiTenantWorkload, analytics_dag,
 from repro.sim.validate import (compare_allocators, compare_backends,
                                 compare_policies,
                                 cross_validate_bigquery,
-                                measure_interference, simulate_mu,
+                                measure_interference,
+                                pipeline_bubble_report, simulate_mu,
                                 simulate_plan)
 from repro.sim.report import (append_bench_run, attach_scores,
                               attach_slo, attach_tenants,
@@ -66,15 +78,16 @@ __all__ = [
     "SimResult", "Task", "progressive_fill_rates", "water_filling_rates",
     "Fabric", "NodeModel", "Topology", "lovelock_cluster",
     "topology_from_plan", "traditional_cluster",
-    "MultiTenantWorkload", "analytics_dag", "multi_tenant",
-    "pipelined_shuffle_waves",
-    "reference_tenants", "scatter_gather", "shuffle",
+    "Instr", "Program", "Stage", "lower",
+    "PIPELINE_SCHEDULES", "MultiTenantWorkload", "analytics_dag",
+    "multi_tenant", "pipeline_training", "pipelined_shuffle_waves",
+    "reference_tenants", "rlhf_dataflow", "scatter_gather", "shuffle",
     "skewed_analytics_mix",
     "storage_replay", "synthetic_trace", "trace_from_record",
     "training_from_trace", "training_with_stragglers",
     "compare_allocators", "compare_backends", "compare_policies",
     "cross_validate_bigquery",
-    "measure_interference", "simulate_mu",
+    "measure_interference", "pipeline_bubble_report", "simulate_mu",
     "simulate_plan", "append_bench_run", "attach_scores", "attach_slo",
     "attach_tenants", "load_bench_history", "per_tenant", "perf_digest",
     "render", "summarize", "sched",

@@ -100,7 +100,15 @@ class Task:
     a training step, partial aggregates for an analytics stage):
     finite means a preempting scheduler may spill the state to a storage
     node and later restore it instead of replaying; ``inf`` (default)
-    means the task is not checkpointable and preemption resets it."""
+    means the task is not checkpointable and preemption resets it.
+
+    ``gang_id`` (optional) marks the task as one member of a gang — a
+    co-scheduled group (a pipeline-parallel training job's stages, an
+    RLHF actor+trainer pair) that runs or waits together.  The engine
+    accounts per-gang **bubble time** (member nodes idle while a peer
+    is busy) and enforces the whole-gang restore barrier: after a
+    spilling preemption, no member task re-admits until every member's
+    restore has landed."""
     tid: str
     kind: EventKind
     resources: tuple
@@ -108,6 +116,7 @@ class Task:
     deps: tuple = ()
     node: str = ""
     state_bytes: float = math.inf
+    gang_id: str = ""
 
 
 @dataclasses.dataclass
@@ -161,6 +170,14 @@ class SimResult:
     # solve invocations, and total flows solved across them — how much
     # work the incremental dirty-set machinery actually avoided
     alloc_stats: dict = dataclasses.field(default_factory=dict)
+    # gang id -> node-seconds a member node sat idle (member work left,
+    # nothing running there) while at least one peer member task ran —
+    # the pipeline-bubble metric
+    gang_bubble_time: dict = dataclasses.field(default_factory=dict)
+    # gang id -> (first member task start, last member task finish)
+    gang_spans: dict = dataclasses.field(default_factory=dict)
+    # gang id -> member node names, first-seen order
+    gang_nodes: dict = dataclasses.field(default_factory=dict)
 
     def events_of(self, kind: EventKind) -> list:
         return [e for e in self.events if e.kind == kind]
@@ -169,6 +186,19 @@ class SimResult:
     def total_wasted_work(self) -> float:
         """Work-units replayed because of resets, summed over tasks."""
         return sum(self.wasted_work.values())
+
+    def gang_bubble_fraction(self, gang_id: str) -> float:
+        """Bubble node-seconds over total member node-seconds across the
+        gang's span — (p-1)/(m+p-1) for an ideal p-stage, m-microbatch
+        pipeline with equal forward/backward cost."""
+        if gang_id not in self.gang_spans:
+            raise KeyError(f"unknown gang {gang_id!r}")
+        t0, t1 = self.gang_spans[gang_id]
+        n = len(self.gang_nodes.get(gang_id, ()))
+        span = t1 - t0
+        if n == 0 or span <= 0.0:
+            return 0.0
+        return self.gang_bubble_time.get(gang_id, 0.0) / (n * span)
 
 
 class Control:
@@ -386,6 +416,23 @@ class Engine:
         restored: dict = {}           # tid -> bytes restored (cumulative)
         synthetic: set = set()        # spill/restore transfer tids
         xfer_seq = [0]                # synthesized transfer id counter
+        # -- gang bookkeeping (all empty — and all checks one dict
+        # lookup — unless some task carries a gang_id) ---------------
+        gang_members: dict = {}       # gang -> {node: True} first-seen
+        gang_running: dict = {}       # gang -> {node: running count}
+        gang_bubble: dict = {}        # gang -> idle-while-peer-busy s
+        gang_start: dict = {}         # gang -> first member start time
+        gang_end: dict = {}           # gang -> last member finish time
+        gang_spilled: dict = {}       # gang -> member tids on storage
+        gang_restoring: dict = {}     # gang -> member tids restoring
+        gang_wait: dict = {}          # gang -> parked tids at barrier
+
+        def gang_held(g: str) -> bool:
+            """True while any member's state is off-node or in transit:
+            spilled to storage and not yet restored, or a restore DMA
+            still in flight.  No member task may (re-)admit then — the
+            whole-gang resume barrier."""
+            return bool(gang_spilled.get(g)) or bool(gang_restoring.get(g))
 
         def register(new_tasks) -> None:
             new_tasks = list(new_tasks)
@@ -407,6 +454,8 @@ class Engine:
                 by_id[t.tid] = t
                 dependents.setdefault(t.tid, [])
                 core.track(t.tid, t.work)
+                if t.gang_id and t.node:
+                    gang_members.setdefault(t.gang_id, {})[t.node] = True
             for t in new_tasks:
                 nd = 0
                 for d in t.deps:
@@ -434,12 +483,24 @@ class Engine:
             """Add to the running set (and the core's incidence)."""
             running[tid] = t
             core.start(tid, t)
+            if t.gang_id:
+                if t.gang_id not in gang_start:
+                    gang_start[t.gang_id] = now
+                if t.node:
+                    run = gang_running.setdefault(t.gang_id, {})
+                    run[t.node] = run.get(t.node, 0) + 1
 
         def drop(tid: str) -> None:
             """Remove from the running set; the core syncs the task's
             remaining progress out of its arrays."""
+            t = running[tid]
             del running[tid]
             core.stop(tid)
+            if t.gang_id and t.node:
+                run = gang_running[t.gang_id]
+                run[t.node] -= 1
+                if not run[t.node]:
+                    del run[t.node]
 
         def admit():
             nonlocal ready
@@ -447,6 +508,12 @@ class Engine:
                 t = by_id[tid]
                 if tid in frozen:
                     parked.append(tid)
+                elif t.gang_id and gang_held(t.gang_id):
+                    # a ready member of a gang mid-restore parks at the
+                    # barrier: it re-admits with the rest of the gang
+                    # when the last restore lands
+                    parked.append(tid)
+                    gang_wait.setdefault(t.gang_id, []).append(tid)
                 elif blocked(t):
                     held.append(tid)
                 else:
@@ -500,6 +567,9 @@ class Engine:
                     xfer_seq[0] += 1
                     spill_site[tid] = (spill_to, sid)
                     spill_of[sid] = tid
+                    if t.gang_id:
+                        gang_spilled.setdefault(t.gang_id,
+                                                set()).add(tid)
                     synthetic.add(sid)
                     spilled[tid] = spilled.get(tid, 0.0) + t.state_bytes
                     register([Task(sid, EventKind.DMA,
@@ -535,11 +605,22 @@ class Engine:
                     restore_of[rid] = tid
                     synthetic.add(rid)
                     restoring.add(tid)
+                    if t.gang_id:
+                        gang_restoring.setdefault(t.gang_id,
+                                                  set()).add(tid)
                     restored[tid] = restored.get(tid, 0.0) + t.state_bytes
                     register([Task(rid, EventKind.DMA,
                                    tuple(self.spill_route(site, t.node)),
                                    t.state_bytes, deps=(sid,),
                                    node=t.node)])
+                elif t.gang_id and gang_held(t.gang_id):
+                    # no state of its own to restore, but gang peers are
+                    # still spilled/restoring: hold at the barrier (the
+                    # sweep order of a scheduler resuming a whole job
+                    # must not let early members outrun late restores)
+                    wait = gang_wait.setdefault(t.gang_id, [])
+                    if tid not in wait:
+                        wait.append(tid)
                 else:
                     parked.remove(tid)
                     if blocked(t):
@@ -568,6 +649,21 @@ class Engine:
             if not math.isfinite(dt):
                 break                      # stalled: nodes down forever
             dt = max(dt, 0.0)
+            if gang_running and dt > 0.0:
+                # bubble accounting: while any member task runs, every
+                # member node running none accrues idle-while-peer-busy
+                # node-seconds — warmup fill (first tasks not ready
+                # yet) and cooldown drain (a stage already finished)
+                # both count, matching the (p-1)/(m+p-1) pipeline
+                # analytic; a fully-parked gang accrues nothing
+                for g, run in gang_running.items():
+                    if not run:
+                        continue
+                    idle = sum(1 for u in gang_members[g]
+                               if u not in run)
+                    if idle:
+                        gang_bubble[g] = (gang_bubble.get(g, 0.0)
+                                          + dt * idle)
             core.advance(dt)
             now += dt
 
@@ -610,6 +706,8 @@ class Engine:
                 drop(tid)
                 done[tid] = now
                 events.append(SimEvent(now, t.kind, tid))
+                if t.gang_id:
+                    gang_end[t.gang_id] = now
                 for dep in dependents[tid]:
                     n_deps[dep] -= 1
                     if n_deps[dep] == 0:
@@ -632,7 +730,32 @@ class Engine:
                     residency[site] = (residency.get(site, 0.0)
                                        + tt.state_bytes * (now - t0))
                     core.set_remaining(target, snapshot.pop(target))
-                    if target not in frozen:
+                    g = tt.gang_id
+                    if g:
+                        gang_spilled.get(g, set()).discard(target)
+                        gang_restoring.get(g, set()).discard(target)
+                        if gang_held(g):
+                            # peers still restoring: wait at the
+                            # barrier (state is back on the node, the
+                            # task stays parked)
+                            if target not in frozen:
+                                wait = gang_wait.setdefault(g, [])
+                                if target not in wait:
+                                    wait.append(target)
+                        else:
+                            # last restore landed: the whole gang
+                            # re-admits together (members re-frozen by
+                            # a newer preempt stay parked)
+                            for wtid in gang_wait.pop(g, []) + [target]:
+                                if wtid in frozen:
+                                    continue
+                                wt = by_id[wtid]
+                                parked.remove(wtid)
+                                if blocked(wt):
+                                    held.append(wtid)
+                                else:
+                                    go(wtid, wt)
+                    elif target not in frozen:
                         parked.remove(target)
                         if blocked(tt):
                             held.append(target)
@@ -656,9 +779,15 @@ class Engine:
             residency[site] = (residency.get(site, 0.0)
                                + by_id[tid].state_bytes * (now - t0))
         events.sort(key=lambda e: (e.time, e.kind.value, e.subject))
+        spans = {g: (t0, gang_end.get(g, now))
+                 for g, t0 in gang_start.items()}
         return SimResult(makespan=now, finish_times=done, events=events,
                          busy_time=core.busy_time(), complete=complete,
                          utilized_time=utilized, wasted_work=wasted,
                          spilled_bytes=spilled, restored_bytes=restored,
                          storage_residency=residency,
-                         alloc_stats=core.stats())
+                         alloc_stats=core.stats(),
+                         gang_bubble_time=gang_bubble,
+                         gang_spans=spans,
+                         gang_nodes={g: tuple(nodes) for g, nodes
+                                     in gang_members.items()})

@@ -1,0 +1,176 @@
+"""Staged-program IR: the instruction-stream form every generator lowers.
+
+`repro.sim.workloads` used to hand-build `engine.Task` lists — each
+generator re-deriving the same resource tuples (NIC tx/rx + fabric path
+for a transfer, ici vs dcn routes for a collective) and node
+attributions inline.  This module factors that into a tiny IR, the way
+pipeline-parallel training frameworks model schedules as instruction
+streams (LoadMicroBatch/Forward/Backward/ReduceGrads):
+
+  * `Stage`   — a named execution site bound to one topology node.
+  * `Instr`   — one operation: ``compute`` (cpu/accel/none work on its
+                stage), ``xfer`` (bytes from its stage to ``dst_stage``)
+                or ``collective`` (per-stage bytes on an interconnect
+                tier), with explicit ``deps`` by instruction id.
+  * `Program` — stages + instruction stream + an optional ``gang_id``
+                stamped onto every lowered task (the engine's gang
+                bubble/restore-barrier accounting keys on it).
+
+`lower(program, topo, nodes=None)` is the single pass that turns a
+program into engine tasks: it resolves each stage's node (optionally
+rebinding stages positionally onto a placement's ``nodes``), derives the
+resource tuple the op's kind implies on that topology, and emits one
+`Task` per instruction, in instruction order, with ``iid`` as the task
+id.  Generators therefore stay byte-identical to their hand-built
+predecessors as long as they emit the same instruction stream — the
+contract `tests/test_sim_program.py` pins against verbatim legacy
+copies.
+
+Dependencies may reference ids outside the program (an ``after=`` hook
+task from an earlier segment); the engine validates those at admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.sim.engine import EventKind, Task
+from repro.sim.topology import Topology
+
+OPS = ("compute", "xfer", "collective")
+UNITS = ("cpu", "accel", "none")
+TIERS = ("ici", "dcn")
+
+_OP_KIND = {"compute": EventKind.COMPUTE, "xfer": EventKind.DMA,
+            "collective": EventKind.COLLECTIVE_PHASE}
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """A named execution site, bound to one topology node.  Ported
+    generators name stages after their nodes; pipeline programs use
+    logical names (``stage0`` .. ``stage{p-1}``) so one program can be
+    re-bound onto any placement via ``lower(..., nodes=...)``."""
+    name: str
+    node: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One instruction.  ``iid`` becomes the lowered task id; ``work``
+    is ops for compute and bytes for xfer/collective; ``deps`` are
+    instruction (or external task) ids.
+
+    ``unit`` picks a compute instruction's resource: the stage node's
+    ``cpu``, its ``accel``, or ``none`` — a resource-less barrier or
+    pure wall-clock delay.  ``dst_stage`` names an xfer's destination
+    stage.  ``tier``/``participants`` shape a collective phase exactly
+    like `workloads.training_from_trace` does: ``ici`` rides the
+    stage's interconnect, ``dcn`` its NIC tx+rx plus the fabric path
+    the participant set implies."""
+    iid: str
+    op: str
+    stage: str = ""
+    work: float = 0.0
+    deps: tuple = ()
+    unit: str = "cpu"
+    dst_stage: str = ""
+    tier: str = "dcn"
+    participants: tuple = ()
+    state_bytes: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """An instruction stream over bound stages.  ``gang_id`` (optional)
+    is stamped onto every lowered task: the engine then accounts the
+    tasks as one gang (bubble time, whole-gang restore barrier) and the
+    scheduler treats the job as one preemption unit."""
+    stages: tuple
+    instrs: tuple
+    gang_id: str = ""
+
+    def stage_map(self) -> dict:
+        return {s.name: s for s in self.stages}
+
+
+def lower(program: Program, topo: Topology,
+          nodes: Optional[Sequence[str]] = None) -> list:
+    """Lower ``program`` to engine tasks on ``topo``.
+
+    ``nodes`` (optional) rebinds the program's stages positionally —
+    stage *i* runs on ``nodes[i]`` — so a stage-named program built
+    once can be placed anywhere.  Emits one `Task` per instruction, in
+    instruction order; resource derivation is the single source of
+    truth the ported generators share:
+
+      * compute/cpu    -> ``(topo.cpu(node),)``
+      * compute/accel  -> ``(topo.accel(node),)``
+      * compute/none   -> ``()`` (barrier / wall-clock delay)
+      * xfer           -> ``(tx(src), rx(dst)) + fabric_path(src, dst)``
+      * collective/ici -> ``(topo.ici(node),)``
+      * collective/dcn -> ``(tx, rx) + dcn_path(node, participants)``
+    """
+    stages = program.stages
+    if nodes is not None:
+        nodes = list(nodes)
+        if len(nodes) != len(stages):
+            raise ValueError(
+                f"program binds {len(stages)} stages but got "
+                f"{len(nodes)} nodes to place them on")
+        stages = tuple(dataclasses.replace(s, node=u)
+                       for s, u in zip(stages, nodes))
+    node_of = {s.name: s.node for s in stages}
+    if len(node_of) != len(stages):
+        raise ValueError("duplicate stage names in program")
+    gang = program.gang_id
+
+    def _node(ins: Instr, which: str) -> str:
+        name = getattr(ins, which) if which != "stage" else ins.stage
+        if name not in node_of:
+            raise KeyError(f"instr {ins.iid}: unknown stage {name!r}")
+        return node_of[name]
+
+    tasks = []
+    for ins in program.instrs:
+        if ins.op == "compute":
+            if ins.unit not in UNITS:
+                raise ValueError(f"instr {ins.iid}: unknown unit "
+                                 f"{ins.unit!r}; expected one of {UNITS}")
+            if ins.unit == "none":
+                # resource-less computes (barriers, wall-clock delays)
+                # only carry a failure domain: an unbound stage name
+                # passes through as a raw node string, so recovery
+                # delays can name nodes outside the placement
+                node = node_of.get(ins.stage, ins.stage)
+                res: tuple = ()
+            else:
+                u = _node(ins, "stage")
+                node = u
+                res = ((topo.cpu(u),) if ins.unit == "cpu"
+                       else (topo.accel(u),))
+        elif ins.op == "xfer":
+            src = _node(ins, "stage")
+            dst = _node(ins, "dst_stage")
+            node = src
+            res = (topo.tx(src), topo.rx(dst)) + topo.fabric_path(src, dst)
+        elif ins.op == "collective":
+            if ins.tier not in TIERS:
+                raise ValueError(f"instr {ins.iid}: unknown tier "
+                                 f"{ins.tier!r}; expected one of {TIERS}")
+            u = _node(ins, "stage")
+            node = u
+            if ins.tier == "ici":
+                res = (topo.ici(u),)
+            else:
+                group = [node_of[p] if p in node_of else p
+                         for p in ins.participants] or None
+                res = (topo.tx(u), topo.rx(u)) + topo.dcn_path(u, group)
+        else:
+            raise ValueError(f"instr {ins.iid}: unknown op {ins.op!r}; "
+                             f"expected one of {OPS}")
+        tasks.append(Task(ins.iid, _OP_KIND[ins.op], res, ins.work,
+                          deps=ins.deps, node=node,
+                          state_bytes=ins.state_bytes, gang_id=gang))
+    return tasks

@@ -46,19 +46,29 @@ def summarize(result: SimResult, *, name: str = "") -> dict:
         util = _per_class_fraction(result.busy_time, result.makespan)
         utilized = _per_class_fraction(result.utilized_time,
                                        result.makespan)
-    return {"name": name, "makespan_s": result.makespan,
-            "complete": result.complete,
-            "n_tasks": len(result.finish_times),
-            "n_events": len(result.events),
-            "events_by_kind": dict(kinds), "utilization": util,
-            "utilized": utilized,
-            # preemption/failure economics: replayed work, checkpoint
-            # traffic through storage, and parked-state byte-seconds
-            "wasted_work": result.total_wasted_work,
-            "spilled_bytes": sum(result.spilled_bytes.values()),
-            "restored_bytes": sum(result.restored_bytes.values()),
-            "storage_residency_byte_s":
-                sum(result.storage_residency.values())}
+    out = {"name": name, "makespan_s": result.makespan,
+           "complete": result.complete,
+           "n_tasks": len(result.finish_times),
+           "n_events": len(result.events),
+           "events_by_kind": dict(kinds), "utilization": util,
+           "utilized": utilized,
+           # preemption/failure economics: replayed work, checkpoint
+           # traffic through storage, and parked-state byte-seconds
+           "wasted_work": result.total_wasted_work,
+           "spilled_bytes": sum(result.spilled_bytes.values()),
+           "restored_bytes": sum(result.restored_bytes.values()),
+           "storage_residency_byte_s":
+               sum(result.storage_residency.values())}
+    if result.gang_spans:
+        # gang-tagged runs: per-gang pipeline-bubble accounting (member
+        # node-seconds idle while a peer member ran, over the span)
+        out["gangs"] = {
+            g: {"n_nodes": len(result.gang_nodes.get(g, ())),
+                "span_s": t1 - t0,
+                "bubble_time_s": result.gang_bubble_time.get(g, 0.0),
+                "bubble_fraction": result.gang_bubble_fraction(g)}
+            for g, (t0, t1) in result.gang_spans.items()}
+    return out
 
 
 def perf_digest(n_events: int, wall_s: float) -> dict:
@@ -193,6 +203,14 @@ def render(summary: dict) -> str:
             f"out  {summary.get('restored_bytes', 0.0):.4g} B back  "
             f"residency={summary.get('storage_residency_byte_s', 0.0):.4g}"
             f" B*s")
+    gangs = summary.get("gangs")
+    if gangs:
+        for g, row in sorted(gangs.items()):
+            lines.append(
+                f"  gang {g:14s} nodes={row['n_nodes']}  "
+                f"span={row['span_s']:.4g} s  "
+                f"bubble={row['bubble_fraction']:.1%} "
+                f"({row['bubble_time_s']:.4g} node-s)")
     tn = summary.get("tenants")
     if tn:
         for name, row in sorted(tn.items()):

@@ -25,7 +25,8 @@ Quickstart::
     print(slo_summary(out))
 """
 from repro.sim.sched.arrivals import (Job, JobTemplate,
-                                      analytics_template, poisson_stream,
+                                      analytics_template,
+                                      pipeline_template, poisson_stream,
                                       reference_job_stream,
                                       reference_preempt_stream,
                                       shuffle_template, storage_template,
@@ -38,14 +39,16 @@ from repro.sim.sched.policies import (POLICIES,
                                       RunningJob, SjfBackfillPolicy,
                                       Start, make_policy)
 from repro.sim.sched.queue import (ClusterScheduler, JobRecord,
-                                   SchedResult, best_case_service_s,
-                                   run_policies)
+                                   SchedResult, TenantLimit,
+                                   best_case_service_s, run_policies)
 from repro.sim.sched.metrics import (energy_comparison, energy_report,
-                                     job_table, percentile, slo_summary,
+                                     gang_summary, job_table,
+                                     percentile, slo_summary,
                                      tenant_summary)
 
 __all__ = [
-    "Job", "JobTemplate", "analytics_template", "poisson_stream",
+    "Job", "JobTemplate", "analytics_template", "pipeline_template",
+    "poisson_stream",
     "reference_job_stream", "reference_preempt_stream",
     "shuffle_template", "storage_template",
     "trace_stream", "training_template",
@@ -53,8 +56,8 @@ __all__ = [
     "FifoPolicy", "Preempt",
     "PriorityPreemptPolicy", "QueuedJob", "RackPackPolicy", "RunningJob",
     "SjfBackfillPolicy", "Start", "make_policy",
-    "ClusterScheduler", "JobRecord", "SchedResult",
+    "ClusterScheduler", "JobRecord", "SchedResult", "TenantLimit",
     "best_case_service_s", "run_policies",
-    "energy_comparison", "energy_report", "job_table", "percentile",
-    "slo_summary", "tenant_summary",
+    "energy_comparison", "energy_report", "gang_summary", "job_table",
+    "percentile", "slo_summary", "tenant_summary",
 ]

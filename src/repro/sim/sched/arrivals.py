@@ -38,7 +38,16 @@ class JobTemplate:
     builder must give its tasks matching `Task.state_bytes`); inf means
     preemption resets progress.  ``deadline_s`` is the relative
     completion deadline an admission-controlled scheduler checks at
-    submit time (inf = no SLO class)."""
+    submit time (inf = no SLO class).
+
+    ``gang=True`` marks the job's tasks as one gang: the scheduler
+    stamps every lowered task's `Task.gang_id` with the job id (unless
+    the builder already set one), so the engine books bubble time
+    (member idle while a peer runs) and enforces the whole-gang restore
+    barrier after a spill preemption.  Admission is all-or-nothing
+    either way — a policy only ever starts a job on its full
+    ``n_nodes`` placement — but the gang tag is what makes a
+    preemption's spill/resume atomic across every stage."""
     name: str
     build: Callable
     n_nodes: int
@@ -48,6 +57,7 @@ class JobTemplate:
     needs_accel: bool = False
     state_bytes: float = math.inf
     deadline_s: float = math.inf
+    gang: bool = False
 
     def __post_init__(self):
         if self.n_nodes < 1:
@@ -244,6 +254,36 @@ def storage_template(n_nodes: int = 2, *, steps: int = 4,
                        size_hint=2.5 * scale * steps * n_nodes,
                        tenant=name, needs_accel=True,
                        state_bytes=sb, deadline_s=deadline_s)
+
+
+def pipeline_template(n_stages: int = 4, *, microbatches: int = 8,
+                      schedule: str = "1f1b", scale: float = 1.0,
+                      priority: int = 0, state_bytes: float = 2.0,
+                      deadline_s: float = math.inf,
+                      name: str = "pipeline") -> JobTemplate:
+    """A gang-scheduled pipeline-parallel training job: ``n_stages``
+    accelerator stages running `workloads.pipeline_training` under the
+    given ``schedule`` (``"1f1b"`` or ``"gpipe"``) for ``microbatches``
+    microbatches, with activation/gradient transfers between adjacent
+    stages and a gradient sync per stage.  The builder leaves the
+    program un-ganged (``gang=""``) so the scheduler stamps the job id
+    as the gang id — one gang per admitted job, preempted and resumed
+    as a unit.  ``state_bytes`` is the per-stage params+activations
+    shard a checkpointing preemption spills."""
+    sb = _scaled_state(state_bytes, scale)
+
+    def build(topo, nodes, tag):
+        from repro.sim.workloads import pipeline_training
+        return pipeline_training(
+            topo, stages=n_stages, microbatches=microbatches,
+            schedule=schedule, fwd_work=0.5 * scale,
+            bwd_work=1.0 * scale, activation_bytes=0.5 * scale,
+            grad_bytes=0.5 * scale, sync_bytes=1.0 * scale, tag=tag,
+            nodes=nodes, state_bytes=_gen_state(sb), gang="")
+    return JobTemplate(name, build, n_stages,
+                       size_hint=1.5 * scale * microbatches * n_stages,
+                       priority=priority, tenant=name, needs_accel=True,
+                       state_bytes=sb, deadline_s=deadline_s, gang=True)
 
 
 def reference_preempt_stream(*, rate: float = 0.45, n_jobs: int = 16,

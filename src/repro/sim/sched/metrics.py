@@ -2,7 +2,10 @@
 
 Per-job rows (queueing delay, job completion time), tail percentiles
 (p50/p99 JCT — the online-operations numbers a makespan can't express),
-goodput, and energy-per-job: `SimResult.utilized_time` joined with
+goodput, per-gang pipeline-bubble accounting (`gang_summary` joins the
+engine's idle-while-peer-busy node-seconds with the owning job's JCT
+and preemption counts), and energy-per-job: `SimResult.utilized_time`
+joined with
 `repro.core.costmodel`'s relative power parameters (`node_power`; smart
 NIC = 1.0, server = P_S).
 
@@ -93,6 +96,28 @@ def tenant_summary(sr: SchedResult) -> dict:
     for row in out.values():
         jct = row.pop("jct_s")
         row["mean_jct_s"] = sum(jct) / len(jct) if jct else math.nan
+    return out
+
+
+def gang_summary(sr: SchedResult) -> dict:
+    """Per-gang digest of one scheduled run: bubble time / fraction
+    (member node-seconds idle while a peer member ran — the pipeline
+    bubble), span, and — when the gang id is a job id, the scheduler's
+    convention for ``gang=True`` templates — that job's JCT, preemption
+    and spill counts.  Empty when the run had no gang-tagged tasks."""
+    res = sr.result
+    out: dict = {}
+    for gang, (t0, t1) in res.gang_spans.items():
+        rec = sr.records.get(gang)
+        out[gang] = {
+            "n_nodes": len(res.gang_nodes.get(gang, ())),
+            "start_s": t0, "end_s": t1, "span_s": t1 - t0,
+            "bubble_time_s": res.gang_bubble_time.get(gang, 0.0),
+            "bubble_fraction": res.gang_bubble_fraction(gang),
+            "jct_s": rec.jct_s if rec is not None else math.nan,
+            "preemptions": rec.preemptions if rec is not None else 0,
+            "spills": rec.spills if rec is not None else 0,
+        }
     return out
 
 

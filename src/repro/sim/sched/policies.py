@@ -67,7 +67,12 @@ class Preempt:
 
 @dataclasses.dataclass(frozen=True)
 class QueuedJob:
-    """Queue-snapshot row handed to policies."""
+    """Queue-snapshot row handed to policies.  ``gang`` marks a
+    pipeline-style job whose tasks form one gang: placement is
+    all-or-nothing for every job, but a gang job additionally resumes
+    through the engine's whole-gang restore barrier, so a policy that
+    preempts it always suspends (and later resumes) every stage
+    together — there is no per-stage action to take."""
     jid: str
     name: str
     n_nodes: int
@@ -76,18 +81,23 @@ class QueuedJob:
     arrival_s: float
     needs_accel: bool = False
     pinned: Optional[tuple] = None    # suspended: must resume on these
+    gang: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class RunningJob:
     """Cluster-snapshot row: one admitted, unfinished job.
     ``state_bytes`` is the job's total resumable state (per-node
-    template state x nodes; inf = not checkpointable)."""
+    template state x nodes; inf = not checkpointable).  A ``gang`` job
+    is one preemption unit: `Preempt` sweeps every stage, a spill ships
+    every stage's state shard, and the engine holds all stages parked
+    until the last restore lands."""
     jid: str
     nodes: tuple
     priority: int
     start_s: float
     state_bytes: float = math.inf
+    gang: bool = False
 
 
 class ClusterView:
@@ -231,6 +241,11 @@ class PriorityPreemptPolicy:
     place it on the freed + idle nodes.  Equal priority never preempts,
     so two jobs cannot ping-pong each other and every admitted job
     eventually completes (the no-starvation property the tests pin).
+
+    Gangs need no special casing here: a victim is always a whole job,
+    so evicting a gang-tagged pipeline suspends every stage in one
+    sweep, and the engine's whole-gang restore barrier keeps a spilled
+    gang from resuming half-running when it gets its nodes back.
     """
     preemptive = True
 

@@ -25,6 +25,18 @@ when the deadline is infeasible even on an idle placement
 (``size_hint`` against the best-case service rate of the fastest
 eligible nodes — `best_case_service_s`); rejections are counted in
 `SchedResult` instead of letting a doomed job bloat the queue.
+``tenant_limits`` adds per-tenant rate limiting on top: a
+`TenantLimit` caps a tenant's jobs in the system (queued + running)
+and/or its accepted arrivals over a sliding window, and an arrival
+over either cap is rejected at submit time the same way.
+
+A template with ``gang=True`` is admitted all-or-nothing like every
+job (a policy only ever starts a job on its full ``n_nodes``
+placement) and additionally has each task stamped with the job id as
+its `Task.gang_id` at build time — the engine then books the gang's
+pipeline-bubble time and holds the whole gang at the restore barrier
+after a spilling preemption, so a preempted pipeline never resumes
+half-running.
 
 Everything submitted at t=0 with a policy that admits immediately is
 bit-identical to a batch `Engine.run` of the same DAGs — the
@@ -56,6 +68,33 @@ def best_case_service_s(topo, template: JobTemplate) -> float:
                    reverse=True)
     best = sum(rates[:template.n_nodes])
     return template.size_hint / best if best > 0 else math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantLimit:
+    """Per-tenant admission caps (used with ``admission=True``).
+
+    ``max_concurrent`` caps the tenant's jobs in the system at once —
+    queued, suspended, or running; an arrival over the cap is rejected
+    at submit time.  ``max_arrivals`` caps accepted arrivals inside a
+    sliding ``window_s``-second window (a classic rate limit: the
+    (k - max_arrivals + 1)-th most recent accepted arrival must have
+    aged out of the window before arrival k+1 is accepted).  ``None``
+    leaves a dimension uncapped."""
+    max_concurrent: Optional[int] = None
+    max_arrivals: Optional[int] = None
+    window_s: float = 60.0
+
+    def __post_init__(self):
+        if self.max_concurrent is not None and self.max_concurrent < 1:
+            raise ValueError(f"max_concurrent must be >= 1, "
+                             f"got {self.max_concurrent!r}")
+        if self.max_arrivals is not None and self.max_arrivals < 1:
+            raise ValueError(f"max_arrivals must be >= 1, "
+                             f"got {self.max_arrivals!r}")
+        if self.window_s <= 0:
+            raise ValueError(f"window_s must be > 0, "
+                             f"got {self.window_s!r}")
 
 
 @dataclasses.dataclass
@@ -130,19 +169,28 @@ class ClusterScheduler:
     and costs one incremental re-solve per event batch);
     ``admission=True`` turns on the SLO admission guard (jobs with a
     finite ``deadline_s`` that is infeasible even on an idle placement
-    are rejected at submit time).  `run` consumes a `Job` list (see
-    `arrivals`) and returns a `SchedResult`.
+    are rejected at submit time); ``tenant_limits`` (a ``{tenant:
+    TenantLimit}`` mapping, requires ``admission=True``) adds
+    per-tenant max-concurrent-jobs and sliding-window arrival-rate
+    caps, with over-cap arrivals rejected and counted in
+    `SchedResult.n_rejected` / `metrics.tenant_summary`.  `run`
+    consumes a `Job` list (see `arrivals`) and returns a `SchedResult`.
     """
 
     def __init__(self, topo, policy: Union[str, object] = "pack", *,
                  allocator: str = "waterfill", admission: bool = False,
-                 backend: str = "array"):
+                 backend: str = "array",
+                 tenant_limits: Optional[dict] = None):
         self.topo = topo
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
         self.allocator = allocator
         self.backend = backend
         self.admission = admission
+        if tenant_limits and not admission:
+            raise ValueError("tenant_limits is an admission-control "
+                             "feature; pass admission=True to enable it")
+        self.tenant_limits = dict(tenant_limits or {})
 
     def run(self, jobs: Iterable[Job],
             engine: Optional[object] = None) -> SchedResult:
@@ -183,6 +231,8 @@ class ClusterScheduler:
         owner: dict = {}          # tid -> jid
         left: dict = {}           # jid -> unfinished task count
         resident = {u: 0.0 for u in topo.storage_node_names}
+        in_system: dict = {}      # tenant -> jobs queued/suspended/running
+        accepted_at: dict = {}    # tenant -> accepted arrival times
 
         def queue_view() -> list:
             out = []
@@ -194,7 +244,8 @@ class ClusterScheduler:
                     size_hint=job.template.size_hint,
                     priority=job.priority, arrival_s=job.arrival_s,
                     needs_accel=job.template.needs_accel,
-                    pinned=rec.nodes if jid in suspended else None))
+                    pinned=rec.nodes if jid in suspended else None,
+                    gang=job.template.gang))
             return out
 
         def apply_start(jid: str, nodes: tuple, ctl) -> None:
@@ -213,6 +264,12 @@ class ClusterScheduler:
                 rec.nodes = tuple(nodes)
                 tasks = rec.job.template.build(topo, list(nodes),
                                                f":{jid}")
+                if rec.job.template.gang:
+                    # one gang per admitted job: the job id becomes the
+                    # gang id unless the builder already stamped one
+                    tasks = [dataclasses.replace(t,
+                                                 gang_id=t.gang_id or jid)
+                             for t in tasks]
                 rec.task_ids = tuple(t.tid for t in tasks)
                 for tid in rec.task_ids:
                     owner[tid] = jid
@@ -224,7 +281,8 @@ class ClusterScheduler:
             running[jid] = RunningJob(jid=jid, nodes=rec.nodes,
                                       priority=rec.job.priority,
                                       start_s=ctl.now,
-                                      state_bytes=rec.state_bytes_total)
+                                      state_bytes=rec.state_bytes_total,
+                                      gang=rec.job.template.gang)
 
         def apply_preempt(jid: str, ctl, spill: bool = False) -> None:
             rec = records[jid]
@@ -272,6 +330,21 @@ class ClusterScheduler:
                         raise TypeError(f"policy {policy.name!r} "
                                         f"returned {act!r}")
 
+        def over_tenant_limit(tenant: str, now: float) -> bool:
+            lim = self.tenant_limits.get(tenant)
+            if lim is None:
+                return False
+            if (lim.max_concurrent is not None
+                    and in_system.get(tenant, 0) >= lim.max_concurrent):
+                return True
+            if lim.max_arrivals is not None:
+                recent = [t for t in accepted_at.get(tenant, ())
+                          if t > now - lim.window_s]
+                accepted_at[tenant] = recent   # aged-out entries pruned
+                if len(recent) >= lim.max_arrivals:
+                    return True
+            return False
+
         def on_arrival(jid: str):
             def fire(ctl):
                 rec = records[jid]
@@ -283,6 +356,15 @@ class ClusterScheduler:
                     # shed the job now instead of queueing a sure miss
                     rec.rejected = True
                     return
+                if (self.admission
+                        and over_tenant_limit(rec.job.tenant, ctl.now)):
+                    # the tenant is over its concurrency or arrival-rate
+                    # cap — shed at submit, same as a doomed deadline
+                    rec.rejected = True
+                    return
+                tenant = rec.job.tenant
+                in_system[tenant] = in_system.get(tenant, 0) + 1
+                accepted_at.setdefault(tenant, []).append(ctl.now)
                 pending.append(jid)
                 dispatch(ctl)
             return fire
@@ -304,6 +386,8 @@ class ClusterScheduler:
                         ctl.preempt(t2, spill_to=rec.spill_site)
                 return
             rec.finish_s = ctl.now
+            in_system[rec.job.tenant] = in_system.get(rec.job.tenant,
+                                                      1) - 1
             if jid in suspended:
                 # the job's last unfinished tasks were failure-held
                 # (engine no-op: the failure machinery owned them) and

@@ -184,6 +184,48 @@ def compare_backends(make_topo, build, *,
     return out
 
 
+def pipeline_bubble_report(make_topo, *, stages: int = 4,
+                           microbatches: int = 8,
+                           schedules=("1f1b", "gpipe"),
+                           backend: str = "array", **kw) -> dict:
+    """Measured vs analytic pipeline-bubble fractions per schedule.
+
+    Runs `workloads.pipeline_training` on a fresh topology per
+    schedule and reads the engine's per-gang bubble accounting.  With
+    equal forward/backward cost and negligible transfer time, both
+    1F1B and GPipe fill (m + p - 1) slots on every stage, so the
+    analytic bubble fraction is (p - 1) / (m + p - 1); the measured
+    figure must sit within 5% of it on a bubble-only cell — the
+    acceptance check `tests/test_sim_program.py` pins.  Extra ``kw``
+    pass through to the generator (activation/sync bytes turn the cell
+    from bubble-only into a fabric-sharing one).
+    """
+    from repro.sim.workloads import pipeline_training
+
+    p, m = int(stages), int(microbatches)
+    analytic = (p - 1) / (m + p - 1)
+    out: dict = {"stages": p, "microbatches": m, "analytic": analytic,
+                 "schedules": {}}
+    for schedule in schedules:
+        topo = make_topo()
+        tasks = pipeline_training(topo, stages=p, microbatches=m,
+                                  schedule=schedule, **kw)
+        gang = tasks[-1].gang_id or next(t.gang_id for t in tasks
+                                         if t.gang_id)
+        res = topo.engine(backend=backend).run(tasks)
+        if not res.complete:
+            raise RuntimeError(f"{schedule} pipeline run stalled")
+        measured = res.gang_bubble_fraction(gang)
+        out["schedules"][schedule] = {
+            "makespan_s": res.makespan,
+            "bubble_fraction": measured,
+            "bubble_time_s": res.gang_bubble_time.get(gang, 0.0),
+            "rel_err": (abs(measured - analytic) / analytic
+                        if analytic > 0 else 0.0),
+        }
+    return out
+
+
 def compare_policies(make_topo, jobs, policies=("fifo", "pack"), *,
                      allocator: str = "waterfill") -> dict:
     """One arrival stream under several scheduling policies.

@@ -26,6 +26,27 @@ training"):
   * `storage_replay`     — disaggregated storage: per-step dataset-shard
                            reads and streaming-checkpoint writes between
                            compute nodes and STORAGE-role nodes.
+  * `pipeline_training`  — gang-scheduled pipeline parallelism: p stages
+                           on p accelerator nodes run m microbatches
+                           under a 1F1B or GPipe instruction schedule,
+                           activations/grads ride the fabric between
+                           adjacent stages, and every task carries one
+                           ``gang_id`` so the engine accounts pipeline
+                           bubbles and preempts/resumes the gang whole.
+  * `rlhf_dataflow`      — RLHF-style two-model dataflow: actor nodes
+                           generate rollouts that fan into a
+                           co-scheduled pipeline trainer sharing the
+                           fabric, and updated weights broadcast back —
+                           one gang spanning both models.
+
+Structurally, every generator here builds a **staged program**
+(`repro.sim.program`): stages bound to nodes plus an instruction stream
+of compute/xfer/collective ops with explicit dependencies, lowered to
+engine tasks by the shared `program.lower` pass — one place that knows
+how a transfer maps onto NIC tx/rx + fabric path or a collective onto
+its interconnect tier.  The public functions still return plain `Task`
+lists, byte-identical to the pre-IR hand-built ones (pinned by
+`tests/test_sim_program.py`).
 
 `multi_tenant` composes any of the above on one topology with per-tenant
 tags (see `validate.measure_interference` for the isolated-vs-co-located
@@ -49,6 +70,7 @@ import math
 from typing import Optional, Sequence
 
 from repro.sim.engine import EventKind, Task
+from repro.sim.program import Instr, Program, Stage, lower
 from repro.sim.topology import Topology
 
 # TPU v5e-ish defaults for converting trace FLOPs/bytes to device-seconds
@@ -87,6 +109,44 @@ def _placed(topo: Topology, nodes, *, accel: bool = False,
     return nodes
 
 
+def _shuffle_program(topo: Topology, *, cpu_work_per_node: float,
+                     bytes_per_node: float, tasks_per_node: int = 2,
+                     reduce_work_per_node: float = 0.0, tag: str = "",
+                     nodes: Optional[Sequence[str]] = None,
+                     state_bytes: Optional[float] = None) -> Program:
+    """The `shuffle` instruction stream: per-node map computes, the
+    all-to-all exchange as xfer instrs, per-node reduces."""
+    nodes = _placed(topo, nodes, who="shuffle")
+    sb = _sb(state_bytes)
+    n = len(nodes)
+    instrs = []
+    maps: dict = {}
+    for u in nodes:
+        maps[u] = tuple(f"map{tag}:{u}:{i}" for i in range(tasks_per_node))
+        for iid in maps[u]:
+            instrs.append(Instr(iid, "compute", u,
+                                cpu_work_per_node / tasks_per_node,
+                                state_bytes=sb))
+    inbound: dict = {v: [] for v in nodes}
+    if n > 1:
+        per_peer = bytes_per_node / (n - 1)
+        for u in nodes:
+            for v in nodes:
+                if v == u:
+                    continue
+                iid = f"xfer{tag}:{u}:{v}"
+                inbound[v].append(iid)
+                instrs.append(Instr(iid, "xfer", u, per_peer,
+                                    deps=maps[u], dst_stage=v,
+                                    state_bytes=sb))
+    for v in nodes:
+        deps = tuple(inbound[v]) or maps[v]
+        instrs.append(Instr(f"reduce{tag}:{v}", "compute", v,
+                            reduce_work_per_node, deps=deps,
+                            state_bytes=sb))
+    return Program(tuple(Stage(u, u) for u in nodes), tuple(instrs))
+
+
 def shuffle(topo: Topology, *, cpu_work_per_node: float,
             bytes_per_node: float, tasks_per_node: int = 2,
             reduce_work_per_node: float = 0.0, tag: str = "",
@@ -104,35 +164,11 @@ def shuffle(topo: Topology, *, cpu_work_per_node: float,
     received-so-far buffer cursor — of that size can be spilled to a
     storage node on preemption instead of being recomputed or re-sent.
     """
-    nodes = _placed(topo, nodes, who="shuffle")
-    sb = _sb(state_bytes)
-    n = len(nodes)
-    tasks = []
-    maps: dict = {}
-    for u in nodes:
-        maps[u] = tuple(f"map{tag}:{u}:{i}" for i in range(tasks_per_node))
-        for tid in maps[u]:
-            tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
-                              cpu_work_per_node / tasks_per_node, node=u,
-                              state_bytes=sb))
-    inbound: dict = {v: [] for v in nodes}
-    if n > 1:
-        per_peer = bytes_per_node / (n - 1)
-        for u in nodes:
-            for v in nodes:
-                if v == u:
-                    continue
-                tid = f"xfer{tag}:{u}:{v}"
-                inbound[v].append(tid)
-                res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
-                tasks.append(Task(tid, EventKind.DMA, res, per_peer,
-                                  deps=maps[u], node=u, state_bytes=sb))
-    for v in nodes:
-        deps = tuple(inbound[v]) or maps[v]
-        tasks.append(Task(f"reduce{tag}:{v}", EventKind.COMPUTE,
-                          (topo.cpu(v),), reduce_work_per_node, deps=deps,
-                          node=v, state_bytes=sb))
-    return tasks
+    return lower(_shuffle_program(
+        topo, cpu_work_per_node=cpu_work_per_node,
+        bytes_per_node=bytes_per_node, tasks_per_node=tasks_per_node,
+        reduce_work_per_node=reduce_work_per_node, tag=tag, nodes=nodes,
+        state_bytes=state_bytes), topo)
 
 
 def pipelined_shuffle_waves(topo: Topology, *, waves: int = 8,
@@ -181,23 +217,28 @@ def pipelined_shuffle_waves(topo: Topology, *, waves: int = 8,
         prev_reduce: dict = {}
         for w in range(waves):
             wtag = f"{tag}:r{rack}.{w}"
-            wave = shuffle(topo, cpu_work_per_node=cpu_work_per_node,
-                           bytes_per_node=bytes_per_node,
-                           tasks_per_node=tasks_per_node,
-                           reduce_work_per_node=reduce_work_per_node,
-                           tag=wtag, nodes=nodes,
-                           state_bytes=state_bytes)
+            prog = _shuffle_program(
+                topo, cpu_work_per_node=cpu_work_per_node,
+                bytes_per_node=bytes_per_node,
+                tasks_per_node=tasks_per_node,
+                reduce_work_per_node=reduce_work_per_node,
+                tag=wtag, nodes=nodes, state_bytes=state_bytes)
+            instrs = prog.instrs
             if jitter > 0:
-                wave = [dataclasses.replace(
-                            t, work=t.work * (1.0 + jitter * rng.random()))
-                        for t in wave]
+                # instruction order == emission order, so the draw
+                # sequence matches the pre-IR per-task draws exactly
+                instrs = tuple(dataclasses.replace(
+                                   i, work=i.work
+                                   * (1.0 + jitter * rng.random()))
+                               for i in instrs)
             if prev_reduce:
-                wave = [dataclasses.replace(
-                            t, deps=t.deps + (prev_reduce[t.node],))
-                        if t.tid.startswith(f"map{wtag}:") else t
-                        for t in wave]
+                instrs = tuple(dataclasses.replace(
+                                   i, deps=i.deps + (prev_reduce[i.stage],))
+                               if i.iid.startswith(f"map{wtag}:") else i
+                               for i in instrs)
             prev_reduce = {u: f"reduce{wtag}:{u}" for u in nodes}
-            tasks.extend(wave)
+            tasks.extend(lower(dataclasses.replace(prog, instrs=instrs),
+                               topo))
     if not tasks:
         raise ValueError("pipelined_shuffle_waves needs a topology with "
                          "at least one rack of >= 2 compute nodes "
@@ -245,15 +286,15 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
     weight = {v: (1.0 - skew) / n + (skew if v == hot else 0.0)
               for v in nodes}
 
-    tasks = []
+    instrs = []
     scans: dict = {}
     for u in nodes:
         scans[u] = tuple(f"scan{tag}:{u}:{i}"
                          for i in range(tasks_per_node))
-        for tid in scans[u]:
-            tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
-                              scan_work_per_node / tasks_per_node,
-                              node=u, state_bytes=sb))
+        for iid in scans[u]:
+            instrs.append(Instr(iid, "compute", u,
+                                scan_work_per_node / tasks_per_node,
+                                state_bytes=sb))
 
     # stage 1: partition both relations by join key (pipelined: a
     # sender starts as soon as its own scans finish)
@@ -265,12 +306,11 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
             if v == u:                # local partition stays local
                 continue
             nbytes = shuffle_bytes_per_node * weight[v] / peer_total
-            tid = f"part{tag}:{u}:{v}"
-            inbound[v].append(tid)
+            iid = f"part{tag}:{u}:{v}"
+            inbound[v].append(iid)
             received[v] += nbytes
-            res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
-            tasks.append(Task(tid, EventKind.DMA, res, nbytes,
-                              deps=scans[u], node=u, state_bytes=sb))
+            instrs.append(Instr(iid, "xfer", u, nbytes, deps=scans[u],
+                                dst_stage=v, state_bytes=sb))
 
     # stage 2: per-joiner hash join, work proportional to received bytes
     total_recv = sum(received.values())
@@ -278,10 +318,10 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
     for v in nodes:
         frac = received[v] / total_recv if total_recv > 0 else 1.0 / n
         joins[v] = f"join{tag}:{v}"
-        tasks.append(Task(joins[v], EventKind.COMPUTE, (topo.cpu(v),),
-                          join_work_total * frac,
-                          deps=tuple(inbound[v]) + scans[v], node=v,
-                          state_bytes=sb))
+        instrs.append(Instr(joins[v], "compute", v,
+                            join_work_total * frac,
+                            deps=tuple(inbound[v]) + scans[v],
+                            state_bytes=sb))
 
     # stage 3: output shuffle — join output scales with join input, so
     # the hot joiner's egress is the fat flow; spread evenly over peers
@@ -294,19 +334,18 @@ def analytics_dag(topo: Topology, *, scan_work_per_node: float,
             for w in nodes:
                 if w == v:
                     continue
-                tid = f"out{tag}:{v}:{w}"
-                out_in[w].append(tid)
-                res = (topo.tx(v), topo.rx(w)) + topo.fabric_path(v, w)
-                tasks.append(Task(tid, EventKind.DMA, res, per_peer,
-                                  deps=(joins[v],), node=v,
-                                  state_bytes=sb))
+                iid = f"out{tag}:{v}:{w}"
+                out_in[w].append(iid)
+                instrs.append(Instr(iid, "xfer", v, per_peer,
+                                    deps=(joins[v],), dst_stage=w,
+                                    state_bytes=sb))
 
     for w in nodes:
-        tasks.append(Task(f"reduce{tag}:{w}", EventKind.COMPUTE,
-                          (topo.cpu(w),), reduce_work_per_node,
-                          deps=tuple(out_in[w]), node=w,
-                          state_bytes=sb))
-    return tasks
+        instrs.append(Instr(f"reduce{tag}:{w}", "compute", w,
+                            reduce_work_per_node, deps=tuple(out_in[w]),
+                            state_bytes=sb))
+    return lower(Program(tuple(Stage(u, u) for u in nodes),
+                         tuple(instrs)), topo)
 
 
 def scatter_gather(topo: Topology, *, request_bytes_total: float,
@@ -328,29 +367,27 @@ def scatter_gather(topo: Topology, *, request_bytes_total: float,
     workers = [u for u in nodes if u != root]
     if not workers:
         raise ValueError("scatter_gather needs >= 2 nodes")
-    tasks = []
+    instrs = []
     resp = []
     for w in workers:
         req = f"req{tag}:{w}"
         wk = f"work{tag}:{w}"
         rp = f"resp{tag}:{w}"
         resp.append(rp)
-        tasks.append(Task(req, EventKind.DMA,
-                          (topo.tx(root), topo.rx(w))
-                          + topo.fabric_path(root, w),
-                          request_bytes_total / len(workers), node=root))
-        tasks.append(Task(wk, EventKind.COMPUTE, (topo.cpu(w),),
-                          cpu_work_per_worker, deps=(req,), node=w,
-                          state_bytes=sb))
-        tasks.append(Task(rp, EventKind.DMA,
-                          (topo.tx(w), topo.rx(root))
-                          + topo.fabric_path(w, root),
-                          response_bytes_total / len(workers), deps=(wk,),
-                          node=w))
-    tasks.append(Task(f"agg{tag}", EventKind.COMPUTE, (topo.cpu(root),),
-                      root_work, deps=tuple(resp), node=root,
-                      state_bytes=sb))
-    return tasks
+        # request/response legs carry no resumable state (default inf):
+        # a preempted transfer restarts
+        instrs.append(Instr(req, "xfer", root,
+                            request_bytes_total / len(workers),
+                            dst_stage=w))
+        instrs.append(Instr(wk, "compute", w, cpu_work_per_worker,
+                            deps=(req,), state_bytes=sb))
+        instrs.append(Instr(rp, "xfer", w,
+                            response_bytes_total / len(workers),
+                            deps=(wk,), dst_stage=root))
+    instrs.append(Instr(f"agg{tag}", "compute", root, root_work,
+                        deps=tuple(resp), state_bytes=sb))
+    return lower(Program(tuple(Stage(u, u) for u in nodes),
+                         tuple(instrs)), topo)
 
 
 # ---------------------------------------------------------------------------
@@ -687,30 +724,29 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
     coll = _rescale_collectives(coll, int(trace.get("n_devices", 0) or 0),
                                 len(nodes), on_device_mismatch)
 
-    tasks = []
+    participants = tuple(nodes)
+    instrs = []
 
     def emit_step(stag: str, prev_barrier: Optional[str]) -> str:
         dep = (prev_barrier,) if prev_barrier else ()
         phase_ids = []
         for u in nodes:
             cid = f"fwd{tag}:{stag}:{u}"
-            tasks.append(Task(cid, EventKind.COMPUTE, (topo.accel(u),),
-                              compute_s, deps=dep, node=u,
-                              state_bytes=sb))
+            instrs.append(Instr(cid, "compute", u, compute_s, deps=dep,
+                                unit="accel", state_bytes=sb))
             last = cid
             for k, (tier, nbytes) in enumerate(coll):
                 gid = f"sync{tag}:{stag}:{u}:{k}"
-                res = ((topo.ici(u),) if tier == "ici"
-                       else (topo.tx(u), topo.rx(u))
-                       + topo.dcn_path(u, nodes))
-                tasks.append(Task(gid, EventKind.COLLECTIVE_PHASE, res,
-                                  nbytes, deps=(last,), node=u,
-                                  state_bytes=sb))
+                instrs.append(Instr(gid, "collective", u, nbytes,
+                                    deps=(last,), tier=tier,
+                                    participants=participants,
+                                    state_bytes=sb))
                 last = gid
             phase_ids.append(last)
         bid = f"step{tag}:{stag}"
-        tasks.append(Task(bid, EventKind.COMPUTE, (), 0.0,
-                          deps=tuple(phase_ids)))
+        # the global step barrier: resource-less, node-less compute
+        instrs.append(Instr(bid, "compute", "", 0.0,
+                            deps=tuple(phase_ids), unit="none"))
         return bid
 
     barrier = after
@@ -720,13 +756,285 @@ def training_from_trace(topo: Topology, trace: dict, *, steps: int = 1,
             for node in fail_at[s]:
                 rid = f"recover{tag}:{node}:{s}"
                 # resource-less => pure wall-clock delay
-                tasks.append(Task(rid, EventKind.COMPUTE, (),
-                                  failure_model.recovery_delay(),
-                                  deps=(barrier,), node=node))
+                instrs.append(Instr(rid, "compute", node,
+                                    failure_model.recovery_delay(),
+                                    deps=(barrier,), unit="none"))
                 barrier = rid
             for r in range(failure_model.lost_steps(s)):
                 barrier = emit_step(f"{s}r{r}", barrier)
-    return tasks
+    return lower(Program(tuple(Stage(u, u) for u in nodes),
+                         tuple(instrs)), topo)
+
+
+# ---------------------------------------------------------------------------
+# Gang-scheduled pipeline parallelism and RLHF dataflow
+# ---------------------------------------------------------------------------
+
+
+PIPELINE_SCHEDULES = ("1f1b", "gpipe")
+
+
+def _sched_order(schedule: str, p: int, m: int, s: int) -> list:
+    """Stage ``s``'s instruction order — the per-stage slice of the
+    pipeline schedule, as (kind, microbatch) pairs.
+
+    ``gpipe``: all m forwards, then all m backwards.  ``1f1b``: p-1-s
+    warmup forwards, then steady-state one-forward-one-backward pairs,
+    then the cooldown backwards.  With equal forward/backward cost both
+    fill (m + p - 1) slots of 2 units on every stage — the analytic
+    (p-1)/(m+p-1) bubble fraction.
+    """
+    if schedule == "gpipe":
+        return ([("F", i) for i in range(m)]
+                + [("B", i) for i in range(m)])
+    w = min(p - 1 - s, m)
+    seq = [("F", i) for i in range(w)]
+    f, b = w, 0
+    while f < m:
+        seq.append(("F", f))
+        seq.append(("B", b))
+        f += 1
+        b += 1
+    while b < m:
+        seq.append(("B", b))
+        b += 1
+    return seq
+
+
+def _pipeline_pass(instrs: list, names: list, *, microbatches: int,
+                   schedule: str, fwd_work: float, bwd_work: float,
+                   activation_bytes: float, grad_bytes: float,
+                   data_dep, tag: str, sb: float,
+                   prev_of: Optional[dict] = None) -> dict:
+    """Emit one full pipeline pass (every stage's schedule slice) into
+    ``instrs``.  ``names`` are the stage names, ``data_dep(mb)`` the
+    external dependency feeding stage 0's forward for microbatch ``mb``
+    (a load, or an RLHF rollout transfer).  ``prev_of`` chains each
+    stage's first instruction onto its last from an earlier pass (RLHF
+    iterations share one gang timeline).  Returns the per-stage last
+    instruction ids."""
+    p, m = len(names), microbatches
+    prev_of = dict(prev_of or {})
+    for s in range(p):
+        prev = prev_of.get(s)
+        for kind, mb in _sched_order(schedule, p, m, s):
+            if kind == "F":
+                iid = f"fwd{tag}:{s}:{mb}"
+                if s == 0:
+                    data = data_dep(mb)
+                elif activation_bytes > 0:
+                    data = f"act{tag}:{s - 1}:{mb}"
+                else:
+                    data = f"fwd{tag}:{s - 1}:{mb}"
+                work = fwd_work
+            else:
+                iid = f"bwd{tag}:{s}:{mb}"
+                if s == p - 1:
+                    data = f"fwd{tag}:{s}:{mb}"
+                elif grad_bytes > 0:
+                    data = f"grad{tag}:{s + 1}:{mb}"
+                else:
+                    data = f"bwd{tag}:{s + 1}:{mb}"
+                work = bwd_work
+            # the schedule is the dependency structure: the data edge
+            # (activation/gradient arrival) plus the stage's own
+            # program order
+            deps = [data] if data is not None else []
+            if prev is not None and prev != data:
+                deps.append(prev)
+            instrs.append(Instr(iid, "compute", names[s], work,
+                                deps=tuple(deps), unit="accel",
+                                state_bytes=sb))
+            if kind == "F" and s < p - 1 and activation_bytes > 0:
+                instrs.append(Instr(f"act{tag}:{s}:{mb}", "xfer",
+                                    names[s], activation_bytes,
+                                    deps=(iid,), dst_stage=names[s + 1],
+                                    state_bytes=sb))
+            if kind == "B" and s > 0 and grad_bytes > 0:
+                instrs.append(Instr(f"grad{tag}:{s}:{mb}", "xfer",
+                                    names[s], grad_bytes, deps=(iid,),
+                                    dst_stage=names[s - 1],
+                                    state_bytes=sb))
+            prev = iid
+        prev_of[s] = prev
+    return prev_of
+
+
+def pipeline_training(topo: Topology, *, stages: Optional[int] = None,
+                      microbatches: int = 4, schedule: str = "1f1b",
+                      fwd_work: float = 1.0,
+                      bwd_work: Optional[float] = None,
+                      activation_bytes: float = 0.0,
+                      grad_bytes: Optional[float] = None,
+                      sync_bytes: float = 0.0, load_work: float = 0.0,
+                      tag: str = "",
+                      nodes: Optional[Sequence[str]] = None,
+                      state_bytes: Optional[float] = None,
+                      gang: Optional[str] = None) -> list:
+    """Gang-scheduled pipeline-parallel training: ``p`` stages on ``p``
+    accelerator nodes run ``microbatches`` microbatches under an
+    instruction schedule, one gang.
+
+    The schedule IS the dependency structure: each stage's instruction
+    stream (LoadMicroBatch / Forward / Backward / ReduceGrads order) is
+    chained in program order on that stage's accelerator, and
+    activations/gradients ride the fabric between adjacent stage nodes
+    when ``activation_bytes``/``grad_bytes`` are positive (zero bytes
+    collapse the edge to a direct dependency — the bubble-only cell).
+    ``schedule="1f1b"`` interleaves one-forward-one-backward after a
+    ``p-1-s`` warmup per stage; ``"gpipe"`` runs all forwards then all
+    backwards.  With equal forward/backward cost both yield the analytic
+    bubble fraction (p-1)/(m+p-1) — `SimResult.gang_bubble_fraction`
+    measures it.
+
+    After the last backward each stage optionally reduces gradients
+    (``sync_bytes`` on the dcn tier across the gang) and a resource-less
+    ``step`` barrier closes the step.  ``bwd_work`` defaults to
+    ``fwd_work``, ``grad_bytes`` to ``activation_bytes``.  ``gang``
+    overrides the gang id (default ``pipe{tag}``); pass ``""`` to leave
+    tasks un-ganged (the cluster scheduler tags gang jobs with their job
+    id instead).
+    """
+    if schedule not in PIPELINE_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one "
+                         f"of {PIPELINE_SCHEDULES}")
+    if microbatches < 1:
+        raise ValueError(f"microbatches must be >= 1, "
+                         f"got {microbatches!r}")
+    explicit = nodes is not None
+    nodes = _placed(topo, nodes, accel=True, minimum=1,
+                    who="pipeline_training")
+    p = len(nodes) if stages is None else int(stages)
+    if p < 1:
+        raise ValueError(f"stages must be >= 1, got {stages!r}")
+    if explicit and len(nodes) != p:
+        raise ValueError(f"pipeline_training: {p} stages but "
+                         f"{len(nodes)} placed nodes")
+    if len(nodes) < p:
+        raise ValueError(f"pipeline_training needs >= {p} accelerator "
+                         f"nodes, got {len(nodes)}")
+    nodes = nodes[:p]
+    sb = _sb(state_bytes)
+    bwd = fwd_work if bwd_work is None else bwd_work
+    gb = activation_bytes if grad_bytes is None else grad_bytes
+    names = [f"stage{s}" for s in range(p)]
+
+    instrs: list = []
+    loads = []
+    for mb in range(microbatches):
+        lid = f"load{tag}:{mb}"
+        loads.append(lid)
+        instrs.append(Instr(lid, "compute", names[0], load_work))
+    last_of = _pipeline_pass(instrs, names, microbatches=microbatches,
+                             schedule=schedule, fwd_work=fwd_work,
+                             bwd_work=bwd, activation_bytes=activation_bytes,
+                             grad_bytes=gb, data_dep=lambda mb: loads[mb],
+                             tag=tag, sb=sb)
+    step_deps = []
+    for s in range(p):
+        if sync_bytes > 0:
+            sid = f"sync{tag}:{s}"
+            instrs.append(Instr(sid, "collective", names[s], sync_bytes,
+                                deps=(last_of[s],), tier="dcn",
+                                participants=tuple(names),
+                                state_bytes=sb))
+            step_deps.append(sid)
+        else:
+            step_deps.append(last_of[s])
+    instrs.append(Instr(f"step{tag}", "compute", "", 0.0,
+                        deps=tuple(step_deps), unit="none"))
+    prog = Program(tuple(Stage(names[s], nodes[s]) for s in range(p)),
+                   tuple(instrs),
+                   gang_id=f"pipe{tag}" if gang is None else gang)
+    return lower(prog, topo)
+
+
+def rlhf_dataflow(topo: Topology, *, trainer_stages: int = 2,
+                  iters: int = 2, gen_work: float = 1.0,
+                  fwd_work: float = 0.5,
+                  bwd_work: Optional[float] = None,
+                  rollout_bytes: float = 0.5,
+                  weights_bytes: float = 0.5,
+                  activation_bytes: float = 0.0,
+                  sync_bytes: float = 0.0, tag: str = "",
+                  nodes: Optional[Sequence[str]] = None,
+                  state_bytes: Optional[float] = None,
+                  gang: Optional[str] = None) -> list:
+    """RLHF-style two-model dataflow: generation fan-out feeding a
+    co-scheduled pipeline trainer over a shared fabric, as one gang.
+
+    The first ``trainer_stages`` placed accelerator nodes form the
+    trainer pipeline; every remaining node is an actor.  Per iteration:
+    each actor generates (``gen_work`` on its accelerator) and streams
+    its ``rollout_bytes`` rollout to trainer stage 0; the trainer runs a
+    1F1B pass with one microbatch per rollout; after the step barrier
+    the updated weights (``weights_bytes``) broadcast back to every
+    actor, gating its next generation.  Actors and trainer share one
+    ``gang_id`` (default ``rlhf{tag}``), so time actors sit idle while
+    the trainer steps — and vice versa — lands in the gang's bubble
+    accounting, and preempting any stage parks the whole dataflow.
+    """
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters!r}")
+    if trainer_stages < 1:
+        raise ValueError(f"trainer_stages must be >= 1, "
+                         f"got {trainer_stages!r}")
+    nodes = _placed(topo, nodes, accel=True, minimum=trainer_stages + 1,
+                    who="rlhf_dataflow")
+    p = trainer_stages
+    trainer, actors = list(nodes[:p]), list(nodes[p:])
+    m = len(actors)
+    sb = _sb(state_bytes)
+    bwd = fwd_work if bwd_work is None else bwd_work
+    names = [f"stage{s}" for s in range(p)]
+    anames = [f"actor{a}" for a in range(m)]
+
+    instrs: list = []
+    prev_of: dict = {}
+    for k in range(iters):
+        rolls = []
+        for a in range(m):
+            gen = f"gen{tag}:{k}:{a}"
+            deps = (f"bcast{tag}:{k - 1}:{a}",) if k else ()
+            instrs.append(Instr(gen, "compute", anames[a], gen_work,
+                                deps=deps, unit="accel", state_bytes=sb))
+            rid = f"roll{tag}:{k}:{a}"
+            rolls.append(rid)
+            instrs.append(Instr(rid, "xfer", anames[a], rollout_bytes,
+                                deps=(gen,), dst_stage=names[0],
+                                state_bytes=sb))
+        prev_of = _pipeline_pass(
+            instrs, names, microbatches=m, schedule="1f1b",
+            fwd_work=fwd_work, bwd_work=bwd,
+            activation_bytes=activation_bytes,
+            grad_bytes=activation_bytes,
+            data_dep=lambda mb: rolls[mb], tag=f"{tag}:{k}", sb=sb,
+            prev_of=prev_of)
+        step_deps = []
+        for s in range(p):
+            if sync_bytes > 0:
+                sid = f"sync{tag}:{k}:{s}"
+                instrs.append(Instr(sid, "collective", names[s],
+                                    sync_bytes, deps=(prev_of[s],),
+                                    tier="dcn",
+                                    participants=tuple(names),
+                                    state_bytes=sb))
+                step_deps.append(sid)
+                prev_of[s] = sid
+            else:
+                step_deps.append(prev_of[s])
+        bid = f"step{tag}:{k}"
+        instrs.append(Instr(bid, "compute", "", 0.0,
+                            deps=tuple(step_deps), unit="none"))
+        for a in range(m):
+            instrs.append(Instr(f"bcast{tag}:{k}:{a}", "xfer", names[0],
+                                weights_bytes, deps=(bid,),
+                                dst_stage=anames[a], state_bytes=sb))
+    stages = (tuple(Stage(names[s], trainer[s]) for s in range(p))
+              + tuple(Stage(anames[a], actors[a]) for a in range(m)))
+    prog = Program(stages, tuple(instrs),
+                   gang_id=f"rlhf{tag}" if gang is None else gang)
+    return lower(prog, topo)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,701 @@
+"""Staged-program IR + gang scheduling acceptance tests.
+
+The refactor contract: every ported generator (`shuffle`,
+`pipelined_shuffle_waves`, `analytics_dag`, `scatter_gather`,
+`training_from_trace`) now builds a `repro.sim.program.Program` and
+lowers it, but must stay **byte-identical** to its pre-IR hand-built
+predecessor — same `Task` fields in the same order, hence the same
+event trace under both allocators and both engine backends.  The
+``_legacy_*`` functions below are verbatim copies of the pre-refactor
+emission code (sharing only the unchanged `_placed`/`_sb`/trace-math
+helpers); if a port drifts, these tests say exactly where.
+
+On top of the IR: `lower` input validation, the 1F1B/GPipe pipeline
+bubble against the analytic (p-1)/(m+p-1), the RLHF dataflow gang,
+whole-gang preemption through the cluster scheduler (a timing sweep
+that must never strand a gang half-running), and per-tenant rate-limit
+admission (`TenantLimit`).
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.sim import (EventKind, Fabric, Instr, NodeModel, Program,
+                       Stage, Task, Topology, analytics_dag,
+                       lovelock_cluster, lower,
+                       pipeline_bubble_report, pipeline_training,
+                       pipelined_shuffle_waves, rlhf_dataflow,
+                       scatter_gather, shuffle, training_from_trace)
+from repro.sim.sched import (ClusterScheduler, TenantLimit,
+                             analytics_template, gang_summary,
+                             pipeline_template, shuffle_template,
+                             slo_summary, tenant_summary, trace_stream)
+from repro.sim.workloads import (PIPELINE_SCHEDULES, _placed,
+                                 _rescale_collectives, _sb, _trace_costs)
+
+ALLOCATORS = ("waterfill", "progressive")
+BACKENDS = ("legacy", "array")
+
+
+def _equiv_topo():
+    """The pinned equivalence cell: 8 compute nodes in 2 racks, one
+    storage shelf, 2:1-oversubscribed fabric — cross-rack paths and
+    role-aware placement both in play."""
+    return lovelock_cluster(8, 1, accel_rate=1.0, storage_nodes=1,
+                            fabric=Fabric(rack_size=4,
+                                          oversubscription=2.0))
+
+
+def _accel_topo(n=4):
+    return Topology([NodeModel(f"n{i}", "smartnic", 1.0, accel_rate=1.0)
+                     for i in range(n)])
+
+
+def _sched_topo():
+    # the pinned bench-cell topology (scenario_pipeline_gang)
+    return lovelock_cluster(8, 1, accel_rate=1.0, storage_nodes=2,
+                            fabric=Fabric(rack_size=5,
+                                          oversubscription=2.0,
+                                          core_oversubscription=2.0))
+
+
+def _trace(res):
+    return (res.events, res.finish_times, res.spilled_bytes,
+            res.restored_bytes, res.storage_residency)
+
+
+# ---------------------------------------------------------------------------
+# Verbatim pre-refactor generators (hand-built Task emission)
+# ---------------------------------------------------------------------------
+
+
+def _legacy_shuffle(topo, *, cpu_work_per_node, bytes_per_node,
+                    tasks_per_node=2, reduce_work_per_node=0.0, tag="",
+                    nodes=None, state_bytes=None):
+    nodes = _placed(topo, nodes, who="shuffle")
+    sb = _sb(state_bytes)
+    n = len(nodes)
+    tasks = []
+    maps = {}
+    for u in nodes:
+        maps[u] = tuple(f"map{tag}:{u}:{i}" for i in range(tasks_per_node))
+        for tid in maps[u]:
+            tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
+                              cpu_work_per_node / tasks_per_node, node=u,
+                              state_bytes=sb))
+    inbound = {v: [] for v in nodes}
+    if n > 1:
+        per_peer = bytes_per_node / (n - 1)
+        for u in nodes:
+            for v in nodes:
+                if v == u:
+                    continue
+                tid = f"xfer{tag}:{u}:{v}"
+                inbound[v].append(tid)
+                res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
+                tasks.append(Task(tid, EventKind.DMA, res, per_peer,
+                                  deps=maps[u], node=u, state_bytes=sb))
+    for v in nodes:
+        deps = tuple(inbound[v]) or maps[v]
+        tasks.append(Task(f"reduce{tag}:{v}", EventKind.COMPUTE,
+                          (topo.cpu(v),), reduce_work_per_node, deps=deps,
+                          node=v, state_bytes=sb))
+    return tasks
+
+
+def _legacy_waves(topo, *, waves=8, cpu_work_per_node=1.0,
+                  bytes_per_node=2.0, tasks_per_node=2,
+                  reduce_work_per_node=0.25, jitter=0.0, seed=0, tag="",
+                  state_bytes=None):
+    import random
+
+    if waves < 1:
+        raise ValueError(f"waves must be >= 1, got {waves!r}")
+    rng = random.Random(seed)
+    tasks = []
+    for rack in range(topo.n_racks):
+        nodes = topo.rack_nodes(rack, topo.compute_node_names)
+        if len(nodes) < 2:
+            continue
+        prev_reduce = {}
+        for w in range(waves):
+            wtag = f"{tag}:r{rack}.{w}"
+            wave = _legacy_shuffle(
+                topo, cpu_work_per_node=cpu_work_per_node,
+                bytes_per_node=bytes_per_node,
+                tasks_per_node=tasks_per_node,
+                reduce_work_per_node=reduce_work_per_node,
+                tag=wtag, nodes=nodes, state_bytes=state_bytes)
+            if jitter > 0:
+                wave = [dataclasses.replace(
+                            t, work=t.work * (1.0 + jitter * rng.random()))
+                        for t in wave]
+            if prev_reduce:
+                wave = [dataclasses.replace(
+                            t, deps=t.deps + (prev_reduce[t.node],))
+                        if t.tid.startswith(f"map{wtag}:") else t
+                        for t in wave]
+            prev_reduce = {u: f"reduce{wtag}:{u}" for u in nodes}
+            tasks.extend(wave)
+    if not tasks:
+        raise ValueError("pipelined_shuffle_waves needs a topology with "
+                         "at least one rack of >= 2 compute nodes "
+                         "(pass a Fabric)")
+    return tasks
+
+
+def _legacy_analytics_dag(topo, *, scan_work_per_node,
+                          shuffle_bytes_per_node, join_work_total,
+                          output_bytes_per_node=0.0,
+                          reduce_work_per_node=0.0, skew=0.0, hot=None,
+                          tasks_per_node=2, tag="", nodes=None,
+                          state_bytes=None):
+    if not 0.0 <= skew < 1.0:
+        raise ValueError(f"skew must be in [0, 1), got {skew!r}")
+    nodes = _placed(topo, nodes, minimum=2, who="analytics_dag")
+    sb = _sb(state_bytes)
+    n = len(nodes)
+    hot = hot or nodes[0]
+    if hot not in nodes:
+        raise KeyError(f"hot joiner {hot!r} is not a compute node")
+    weight = {v: (1.0 - skew) / n + (skew if v == hot else 0.0)
+              for v in nodes}
+
+    tasks = []
+    scans = {}
+    for u in nodes:
+        scans[u] = tuple(f"scan{tag}:{u}:{i}"
+                         for i in range(tasks_per_node))
+        for tid in scans[u]:
+            tasks.append(Task(tid, EventKind.COMPUTE, (topo.cpu(u),),
+                              scan_work_per_node / tasks_per_node,
+                              node=u, state_bytes=sb))
+
+    inbound = {v: [] for v in nodes}
+    received = {v: 0.0 for v in nodes}
+    for u in nodes:
+        peer_total = sum(weight[v] for v in nodes if v != u)
+        for v in nodes:
+            if v == u:
+                continue
+            nbytes = shuffle_bytes_per_node * weight[v] / peer_total
+            tid = f"part{tag}:{u}:{v}"
+            inbound[v].append(tid)
+            received[v] += nbytes
+            res = (topo.tx(u), topo.rx(v)) + topo.fabric_path(u, v)
+            tasks.append(Task(tid, EventKind.DMA, res, nbytes,
+                              deps=scans[u], node=u, state_bytes=sb))
+
+    total_recv = sum(received.values())
+    joins = {}
+    for v in nodes:
+        frac = received[v] / total_recv if total_recv > 0 else 1.0 / n
+        joins[v] = f"join{tag}:{v}"
+        tasks.append(Task(joins[v], EventKind.COMPUTE, (topo.cpu(v),),
+                          join_work_total * frac,
+                          deps=tuple(inbound[v]) + scans[v], node=v,
+                          state_bytes=sb))
+
+    out_in = {v: [joins[v]] for v in nodes}
+    if output_bytes_per_node > 0:
+        total_out = output_bytes_per_node * n
+        for v in nodes:
+            frac = received[v] / total_recv if total_recv > 0 else 1.0 / n
+            per_peer = total_out * frac / (n - 1)
+            for w in nodes:
+                if w == v:
+                    continue
+                tid = f"out{tag}:{v}:{w}"
+                out_in[w].append(tid)
+                res = (topo.tx(v), topo.rx(w)) + topo.fabric_path(v, w)
+                tasks.append(Task(tid, EventKind.DMA, res, per_peer,
+                                  deps=(joins[v],), node=v,
+                                  state_bytes=sb))
+
+    for w in nodes:
+        tasks.append(Task(f"reduce{tag}:{w}", EventKind.COMPUTE,
+                          (topo.cpu(w),), reduce_work_per_node,
+                          deps=tuple(out_in[w]), node=w,
+                          state_bytes=sb))
+    return tasks
+
+
+def _legacy_scatter_gather(topo, *, request_bytes_total,
+                           response_bytes_total, cpu_work_per_worker,
+                           root_work=0.0, root=None, tag="", nodes=None,
+                           state_bytes=None):
+    nodes = _placed(topo, nodes, minimum=2, who="scatter_gather")
+    sb = _sb(state_bytes)
+    root = root or nodes[0]
+    workers = [u for u in nodes if u != root]
+    if not workers:
+        raise ValueError("scatter_gather needs >= 2 nodes")
+    tasks = []
+    resp = []
+    for w in workers:
+        req = f"req{tag}:{w}"
+        wk = f"work{tag}:{w}"
+        rp = f"resp{tag}:{w}"
+        resp.append(rp)
+        tasks.append(Task(req, EventKind.DMA,
+                          (topo.tx(root), topo.rx(w))
+                          + topo.fabric_path(root, w),
+                          request_bytes_total / len(workers), node=root))
+        tasks.append(Task(wk, EventKind.COMPUTE, (topo.cpu(w),),
+                          cpu_work_per_worker, deps=(req,), node=w,
+                          state_bytes=sb))
+        tasks.append(Task(rp, EventKind.DMA,
+                          (topo.tx(w), topo.rx(root))
+                          + topo.fabric_path(w, root),
+                          response_bytes_total / len(workers), deps=(wk,),
+                          node=w))
+    tasks.append(Task(f"agg{tag}", EventKind.COMPUTE, (topo.cpu(root),),
+                      root_work, deps=tuple(resp), node=root,
+                      state_bytes=sb))
+    return tasks
+
+
+def _legacy_training_from_trace(topo, trace, *, steps=1, accel_flops=1.0,
+                                hbm_bw=1.0, failures=None,
+                                failure_model=None, tag="", nodes=None,
+                                compute_scale=1.0, first_step=0,
+                                after=None, on_device_mismatch="scale",
+                                state_bytes=None):
+    fail_at = {}
+    for n, s in (failures or []):
+        fail_at.setdefault(int(s), []).append(str(n))
+
+    nodes = _placed(topo, nodes, accel=True, who="training_from_trace")
+    sb = _sb(state_bytes)
+    compute_s, coll = _trace_costs(trace, accel_flops, hbm_bw)
+    compute_s *= compute_scale
+    coll = _rescale_collectives(coll, int(trace.get("n_devices", 0) or 0),
+                                len(nodes), on_device_mismatch)
+
+    tasks = []
+
+    def emit_step(stag, prev_barrier):
+        dep = (prev_barrier,) if prev_barrier else ()
+        phase_ids = []
+        for u in nodes:
+            cid = f"fwd{tag}:{stag}:{u}"
+            tasks.append(Task(cid, EventKind.COMPUTE, (topo.accel(u),),
+                              compute_s, deps=dep, node=u,
+                              state_bytes=sb))
+            last = cid
+            for k, (tier, nbytes) in enumerate(coll):
+                gid = f"sync{tag}:{stag}:{u}:{k}"
+                res = ((topo.ici(u),) if tier == "ici"
+                       else (topo.tx(u), topo.rx(u))
+                       + topo.dcn_path(u, nodes))
+                tasks.append(Task(gid, EventKind.COLLECTIVE_PHASE, res,
+                                  nbytes, deps=(last,), node=u,
+                                  state_bytes=sb))
+                last = gid
+            phase_ids.append(last)
+        bid = f"step{tag}:{stag}"
+        tasks.append(Task(bid, EventKind.COMPUTE, (), 0.0,
+                          deps=tuple(phase_ids)))
+        return bid
+
+    barrier = after
+    for s in range(first_step, first_step + steps):
+        barrier = emit_step(str(s), barrier)
+        if s in fail_at:
+            for node in fail_at[s]:
+                rid = f"recover{tag}:{node}:{s}"
+                tasks.append(Task(rid, EventKind.COMPUTE, (),
+                                  failure_model.recovery_delay(),
+                                  deps=(barrier,), node=node))
+                barrier = rid
+            for r in range(failure_model.lost_steps(s)):
+                barrier = emit_step(f"{s}r{r}", barrier)
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# IR equivalence: ported generators are byte-identical to the legacy ones
+# ---------------------------------------------------------------------------
+
+
+class _StubFailureModel:
+    """Deterministic stand-in so both emissions price recovery alike."""
+    ckpt_every = 2
+    replan_s = 1.0
+
+    def recovery_delay(self):
+        return 2.0
+
+    def lost_steps(self, s):
+        return s % self.ckpt_every
+
+
+REL_TRACE = {"n_devices": 8, "phases": [
+    {"kind": "compute", "flops": 1.0},
+    {"kind": "collective_phase", "tier": "ici", "bytes": 0.5},
+    {"kind": "collective_phase", "tier": "dcn", "bytes": 2.0}]}
+
+_TRAIN_KW = dict(steps=2, accel_flops=1.0, hbm_bw=1.0, tag=":tr",
+                 state_bytes=0.5, failures=[("nic1", 0)],
+                 failure_model=_StubFailureModel(),
+                 nodes=[f"nic{i}" for i in range(6)])
+
+CASES = {
+    "shuffle": (
+        lambda t: shuffle(t, cpu_work_per_node=0.5, bytes_per_node=3.0,
+                          reduce_work_per_node=0.25, tag=":s",
+                          state_bytes=0.5),
+        lambda t: _legacy_shuffle(t, cpu_work_per_node=0.5,
+                                  bytes_per_node=3.0,
+                                  reduce_work_per_node=0.25, tag=":s",
+                                  state_bytes=0.5)),
+    "waves": (
+        lambda t: pipelined_shuffle_waves(t, waves=2, jitter=0.35,
+                                          seed=7, tag=":w",
+                                          state_bytes=0.5),
+        lambda t: _legacy_waves(t, waves=2, jitter=0.35, seed=7,
+                                tag=":w", state_bytes=0.5)),
+    "analytics_dag": (
+        lambda t: analytics_dag(t, scan_work_per_node=0.25,
+                                shuffle_bytes_per_node=6.0,
+                                join_work_total=2.0,
+                                output_bytes_per_node=2.0,
+                                reduce_work_per_node=0.25, skew=0.6,
+                                tag=":a", state_bytes=0.5),
+        lambda t: _legacy_analytics_dag(t, scan_work_per_node=0.25,
+                                        shuffle_bytes_per_node=6.0,
+                                        join_work_total=2.0,
+                                        output_bytes_per_node=2.0,
+                                        reduce_work_per_node=0.25,
+                                        skew=0.6, tag=":a",
+                                        state_bytes=0.5)),
+    "scatter_gather": (
+        lambda t: scatter_gather(t, request_bytes_total=1.0,
+                                 response_bytes_total=8.0,
+                                 cpu_work_per_worker=0.5, root_work=0.25,
+                                 tag=":q", state_bytes=0.5),
+        lambda t: _legacy_scatter_gather(t, request_bytes_total=1.0,
+                                         response_bytes_total=8.0,
+                                         cpu_work_per_worker=0.5,
+                                         root_work=0.25, tag=":q",
+                                         state_bytes=0.5)),
+    "training": (
+        lambda t: training_from_trace(t, REL_TRACE, **_TRAIN_KW),
+        lambda t: _legacy_training_from_trace(t, REL_TRACE,
+                                              **_TRAIN_KW)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_ported_generator_tasks_field_identical(name):
+    """Every Task field — tid, kind, resources, work, deps, node,
+    state_bytes, gang_id — and the emission order must survive the IR
+    refactor unchanged."""
+    build_new, build_legacy = CASES[name]
+    topo = _equiv_topo()
+    new, legacy = build_new(topo), build_legacy(topo)
+    assert len(new) == len(legacy)
+    for got, want in zip(new, legacy):
+        assert got == want, (got, want)
+
+
+@pytest.mark.parametrize("allocator", ALLOCATORS)
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_ported_generator_trace_identical(name, allocator, backend):
+    """The acceptance criterion: byte-identical event traces on the
+    pinned cell under both allocators and both engine backends."""
+    build_new, build_legacy = CASES[name]
+    runs = []
+    for build in (build_new, build_legacy):
+        topo = _equiv_topo()
+        res = topo.engine(allocator=allocator,
+                          backend=backend).run(build(topo))
+        assert res.complete
+        runs.append(res)
+    assert _trace(runs[0]) == _trace(runs[1])
+
+
+# ---------------------------------------------------------------------------
+# lower(): validation and the none-unit node passthrough
+# ---------------------------------------------------------------------------
+
+
+def test_lower_rejects_unknown_op_unit_tier_stage():
+    topo = _accel_topo(2)
+    stages = (Stage("s0", "n0"), Stage("s1", "n1"))
+    with pytest.raises(ValueError, match="unknown op"):
+        lower(Program(stages, (Instr("x", "frobnicate"),)), topo)
+    with pytest.raises(ValueError, match="unknown unit"):
+        lower(Program(stages, (Instr("x", "compute", "s0", 1.0,
+                                     unit="gpu"),)), topo)
+    with pytest.raises(ValueError, match="unknown tier"):
+        lower(Program(stages, (Instr("x", "collective", "s0", 1.0,
+                                     tier="nvlink"),)), topo)
+    with pytest.raises(KeyError, match="unknown stage"):
+        lower(Program(stages, (Instr("x", "xfer", "s0", 1.0,
+                                     dst_stage="nope"),)), topo)
+    with pytest.raises(KeyError, match="unknown stage"):
+        lower(Program(stages, (Instr("x", "compute", "ghost", 1.0),)),
+              topo)
+
+
+def test_lower_rejects_bad_placements():
+    topo = _accel_topo(2)
+    prog = Program((Stage("s0", "n0"), Stage("s1", "n1")),
+                   (Instr("x", "compute", "s0", 1.0),))
+    with pytest.raises(ValueError, match="2 stages"):
+        lower(prog, topo, nodes=["n0"])
+    dup = Program((Stage("s", "n0"), Stage("s", "n1")), ())
+    with pytest.raises(ValueError, match="duplicate stage"):
+        lower(dup, topo)
+
+
+def test_lower_rebinds_stages_positionally():
+    topo = _accel_topo(4)
+    prog = Program((Stage("s0", "n0"), Stage("s1", "n1")),
+                   (Instr("a", "compute", "s0", 1.0),
+                    Instr("b", "xfer", "s0", 2.0, deps=("a",),
+                          dst_stage="s1")))
+    t_a, t_b = lower(prog, topo, nodes=["n2", "n3"])
+    assert t_a.resources == (topo.cpu("n2"),) and t_a.node == "n2"
+    assert t_b.resources[:2] == (topo.tx("n2"), topo.rx("n3"))
+
+
+def test_lower_none_unit_passes_unbound_stage_as_node():
+    """A resource-less compute may name a failure domain outside the
+    placement (training's recover delays) — the raw string passes
+    through instead of raising."""
+    topo = _accel_topo(2)
+    prog = Program((Stage("s0", "n0"),),
+                   (Instr("r", "compute", "ghost", 1.5, unit="none"),))
+    (t,) = lower(prog, topo)
+    assert t.resources == () and t.node == "ghost"
+    assert t.work == 1.5
+
+
+def test_lower_stamps_gang_id_on_every_task():
+    topo = _accel_topo(2)
+    prog = Program((Stage("s0", "n0"), Stage("s1", "n1")),
+                   (Instr("a", "compute", "s0", 1.0),
+                    Instr("b", "compute", "s1", 1.0, unit="accel")),
+                   gang_id="g1")
+    assert all(t.gang_id == "g1" for t in lower(prog, topo))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline schedules: bubble fraction vs the analytic (p-1)/(m+p-1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("schedule", PIPELINE_SCHEDULES)
+def test_pipeline_bubble_matches_analytic(schedule, backend):
+    """On the bubble-only cell (equal fwd/bwd cost, zero transfer
+    bytes) both schedules measure exactly (p-1)/(m+p-1) and the
+    makespan is the ideal (m+p-1) slots of fwd+bwd."""
+    p, m = 4, 8
+    topo = _accel_topo(p)
+    tasks = pipeline_training(topo, microbatches=m, schedule=schedule)
+    gang = tasks[0].gang_id
+    assert gang == "pipe"
+    res = topo.engine(backend=backend).run(tasks)
+    assert res.complete
+    analytic = (p - 1) / (m + p - 1)
+    measured = res.gang_bubble_fraction(gang)
+    assert abs(measured - analytic) / analytic < 0.05
+    assert measured == pytest.approx(analytic)
+    assert res.makespan == pytest.approx((m + p - 1) * 2.0)
+    assert set(res.gang_nodes[gang]) == {f"n{i}" for i in range(p)}
+
+
+def test_pipeline_bubble_report_pins_both_schedules():
+    rep = pipeline_bubble_report(lambda: _accel_topo(4), stages=4,
+                                 microbatches=8)
+    assert rep["analytic"] == pytest.approx(3.0 / 11.0)
+    for sched in PIPELINE_SCHEDULES:
+        row = rep["schedules"][sched]
+        assert row["rel_err"] < 0.05
+        assert row["bubble_fraction"] == pytest.approx(rep["analytic"])
+
+
+def test_pipeline_training_validates_inputs():
+    topo = _accel_topo(4)
+    with pytest.raises(ValueError, match="schedule"):
+        pipeline_training(topo, schedule="zigzag")
+    with pytest.raises(ValueError, match="microbatches"):
+        pipeline_training(topo, microbatches=0)
+    with pytest.raises(ValueError, match="stages"):
+        pipeline_training(topo, stages=0)
+    with pytest.raises(ValueError, match="nodes"):
+        pipeline_training(topo, stages=3, nodes=["n0", "n1"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rlhf_dataflow_completes_with_bubble(backend):
+    """Actors + trainer form one gang spanning every node; the
+    alternating generate/train phases necessarily leave bubble time on
+    both sides."""
+    topo = _accel_topo(4)
+    tasks = rlhf_dataflow(topo, trainer_stages=2, iters=2)
+    gang = tasks[0].gang_id
+    assert gang == "rlhf"
+    assert all(t.gang_id == gang for t in tasks)
+    res = topo.engine(backend=backend).run(tasks)
+    assert res.complete
+    assert set(res.gang_nodes[gang]) == set(topo.accelerator_node_names)
+    assert 0.0 < res.gang_bubble_fraction(gang) < 1.0
+
+
+def test_rlhf_dataflow_validates_inputs():
+    topo = _accel_topo(4)
+    with pytest.raises(ValueError, match="iters"):
+        rlhf_dataflow(topo, iters=0)
+    with pytest.raises(ValueError, match="trainer_stages"):
+        rlhf_dataflow(topo, trainer_stages=0)
+    with pytest.raises(ValueError):
+        # no node left to act: trainer_stages consumes the whole pool
+        rlhf_dataflow(_accel_topo(2), trainer_stages=2)
+
+
+# ---------------------------------------------------------------------------
+# Gang scheduling through the cluster scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_gang_job_is_tagged_with_its_job_id_and_summarized():
+    jobs = trace_stream([(0.0, pipeline_template(4, microbatches=4))])
+    sr = ClusterScheduler(_sched_topo(), "pack").run(jobs)
+    assert slo_summary(sr)["complete"]
+    (rec,) = sr.jobs
+    jid = rec.job.jid
+    assert rec.job.template.gang
+    # the scheduler stamped the job id as the gang id at admission
+    assert set(sr.result.gang_spans) == {jid}
+    assert len(sr.result.gang_nodes[jid]) == 4
+    gs = gang_summary(sr)
+    assert set(gs) == {jid}
+    row = gs[jid]
+    assert row["n_nodes"] == 4
+    assert row["bubble_fraction"] == pytest.approx(
+        sr.result.gang_bubble_fraction(jid))
+    assert row["jct_s"] == pytest.approx(rec.jct_s)
+    assert row["preemptions"] == 0 and row["spills"] == 0
+
+
+def test_gang_admission_is_all_or_nothing():
+    """Two 4-stage gangs on a 4-accelerator cluster: the second can
+    never start on a partial placement, so it waits for the first
+    gang's nodes to free up entirely."""
+    topo = lovelock_cluster(4, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4))
+    tpl = pipeline_template(4, microbatches=4)
+    jobs = trace_stream([(0.0, tpl), (0.5, tpl)])
+    sr = ClusterScheduler(topo, "pack").run(jobs)
+    assert slo_summary(sr)["complete"]
+    first, second = sr.jobs
+    assert first.completed and second.completed
+    assert second.start_s >= first.finish_s - 1e-9
+
+
+@pytest.mark.parametrize("policy", ("preempt", "preempt-ckpt"))
+@pytest.mark.parametrize("at", (2.0, 5.0, 8.0, 11.0))
+def test_gang_preemption_never_strands_the_gang(policy, at):
+    """Timing sweep: an urgent arrival preempts the pipeline gang at
+    varying phases of its schedule.  The stream must always complete,
+    and under spill semantics no gang member may finish work inside the
+    hold window (first spill landing -> last restore landing) — the
+    whole-gang restore barrier."""
+    jobs = trace_stream([
+        (0.0, pipeline_template(4, microbatches=8)),
+        (at, analytics_template(6, priority=5, name="urgent"))])
+    sr = ClusterScheduler(_sched_topo(), policy).run(jobs)
+    assert slo_summary(sr)["complete"], (policy, at)
+    rec = next(r for r in sr.jobs if r.job.template.gang)
+    assert rec.completed
+    jid = rec.job.jid
+    assert 0.0 <= sr.result.gang_bubble_fraction(jid) < 1.0
+    gang_tids = set(rec.task_ids)
+    ft = sr.result.finish_times
+
+    def _members(prefix):
+        return [v for k, v in ft.items() if k.startswith(prefix)
+                and k[len(prefix):].rsplit("!", 1)[0] in gang_tids]
+
+    restores = _members("~restore:")
+    if restores:
+        spills = _members("~spill:")
+        hold0, hold1 = min(spills), max(restores)
+        inside = [e for e in sr.result.events
+                  if e.subject in gang_tids and hold0 < e.time < hold1]
+        assert not inside, (policy, at, inside[:3])
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant rate-limit admission
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_limit_validation():
+    with pytest.raises(ValueError, match="max_concurrent"):
+        TenantLimit(max_concurrent=0)
+    with pytest.raises(ValueError, match="max_arrivals"):
+        TenantLimit(max_arrivals=0)
+    with pytest.raises(ValueError, match="window_s"):
+        TenantLimit(max_arrivals=1, window_s=0.0)
+    with pytest.raises(ValueError, match="admission=True"):
+        ClusterScheduler(_sched_topo(), "pack",
+                         tenant_limits={"t": TenantLimit(
+                             max_concurrent=1)})
+
+
+def test_tenant_max_concurrent_rejects_overlapping_jobs():
+    """Three overlapping arrivals against max_concurrent=1: the first
+    occupies the slot, the next two are shed at submit; an unrelated
+    tenant is untouched."""
+    burst = shuffle_template(2, scale=2.0, name="burst")
+    other = shuffle_template(2, name="other")
+    jobs = trace_stream([(0.0, burst), (0.1, burst), (0.2, burst),
+                         (0.3, other)])
+    sr = ClusterScheduler(
+        _sched_topo(), "pack", admission=True,
+        tenant_limits={"burst": TenantLimit(max_concurrent=1)}).run(jobs)
+    assert slo_summary(sr)["complete"]
+    assert sr.n_rejected == 2
+    ts = tenant_summary(sr)
+    assert ts["burst"]["n_rejected"] == 2
+    assert ts["burst"]["n_completed"] == 1
+    assert ts["other"]["n_rejected"] == 0
+    for rec in sr.jobs:
+        if rec.rejected:
+            assert math.isnan(rec.start_s) and rec.task_ids == ()
+
+
+def test_tenant_max_concurrent_releases_on_completion():
+    """The in-system count decrements when a job finishes: spaced
+    arrivals under max_concurrent=1 all run."""
+    spaced = shuffle_template(2, scale=0.2, name="spaced")
+    jobs = trace_stream([(0.0, spaced), (50.0, spaced)])
+    sr = ClusterScheduler(
+        _sched_topo(), "pack", admission=True,
+        tenant_limits={"spaced": TenantLimit(max_concurrent=1)}).run(jobs)
+    assert sr.n_rejected == 0
+    assert all(r.completed for r in sr.jobs)
+
+
+def test_tenant_arrival_rate_window_slides():
+    """max_arrivals=2 per 5 s: the third arrival inside the window is
+    rejected; a later one, after the window slid past the first two, is
+    accepted again."""
+    rate = shuffle_template(2, scale=0.2, name="rate")
+    jobs = trace_stream([(0.0, rate), (1.0, rate), (2.0, rate),
+                         (30.0, rate)])
+    sr = ClusterScheduler(
+        _sched_topo(), "pack", admission=True,
+        tenant_limits={"rate": TenantLimit(max_arrivals=2,
+                                           window_s=5.0)}).run(jobs)
+    assert sr.n_rejected == 1
+    (rej,) = [r for r in sr.jobs if r.rejected]
+    assert rej.arrival_s == pytest.approx(2.0)
+    assert sum(r.completed for r in sr.jobs) == 3

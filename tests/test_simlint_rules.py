@@ -182,6 +182,85 @@ def test_det005_forms():
 
 
 # ---------------------------------------------------------------------------
+# DET006 — dicts keyed by identity-hash objects
+# ---------------------------------------------------------------------------
+
+
+def test_det006_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        class Hold:
+            def __init__(self, tid):
+                self.tid = tid
+
+        def sweep(holds):
+            d = {}
+            d[Hold("a")] = 1.0
+            for h, v in d.items():
+                consume(h, v)
+        """, "DET006", path=PLAIN_PATH)
+
+
+@pytest.mark.parametrize("snippet,expect", [
+    # dict literal keyed by an identity-hash instance, iterated bare
+    ("""
+     class K:
+         pass
+     d = {K(): 1}
+     for k in d:
+         use(k)
+     """, ["DET006"]),
+    # dict comprehension key + .keys() iteration in a comprehension
+    ("""
+     class K:
+         pass
+     d = {K(): i for i in range(3)}
+     out = [k for k in d.keys()]
+     """, ["DET006"]),
+    # frozen dataclass keys carry a value hash — clean
+    ("""
+     import dataclasses
+     @dataclasses.dataclass(frozen=True)
+     class K:
+         tid: str
+     d = {}
+     d[K("a")] = 1
+     for k, v in d.items():
+         use(k, v)
+     """, []),
+    # a pinned __hash__ is the explicit contract — clean
+    ("""
+     class K:
+         def __hash__(self):
+             return hash(self.tid)
+     d = {}
+     d[K()] = 1
+     for k in d.items():
+         use(k)
+     """, []),
+    # eq=False dataclass keeps the id-based object hash — fires
+    ("""
+     import dataclasses
+     @dataclasses.dataclass(eq=False)
+     class K:
+         tid: str
+     d = {K("a"): 1}
+     for k in d:
+         use(k)
+     """, ["DET006"]),
+    # str-keyed dicts are untouched
+    ("""
+     class K:
+         pass
+     d = {"a": K()}
+     for k, v in d.items():
+         use(k, v)
+     """, []),
+])
+def test_det006_forms(snippet, expect):
+    assert lint(snippet, PLAIN_PATH, codes={"DET006"}) == expect
+
+
+# ---------------------------------------------------------------------------
 # UNIT001 — mixed-unit arithmetic
 # ---------------------------------------------------------------------------
 
