@@ -48,7 +48,8 @@ from repro.sim import (Fabric, append_bench_run, compare_allocators,
                        pipeline_bubble_report,
                        pipelined_shuffle_waves,
                        reference_tenants, scatter_gather,
-                       simulate_mu, skewed_analytics_mix, summarize,
+                       recorder_overhead, simulate_mu,
+                       skewed_analytics_mix, summarize,
                        synthetic_trace, trace_from_record,
                        traditional_cluster, training_from_trace)
 from repro.sim.sched import (ClusterScheduler, analytics_template,
@@ -62,8 +63,9 @@ ART = ROOT / "artifacts" / "dryrun"
 # bump when the per-run dict shape changes incompatibly; the writer
 # refuses to append to a history with a different version
 # (v3: per-scenario n_events/events_per_sec, engine_scale cell,
-# perf_counter wall times)
-SCHEMA_VERSION = 3
+# perf_counter wall times; v4: engine_scale carries a ``recorder``
+# digest — flight-recorder overhead on the same pinned cell)
+SCHEMA_VERSION = 4
 
 # physical-ish rates for the training scenario (bytes/s)
 NIC_BW = 25e9          # 200 Gb/s NIC
@@ -299,7 +301,7 @@ def scenario_preempt_ckpt():
     }
 
 
-def scenario_engine_scale(smoke=False):
+def scenario_engine_scale(smoke=False, trace_out=None):
     """Engine events/sec cell: the pinned 64-node / 4x16-rack / 2:1
     fabric `pipelined_shuffle_waves` workload (per-task deterministic
     work jitter, so completions spread into distinct events) run under
@@ -311,7 +313,15 @@ def scenario_engine_scale(smoke=False):
 
     The full cell is waves=5 (~5.8k tasks); --smoke drops to waves=2
     (~2.3k tasks) to keep the CI lane short without changing the
-    topology or the per-event working set."""
+    topology or the per-event working set.
+
+    The ``recorder`` digest prices the observability layer on the same
+    pinned cell (array backend): events/sec with a
+    `repro.sim.obs.FlightRecorder` attached, the on/off
+    ``overhead_ratio`` the ``obs`` CI lane gates on, and
+    ``identical_events`` — the recorder must be read-only.  With
+    ``trace_out`` set the recorder's Perfetto export is written there
+    (the ``--trace-out`` CLI flag; load at https://ui.perfetto.dev)."""
     waves = 2 if smoke else 5
 
     def make_topo():
@@ -343,6 +353,19 @@ def scenario_engine_scale(smoke=False):
                          wall_s=round(out[side]["wall_s"], 3),
                          events_per_sec=round(
                              out[side]["events_per_sec"], 1))
+    ovh = recorder_overhead(make_topo, build)
+    recorder = ovh.pop("recorder")
+    ovh.pop("results")
+    out["recorder"] = {
+        "wall_s": round(ovh["on"]["wall_s"], 3),
+        "events_per_sec": round(ovh["on"]["events_per_sec"], 1),
+        "overhead_ratio": round(ovh["overhead_ratio"], 4),
+        "identical_events": ovh["identical_events"],
+        "n_spans": ovh["n_spans"],
+    }
+    if trace_out is not None:
+        from repro.sim.obs import to_json
+        pathlib.Path(trace_out).write_text(to_json(recorder))
     return out
 
 
@@ -440,6 +463,9 @@ def main():
                     help="run a single scenario (the run still appends "
                          "to the history; 'cells' records coverage)")
     ap.add_argument("--out", default=str(ROOT / "BENCH_sim.json"))
+    ap.add_argument("--trace-out", default=None,
+                    help="write the engine_scale cell's flight-recorder "
+                         "Perfetto trace_event JSON here")
     args = ap.parse_args()
 
     phis = (1, 2, 3) if args.smoke else (1, 2, 3, 4, 6, 8)
@@ -456,7 +482,8 @@ def main():
         "scheduler_slo": scenario_scheduler_slo,
         "preempt_ckpt": scenario_preempt_ckpt,
         "pipeline_gang": scenario_pipeline_gang,
-        "engine_scale": lambda: scenario_engine_scale(args.smoke),
+        "engine_scale": lambda: scenario_engine_scale(
+            args.smoke, trace_out=args.trace_out),
     }
     cells = (args.cell,) if args.cell else SCENARIOS
 
@@ -508,6 +535,10 @@ def main():
             f"({es['array']['events_per_sec']:.0f} ev/s array vs "
             f"{es['legacy']['events_per_sec']:.0f} legacy, "
             f"bit_identical={es['bit_identical']})")
+        digest.append(
+            f"recorder overhead {es['recorder']['overhead_ratio']}x "
+            f"({es['recorder']['events_per_sec']:.0f} ev/s, "
+            f"read_only={es['recorder']['identical_events']})")
     print(f"\nappended to {args.out}  ({', '.join(digest)})")
 
 

@@ -1,0 +1,98 @@
+"""Flight-recording a scheduled run: spans, decisions, bottlenecks,
+and where each job's completion time actually went.
+
+The pinned preempt-ckpt cell from `cluster_operations.py` — a Poisson
+stream of mixed analytics/shuffle jobs plus two urgent mid-stream
+arrivals on an 8-node / 2-rack / 2:1-core cluster with two storage
+nodes, under checkpointing priority preemption — runs once more, this
+time with a `repro.sim.obs.FlightRecorder` attached to both the
+scheduler and the engine underneath it.  The recorder is opt-in and
+read-only: the event trace is byte-identical to the unrecorded run
+(the obs CI lane asserts this), it just *also* captures every task
+span (queued/running/spilling/restoring/done), every scheduler
+decision with its reason and candidate placements, and the exact
+piecewise-constant per-resource rate curves at allocator re-solve
+boundaries.
+
+Three views come out of one recording:
+
+  * the scheduler's decision log — who was admitted, backfilled,
+    preempted (and why), with the spill site chosen per victim;
+  * the resource bottleneck table — delivered work, utilization and
+    time-at-saturation per resource, ranked;
+  * per-job critical-path attribution — each JCT decomposed into
+    queue + compute + fabric + spill/restore + pipeline-bubble
+    seconds (the partition is exact: the engine asserts the sum
+    equals the JCT), joined into `gang_summary` for gang jobs.
+
+The Perfetto export lands next to this script as
+``flight_recorder_trace.json`` — drop it on https://ui.perfetto.dev
+to scrub through the run: one lane per node, counter tracks for every
+resource, instant marks for the decisions.
+
+    PYTHONPATH=src python examples/flight_recorder.py
+"""
+import json
+import pathlib
+
+from repro.sim import Fabric, lovelock_cluster
+from repro.sim.obs import (FlightRecorder, bottlenecks,
+                           job_attribution, render_attribution,
+                           render_bottlenecks, to_json, validate_trace)
+from repro.sim.sched import (ClusterScheduler, gang_summary,
+                             reference_preempt_stream, slo_summary)
+
+OUT = pathlib.Path(__file__).resolve().parent / "flight_recorder_trace.json"
+
+
+def make_topo():
+    return lovelock_cluster(
+        8, 1, accel_rate=1.0, storage_nodes=2,
+        fabric=Fabric(rack_size=5, oversubscription=2.0,
+                      core_oversubscription=2.0))
+
+
+def main():
+    recorder = FlightRecorder()
+    sched = ClusterScheduler(make_topo(), "preempt-ckpt",
+                             recorder=recorder)
+    sr = sched.run(reference_preempt_stream())
+    slo = slo_summary(sr)
+    print(f"preempt-ckpt cell: {slo['n_completed']}/{slo['n_jobs']} "
+          f"jobs, makespan {slo['makespan_s']:.2f}s, "
+          f"p99 JCT {slo['p99_jct_s']:.2f}s — recorded "
+          f"{len(recorder.tasks)} tasks / {recorder.n_spans()} spans / "
+          f"{len(recorder.decisions)} decisions")
+
+    print("\ndecision log (admissions, rejections, preemptions):")
+    for d in recorder.decisions:
+        if d.kind in ("submit", "done"):
+            continue
+        where = f" -> {','.join(d.nodes)}" if d.nodes else ""
+        why = f" [{d.reason}]" if d.reason else ""
+        site = f" spill->{d.site}" if d.site else ""
+        print(f"  t={d.t:7.2f}  {d.kind:8s} {d.jid}{where}{why}{site}")
+
+    print("\nresource bottlenecks:")
+    print(render_bottlenecks(bottlenecks(recorder, top=8)))
+
+    print("\nper-job critical-path attribution (sums to JCT exactly):")
+    print(render_attribution(job_attribution(sr, recorder)))
+
+    gangs = gang_summary(sr, recorder=recorder)
+    for gid, row in sorted(gangs.items()):
+        if "attribution" in row:
+            a = row["attribution"]
+            print(f"\ngang {gid}: bubble {row['bubble_fraction']:.1%} "
+                  f"of span; attribution bubble {a['bubble_s']:.2f}s "
+                  f"of {a['jct_s']:.2f}s JCT")
+
+    payload = to_json(recorder)
+    validate_trace(json.loads(payload))
+    OUT.write_text(payload)
+    print(f"\nPerfetto trace written to {OUT} ({len(payload)} bytes) — "
+          f"load at https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ Rule families (stable codes; suppress per line with
   FLOAT001    exact float == / != (bit-exact modules whitelisted via
               [tool.simlint] per-module)
   STATE001    module-level mutable state mutated from sim/sched code
+  OBS001      bare print() in sim code (route through repro.sim.obs)
 
 Importing this package loads every rule module, filling the registry.
 """
@@ -21,7 +22,7 @@ from repro.analysis.config import SimlintConfig, load_config
 from repro.analysis.core import (Finding, LintResult, RULES,
                                  SCHEMA_VERSION, lint_paths, lint_source)
 from repro.analysis import (rules_det, rules_float,  # noqa: F401 (register)
-                            rules_state, rules_unit)
+                            rules_obs, rules_state, rules_unit)
 from repro.analysis.reporting import (render_json, render_rules,
                                       render_text)
 

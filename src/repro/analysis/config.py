@@ -9,6 +9,7 @@ directory, and match by exact-file or directory prefix):
     timed-paths = ["src/repro/sim"]   # DET002 scope (wall-clock rules)
     ordered-paths = ["src/repro/sim/engine.py"]   # DET004 scope
     state-paths = ["src/repro/sim"]   # STATE001 scope
+    output-paths = ["src/repro/sim"]  # OBS001 scope (bare print())
 
     [tool.simlint.per-module]
     "src/repro/sim/alloc.py" = ["FLOAT001"]   # codes disabled there
@@ -36,6 +37,7 @@ DEFAULT_INCLUDE = ["src"]
 DEFAULT_TIMED = ["src/repro/sim", "src/repro/launch", "benchmarks"]
 DEFAULT_ORDERED = ["src/repro/sim"]
 DEFAULT_STATE = ["src/repro/sim"]
+DEFAULT_OUTPUT = ["src/repro/sim"]
 
 
 def _norm(p: str) -> str:
@@ -59,6 +61,8 @@ class SimlintConfig:
         default_factory=lambda: list(DEFAULT_ORDERED))
     state_paths: List[str] = dataclasses.field(
         default_factory=lambda: list(DEFAULT_STATE))
+    output_paths: List[str] = dataclasses.field(
+        default_factory=lambda: list(DEFAULT_OUTPUT))
     per_module: dict = dataclasses.field(default_factory=dict)
 
     def relpath(self, p) -> str:
@@ -88,6 +92,9 @@ class SimlintConfig:
 
     def in_state_paths(self, rel: str) -> bool:
         return any(_under(rel, _norm(p)) for p in self.state_paths)
+
+    def in_output_paths(self, rel: str) -> bool:
+        return any(_under(rel, _norm(p)) for p in self.output_paths)
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +209,8 @@ def load_config(root: Optional[Path] = None) -> SimlintConfig:
     mapping = {"include": "include", "exclude": "exclude",
                "timed-paths": "timed_paths",
                "ordered-paths": "ordered_paths",
-               "state-paths": "state_paths"}
+               "state-paths": "state_paths",
+               "output-paths": "output_paths"}
     for toml_key, attr in mapping.items():
         if toml_key in table:
             val = table[toml_key]

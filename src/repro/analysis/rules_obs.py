@@ -1,0 +1,40 @@
+"""OBS rule: bare ``print()`` in simulator code.
+
+The flight-recorder layer (`repro.sim.obs`) is the sanctioned output
+path for simulator internals: spans, decisions, and resource curves go
+through a `FlightRecorder` and come out as a versioned trace or a
+rendered table.  A bare ``print()`` inside ``src/repro/sim`` bypasses
+that — it interleaves with benchmark harness output, is invisible to
+the trace consumers, and tends to linger after the debugging session
+that added it.  The rule flags every call to the ``print`` builtin
+within the configured ``output-paths``; deliberate CLI renderers (the
+``python -m repro.sim.obs`` entry point) suppress per line with
+``# simlint: ok[OBS001] why``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import Finding, Rule, register
+
+
+@register
+class BarePrint(Rule):
+    code = "OBS001"
+    name = "bare-print"
+    summary = ("bare print() in simulator code bypasses the flight "
+               "recorder; record via obs.FlightRecorder or render a "
+               "report")
+
+    def check(self, tree, ctx) -> Iterable[Finding]:
+        if not ctx.config.in_output_paths(ctx.path):
+            return
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, self.code,
+                    "print() in sim code: route output through "
+                    "repro.sim.obs (recorder spans / rendered reports)")

@@ -35,6 +35,15 @@ aware placement with priority preemption, incremental admission through
 JCT, goodput, energy-per-job) — `compare_policies` scores policies
 against each other the way `compare_allocators` scores allocators.
 
+The `obs` subpackage is the observability layer: an opt-in
+`obs.FlightRecorder` (``Engine(recorder=...)`` /
+``ClusterScheduler(recorder=...)``) records task spans, scheduler
+decisions, and exact per-resource rate curves at zero cost when
+disabled; `obs.job_attribution` decomposes each job's JCT into
+queue/compute/fabric/spill-restore/bubble seconds along the critical
+path; `obs.to_json` exports a versioned Chrome/Perfetto trace
+(`recorder_overhead` prices the whole layer for the obs CI lane).
+
 Quickstart::
 
     from repro.core.cluster import WorkloadProfile
@@ -65,13 +74,15 @@ from repro.sim.validate import (compare_allocators, compare_backends,
                                 compare_policies,
                                 cross_validate_bigquery,
                                 measure_interference,
-                                pipeline_bubble_report, simulate_mu,
+                                pipeline_bubble_report,
+                                recorder_overhead, simulate_mu,
                                 simulate_plan)
-from repro.sim.report import (append_bench_run, attach_scores,
-                              attach_slo, attach_tenants,
-                              load_bench_history, per_tenant,
-                              perf_digest, render, summarize)
-from repro.sim import sched
+from repro.sim.report import (append_bench_run, attach_attribution,
+                              attach_scores, attach_slo,
+                              attach_tenants, load_bench_history,
+                              per_tenant, perf_digest, render,
+                              summarize)
+from repro.sim import obs, sched
 
 __all__ = [
     "ALLOCATORS", "Engine", "EventKind", "Resource", "SimEvent",
@@ -87,8 +98,10 @@ __all__ = [
     "training_from_trace", "training_with_stragglers",
     "compare_allocators", "compare_backends", "compare_policies",
     "cross_validate_bigquery",
-    "measure_interference", "pipeline_bubble_report", "simulate_mu",
-    "simulate_plan", "append_bench_run", "attach_scores", "attach_slo",
+    "measure_interference", "pipeline_bubble_report",
+    "recorder_overhead", "simulate_mu",
+    "simulate_plan", "append_bench_run", "attach_attribution",
+    "attach_scores", "attach_slo",
     "attach_tenants", "load_bench_history", "per_tenant", "perf_digest",
-    "render", "summarize", "sched",
+    "render", "summarize", "obs", "sched",
 ]

@@ -149,6 +149,7 @@ class DictCore:
         self._delivered = {name: 0.0 for name in resources}
         self._rate: dict = {}
         self._holds: dict = {}
+        self._res_index = {name: i for i, name in enumerate(resources)}
         self.n_solves = 0
         self.flows_solved = 0
 
@@ -223,6 +224,22 @@ class DictCore:
 
     def delivered(self) -> dict:
         return self._delivered
+
+    def resource_rates(self) -> tuple:
+        """Post-`solve` per-resource (delivered rate, hold count)
+        arrays over the engine's stable resource order — the flight
+        recorder's re-solve-boundary sample.  The dict core
+        materializes them from the current flow rates; the array core
+        returns its live arrays for free."""
+        n = len(self._res_index)
+        rates = np.zeros(n)
+        holds = np.zeros(n, dtype=np.int64)
+        for name, h in self._holds.items():
+            holds[self._res_index[name]] = h
+        for tid, r in self._rate.items():
+            for name in self._running[tid]:
+                rates[self._res_index[name]] += r
+        return rates, holds
 
     def stats(self) -> dict:
         return {"backend": self.backend, "n_solves": self.n_solves,
@@ -523,6 +540,14 @@ class ArrayCore:
     def delivered(self) -> dict:
         return {name: float(self._delivered[i])
                 for i, name in enumerate(self.res_names)}
+
+    def resource_rates(self) -> tuple:
+        """Post-`solve` per-resource (delivered rate, hold count)
+        arrays over the engine's stable resource order — these are
+        the live arrays `advance` integrates, returned by reference
+        (callers must not mutate), so the flight recorder's sample is
+        exact and costs nothing to produce."""
+        return self.inflow, self.holds
 
     def stats(self) -> dict:
         return {"backend": self.backend, "n_solves": self.n_solves,

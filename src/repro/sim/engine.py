@@ -180,7 +180,19 @@ class SimResult:
     gang_nodes: dict = dataclasses.field(default_factory=dict)
 
     def events_of(self, kind: EventKind) -> list:
-        return [e for e in self.events if e.kind == kind]
+        """Events of one kind, in trace order.  The per-kind index is
+        built once on first use and rebuilt only if the events list is
+        replaced/resized (results are normally immutable); the common
+        sweep-every-kind consumers stop re-scanning the full trace."""
+        cache = self.__dict__.get("_events_by_kind")
+        if (cache is None
+                or self.__dict__.get("_events_by_kind_n") != len(self.events)):
+            cache = {}
+            for e in self.events:
+                cache.setdefault(e.kind, []).append(e)
+            self.__dict__["_events_by_kind"] = cache
+            self.__dict__["_events_by_kind_n"] = len(self.events)
+        return list(cache.get(kind, ()))
 
     @property
     def total_wasted_work(self) -> float:
@@ -304,7 +316,8 @@ class Engine:
                  allocator: str = "waterfill",
                  spill_route: Optional[Callable[[str, str],
                                                tuple]] = None,
-                 backend: str = "array"):
+                 backend: str = "array",
+                 recorder=None):
         """``spill_route(src_node, dst_node)`` returns the resource
         names a spill/restore transfer between the two nodes must hold
         (`Topology.engine` wires it to NIC tx/rx + the fabric path);
@@ -312,7 +325,11 @@ class Engine:
         reset semantics — the engine alone has no route to storage.
         ``backend`` picks the numeric core: ``"array"`` (default) is the
         incremental vectorized hot loop, ``"legacy"`` the original dict
-        reference (see `repro.sim.alloc`)."""
+        reference (see `repro.sim.alloc`).  ``recorder`` is an optional
+        `repro.sim.obs.FlightRecorder`: when attached, the run records
+        task spans, node events, and exact per-resource rate curves;
+        when ``None`` (default) no per-event observability work happens
+        and the replayed trace is byte-identical."""
         self.resources = {r.name: r for r in resources}
         self.resource_index = {name: i
                                for i, name in enumerate(self.resources)}
@@ -326,6 +343,7 @@ class Engine:
         self.backend = backend
         self._alloc = _ALLOC_FNS[allocator]
         self.spill_route = spill_route
+        self.recorder = recorder
         self._injected: list = []   # (time, EventKind, node), insert order
         self._submissions: list = []   # (time, task tuple), insert order
         self._callbacks: list = []     # (time, fn), insert order
@@ -466,6 +484,9 @@ class Engine:
                 n_deps[t.tid] = nd
                 if nd == 0:
                     ready.append(t.tid)
+            if rec is not None:
+                for t in new_tasks:
+                    rec.task_queued(now, t)
 
         def blocked(t: Task) -> bool:
             """A task is blocked when any node it touches is down: its
@@ -483,6 +504,8 @@ class Engine:
             """Add to the running set (and the core's incidence)."""
             running[tid] = t
             core.start(tid, t)
+            if rec is not None:
+                rec.task_start(now, tid)
             if t.gang_id:
                 if t.gang_id not in gang_start:
                     gang_start[t.gang_id] = now
@@ -576,9 +599,14 @@ class Engine:
                                    tuple(self.spill_route(t.node,
                                                           spill_to)),
                                    t.state_bytes, node=t.node)])
+                    if rec is not None:
+                        rec.task_preempt(now, tid, spill_to=spill_to,
+                                         spill_tid=sid)
                 else:
                     waste(tid)
                     core.set_remaining(tid, float(t.work))
+                    if rec is not None:
+                        rec.task_preempt(now, tid)
             return True
 
         def resume(tid: str) -> bool:
@@ -613,6 +641,8 @@ class Engine:
                                    tuple(self.spill_route(site, t.node)),
                                    t.state_bytes, deps=(sid,),
                                    node=t.node)])
+                    if rec is not None:
+                        rec.task_resume(now, tid, restore_tid=rid)
                 elif t.gang_id and gang_held(t.gang_id):
                     # no state of its own to restore, but gang peers are
                     # still spilled/restoring: hold at the barrier (the
@@ -622,6 +652,8 @@ class Engine:
                     if tid not in wait:
                         wait.append(tid)
                 else:
+                    if rec is not None:
+                        rec.task_resume(now, tid)
                     parked.remove(tid)
                     if blocked(t):
                         held.append(tid)
@@ -634,6 +666,10 @@ class Engine:
                       call_at=lambda at, fn: push(max(float(at), now),
                                                   ("control", fn)))
 
+        rec = self.recorder
+        if rec is not None:
+            rec.begin_run(self.resources, allocator=self.allocator,
+                          backend=self.backend)
         register(initial)
         admit()
         while running or timed:
@@ -643,6 +679,11 @@ class Engine:
             # re-solve here — and a step with an unchanged running set
             # costs none on the array backend
             core.solve()
+            if rec is not None:
+                # sample exactly at the re-solve boundary: the curves
+                # are the rates the core will integrate over [now,
+                # now+dt), so breakpoints are exact, never polled
+                rec.sample_resources(now, core)
             dt = core.min_dt()
             if timed:
                 dt = min(dt, timed[0][0] - now)
@@ -674,6 +715,8 @@ class Engine:
                 if item[0] == "node":
                     _, kind, node = item
                     events.append(SimEvent(t_ev, kind, node))
+                    if rec is not None:
+                        rec.node_event(t_ev, kind.value, node)
                     if kind == EventKind.NODE_FAIL:
                         down.add(node)
                         lost = [tid for tid, t in running.items()
@@ -684,6 +727,8 @@ class Engine:
                             core.set_remaining(tid,
                                                float(by_id[tid].work))
                             held.append(tid)
+                            if rec is not None:
+                                rec.task_reset(t_ev, tid)
                     else:
                         down.discard(node)
                         back = [tid for tid in held
@@ -706,6 +751,8 @@ class Engine:
                 drop(tid)
                 done[tid] = now
                 events.append(SimEvent(now, t.kind, tid))
+                if rec is not None:
+                    rec.task_done(now, tid)
                 if t.gang_id:
                     gang_end[t.gang_id] = now
                 for dep in dependents[tid]:
@@ -767,6 +814,8 @@ class Engine:
             if ready:
                 admit()
 
+        if rec is not None:
+            rec.end_run(now)
         complete = len(done) == len(by_id)
         delivered = core.delivered()
         utilized = {name: (delivered[name] / res.capacity

@@ -1,0 +1,49 @@
+"""Observability for the simulated cluster: the flight recorder.
+
+Quickstart::
+
+    from repro.sim import Fabric, lovelock_cluster
+    from repro.sim.obs import (FlightRecorder, job_attribution,
+                               to_json, validate_trace)
+    from repro.sim.sched import ClusterScheduler, reference_preempt_stream
+
+    topo = lovelock_cluster(8, 1, accel_rate=1.0, storage_nodes=2,
+                            fabric=Fabric(rack_size=5))
+    rec = FlightRecorder()
+    sr = ClusterScheduler(topo, "preempt-ckpt", recorder=rec).run(
+        reference_preempt_stream())
+    attr = job_attribution(sr, rec)      # per-job JCT decomposition
+    trace_json = to_json(rec)            # Perfetto trace_event bytes
+
+``python -m repro.sim.obs --cell preempt_ckpt --out trace.json`` runs
+a pinned cell with the recorder on, prints the top-N bottleneck table
+and per-job attribution, and writes the Perfetto trace (load it at
+https://ui.perfetto.dev or chrome://tracing).
+"""
+from repro.sim.obs.critical_path import (CATEGORIES, attribute_span,
+                                         job_attribution)
+from repro.sim.obs.recorder import (DecisionRecord, FlightRecorder,
+                                    TaskRecord)
+from repro.sim.obs.trace import (TRACE_SCHEMA, TRACE_SCHEMA_VERSION,
+                                 bottlenecks, export_trace,
+                                 render_attribution,
+                                 render_bottlenecks, series_integral,
+                                 to_json, validate_trace)
+
+__all__ = [
+    "CATEGORIES",
+    "DecisionRecord",
+    "FlightRecorder",
+    "TRACE_SCHEMA",
+    "TRACE_SCHEMA_VERSION",
+    "TaskRecord",
+    "attribute_span",
+    "bottlenecks",
+    "export_trace",
+    "job_attribution",
+    "render_attribution",
+    "render_bottlenecks",
+    "series_integral",
+    "to_json",
+    "validate_trace",
+]

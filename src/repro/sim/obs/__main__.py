@@ -1,0 +1,116 @@
+"""Flight-recorder CLI: run a pinned cell, export a Perfetto trace.
+
+    PYTHONPATH=src python -m repro.sim.obs --cell preempt_ckpt \
+        --out trace.json --top 10
+
+Runs the named pinned scheduler cell with a `FlightRecorder`
+attached, validates the Chrome/Perfetto ``trace_event`` export
+against the versioned schema, optionally writes it to ``--out``
+(load at https://ui.perfetto.dev), and prints the top-N resource
+bottleneck table plus the per-job critical-path JCT decomposition.
+
+The cells mirror `benchmarks.bench_sim` pins exactly so traces line
+up with the tracked BENCH numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.sim import Fabric, lovelock_cluster
+from repro.sim.obs import (FlightRecorder, bottlenecks,
+                           job_attribution, render_attribution,
+                           render_bottlenecks, to_json,
+                           validate_trace)
+
+
+def _cell_preempt_ckpt():
+    """The bench ``preempt_ckpt`` pin: 8 nodes / 2 racks / 2 storage
+    / 2:1 core fabric, reference mix + urgent arrivals, preempt-ckpt."""
+    topo = lovelock_cluster(
+        8, 1, accel_rate=1.0, storage_nodes=2,
+        fabric=Fabric(rack_size=5, oversubscription=2.0,
+                      core_oversubscription=2.0))
+    from repro.sim.sched import reference_preempt_stream
+    return topo, reference_preempt_stream(), "preempt-ckpt"
+
+
+def _cell_pipeline_gang():
+    """The bench ``pipeline_gang`` pin: a 4-stage 8-microbatch 1F1B
+    gang preempted by an urgent analytics arrival, preempt-ckpt."""
+    topo = lovelock_cluster(
+        8, 1, accel_rate=1.0, storage_nodes=2,
+        fabric=Fabric(rack_size=5, oversubscription=2.0,
+                      core_oversubscription=2.0))
+    from repro.sim.sched import (analytics_template, pipeline_template,
+                                 trace_stream)
+    jobs = trace_stream([
+        (0.0, pipeline_template(4, microbatches=8)),
+        (8.0, analytics_template(6, priority=5, name="urgent")),
+    ])
+    return topo, jobs, "preempt-ckpt"
+
+
+def _cell_scheduler_slo():
+    """The bench ``scheduler_slo`` pin: Poisson reference stream on
+    8 nodes / rack_size 4, rack-aware packing."""
+    topo = lovelock_cluster(8, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4))
+    from repro.sim.sched import reference_job_stream
+    return topo, reference_job_stream(rate=0.45), "pack"
+
+
+_CELLS = {
+    "preempt_ckpt": _cell_preempt_ckpt,
+    "pipeline_gang": _cell_pipeline_gang,
+    "scheduler_slo": _cell_scheduler_slo,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim.obs",
+        description="run a pinned cell with the flight recorder on "
+                    "and export a Perfetto trace")
+    ap.add_argument("--cell", choices=sorted(_CELLS),
+                    default="preempt_ckpt")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write the Perfetto trace_event JSON here")
+    ap.add_argument("--top", type=int, default=10,
+                    help="bottleneck rows to show")
+    args = ap.parse_args(argv)
+
+    from repro.sim.sched import ClusterScheduler
+    topo, jobs, policy = _CELLS[args.cell]()
+    recorder = FlightRecorder()
+    sr = ClusterScheduler(topo, policy, recorder=recorder).run(jobs)
+
+    payload = to_json(recorder)
+    counts = validate_trace(json.loads(payload))
+    if args.out is not None:
+        args.out.write_text(payload)
+
+    decisions = {}
+    for d in recorder.decisions:
+        decisions[d.kind] = decisions.get(d.kind, 0) + 1
+    attr = job_attribution(sr, recorder)
+
+    print(f"cell={args.cell} policy={policy} "  # simlint: ok[OBS001] CLI renderer
+          f"makespan={recorder.makespan:.2f}s "
+          f"tasks={len(recorder.tasks)} spans={recorder.n_spans()} "
+          f"events={counts}")
+    print(f"decisions: {decisions}")  # simlint: ok[OBS001] CLI renderer
+    print()  # simlint: ok[OBS001] CLI renderer
+    print(render_bottlenecks(bottlenecks(recorder, top=args.top)))  # simlint: ok[OBS001] CLI renderer
+    print()  # simlint: ok[OBS001] CLI renderer
+    print(render_attribution(attr))  # simlint: ok[OBS001] CLI renderer
+    if args.out is not None:
+        print(f"\ntrace written to {args.out} "  # simlint: ok[OBS001] CLI renderer
+              f"({len(payload)} bytes) — load at "
+              "https://ui.perfetto.dev")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

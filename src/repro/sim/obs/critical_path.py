@@ -1,0 +1,221 @@
+"""Critical-path attribution: decompose a job's JCT into seconds.
+
+Given a `FlightRecorder` and a completed job's task set, walk the task
+DAG *backwards* from the job's final completion: at each point the
+walk sits on the task whose finish bounded the job (the critical
+task), charges its running segments to a run category, classifies the
+gaps between segments, and recurses into the dependency whose finish
+bounded the task's start.  Every charged second is a difference of two
+recorded timestamps partitioning ``[arrival, finish]``, so the five
+categories sum to the JCT exactly (asserted to 1e-9 relative):
+
+* ``compute_s`` — critical task running, ``EventKind.COMPUTE``
+* ``fabric_s`` — critical task running, DMA / collective phase
+* ``spill_restore_s`` — gap covered by the critical task's own spill/
+  restore transfers (the priced preemption state movement)
+* ``bubble_s`` — gap where the critical task's gang peers (or their
+  transfers) were active: the member was parked by a gang barrier or
+  the pipeline interleave, not by the scheduler
+* ``queue_s`` — everything else: scheduler queueing before first
+  dispatch, suspension waits while preempted, dependency-ready waits
+
+The walk never needs the engine: it runs entirely off the recorder's
+`TaskRecord` spans, so it works for raw `Engine(recorder=...)` runs
+and for `ClusterScheduler` jobs alike (`job_attribution` adapts a
+`SchedResult`).
+"""
+from __future__ import annotations
+
+CATEGORIES = ("queue_s", "compute_s", "fabric_s",
+              "spill_restore_s", "bubble_s")
+
+# run-segment category by recorded task kind (spill/restore transfers
+# are synthetic DMA tasks named by the engine; they only enter a walk
+# through gap coverage, never as critical tasks of a job)
+_RUN_CAT = {"compute": "compute_s"}
+
+
+def _run_category(tr) -> str:
+    if tr.tid.startswith("~spill:") or tr.tid.startswith("~restore:"):
+        return "spill_restore_s"
+    return _RUN_CAT.get(tr.kind, "fabric_s")
+
+
+# -- interval helpers (closed-open [a, b) pairs) ----------------------------
+
+
+def _merge(ivals):
+    """Sort and merge overlapping/touching intervals."""
+    out = []
+    for a, b in sorted(ivals):
+        if out and a <= out[-1][1]:
+            if b > out[-1][1]:
+                out[-1][1] = b
+        else:
+            out.append([a, b])
+    return out
+
+
+def _clip(ivals, lo, hi):
+    out = []
+    for a, b in ivals:
+        a2, b2 = max(a, lo), min(b, hi)
+        if b2 > a2:
+            out.append([a2, b2])
+    return out
+
+
+def _measure(ivals) -> float:
+    return sum(b - a for a, b in ivals)
+
+
+def _subtract(lo, hi, merged):
+    """Complement of ``merged`` (already merged) within [lo, hi)."""
+    out = []
+    cur = lo
+    for a, b in merged:
+        if a > cur:
+            out.append([cur, min(a, hi)])
+        cur = max(cur, b)
+        if cur >= hi:
+            break
+    if cur < hi:
+        out.append([cur, hi])
+    return out
+
+
+def _intersect(xs, ys):
+    """Intersection of two merged interval lists."""
+    out = []
+    i = j = 0
+    while i < len(xs) and j < len(ys):
+        a = max(xs[i][0], ys[j][0])
+        b = min(xs[i][1], ys[j][1])
+        if b > a:
+            out.append([a, b])
+        if xs[i][1] <= ys[j][1]:
+            i += 1
+        else:
+            j += 1
+    return out
+
+
+# -- the walk ---------------------------------------------------------------
+
+
+def _gang_activity(recorder, gang_id, cache):
+    """Merged intervals where any member of the gang (or a transfer
+    moving a member's state) was running."""
+    if gang_id not in cache:
+        ivals = []
+        for tr in recorder.tasks.values():
+            if tr.gang_id != gang_id:
+                continue
+            ivals.extend(tr.segments)
+            for xid in tr.xfers:
+                xr = recorder.tasks.get(xid)
+                if xr is not None:
+                    ivals.extend(xr.segments)
+        cache[gang_id] = _merge(ivals)
+    return cache[gang_id]
+
+
+def _classify_gap(recorder, tr, x, y, cats, gang_cache) -> None:
+    """Split the gap [x, y) on critical task ``tr`` into
+    spill/restore (its own transfers), bubble (gang peers active) and
+    queue (the residual — exact by construction)."""
+    width = y - x
+    if width <= 0.0:
+        return
+    xfer_ivals = []
+    for xid in tr.xfers:
+        xr = recorder.tasks.get(xid)
+        if xr is not None:
+            xfer_ivals.extend(xr.segments)
+    covered = _clip(_merge(xfer_ivals), x, y)
+    sr = _measure(covered)
+    bubble = 0.0
+    if tr.gang_id:
+        rest = _subtract(x, y, covered)
+        peers = _gang_activity(recorder, tr.gang_id, gang_cache)
+        # tr's own activity never overlaps its own gap, and its own
+        # transfers were already removed from `rest`, so no exclusion
+        # of tr from the gang union is needed
+        bubble = _measure(_intersect(rest, peers))
+    cats["spill_restore_s"] += sr
+    cats["bubble_s"] += bubble
+    cats["queue_s"] += width - sr - bubble
+
+
+def attribute_span(recorder, tids, arrival_s: float, finish_s: float,
+                   *, rel_tol: float = 1e-9) -> dict:
+    """Decompose ``finish_s - arrival_s`` for the task set ``tids``
+    (all completed) into `CATEGORIES`; the sum is asserted to equal
+    the span within ``rel_tol`` (relative to max(1, span))."""
+    tasks = recorder.tasks
+    span = [tid for tid in tids
+            if tid in tasks and tasks[tid].done_s is not None]
+    if not span:
+        raise ValueError("no completed tasks to attribute")
+    cats = dict.fromkeys(CATEGORIES, 0.0)
+    gang_cache: dict = {}
+    # the critical task: latest finisher (tid tiebreak for determinism)
+    _, cur = max((tasks[tid].done_s, tid) for tid in span)
+    cursor = finish_s
+    guard = 10 * len(tasks) + 10
+    while True:
+        guard -= 1
+        if guard < 0:
+            raise RuntimeError("critical-path walk did not terminate")
+        tr = tasks[cur]
+        run_cat = _run_category(tr)
+        for a, b in reversed(tr.segments):
+            if a >= cursor:
+                continue
+            b2 = min(b, cursor)
+            _classify_gap(recorder, tr, b2, cursor, cats, gang_cache)
+            cats[run_cat] += b2 - a
+            cursor = a
+        # what bounded this task's first dispatch: its registration or
+        # its latest-finishing dependency
+        dep, dep_done = None, None
+        for d in tr.deps:
+            dr = tasks.get(d)
+            if dr is None or dr.done_s is None:
+                continue
+            if dep is None or (dr.done_s, d) > (dep_done, dep):
+                dep, dep_done = d, dr.done_s
+        anchor = tr.queued_s if dep is None else max(dep_done,
+                                                    tr.queued_s)
+        if anchor < cursor:
+            _classify_gap(recorder, tr, anchor, cursor, cats,
+                          gang_cache)
+            cursor = anchor
+        if dep is not None and dep_done >= tr.queued_s:
+            cur = dep
+            continue
+        # reached the job's first dispatchable constraint: everything
+        # back to arrival is scheduler queueing
+        cats["queue_s"] += cursor - arrival_s
+        break
+    jct = finish_s - arrival_s
+    total = sum(cats.values())
+    assert abs(total - jct) <= rel_tol * max(1.0, abs(jct)), (
+        f"attribution {total} != jct {jct} ({cats})")
+    return cats
+
+
+def job_attribution(sched_result, recorder) -> dict:
+    """Per-job JCT decomposition for a `SchedResult` run with a
+    recorder attached: jid -> {jct_s, **CATEGORIES} for every
+    completed job, in jid order."""
+    out = {}
+    for rec in sched_result.jobs:
+        if not rec.completed or not rec.task_ids:
+            continue
+        cats = attribute_span(recorder, rec.task_ids,
+                              rec.arrival_s, rec.finish_s)
+        row = {"jct_s": rec.jct_s}
+        row.update(cats)
+        out[rec.job.jid] = row
+    return out

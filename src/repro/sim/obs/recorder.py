@@ -1,0 +1,232 @@
+"""Flight recorder: typed spans, decisions and resource time-series.
+
+`FlightRecorder` is the opt-in observability sink for one simulation
+run.  `Engine(recorder=...)` calls the ``task_*``/``node_event``/
+``sample_resources`` hooks from its main loop (every hook call is
+guarded by ``if recorder is not None`` in the engine, so a run without
+a recorder does literally zero extra per-event work and replays a
+byte-identical trace); `ClusterScheduler(recorder=...)` adds
+`decision` records for every admit/reject/start/backfill/resume/
+preempt the policy takes.  Everything recorded is deterministic: tasks
+in registration order, decisions in issue order, and resource curves
+keyed by the engine's stable topology-ordered resource names — the
+Perfetto export in `repro.sim.obs.trace` is byte-identical across
+``PYTHONHASHSEED`` values because nothing here iterates a set or a
+hash-ordered dict.
+
+Resource time-series are **exact, not polled**: the engine samples
+once per main-loop step, right after the allocator's (incremental)
+re-solve, so every breakpoint is a real rate change at a real event
+boundary.  `sample_resources` compares the core's per-resource inflow
+and hold-count arrays against the previous step with vectorized
+``!=`` and appends a ``[t, value]`` breakpoint only for resources that
+actually changed (equal-value runs coalesce; a same-timestamp batch
+overwrites its own breakpoint), so each curve is the minimal
+piecewise-constant representation of what the allocator delivered.
+
+One recorder records one run: `Engine.run` calls `begin_run` (which
+resets all state) and `end_run` (which closes still-open spans at the
+final clock).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """Span record of one task: queued -> running segment(s) -> done,
+    with the preempt/resume/reset marks and the spill/restore transfer
+    tids (``xfers``) linked to it.  ``segments`` are closed
+    ``[start, end]`` running intervals; a task preempted and resumed
+    carries one segment per admission."""
+    tid: str
+    kind: str                     # EventKind.value
+    node: str
+    gang_id: str
+    deps: tuple
+    queued_s: float
+    segments: list = dataclasses.field(default_factory=list)
+    done_s: Optional[float] = None
+    preempts: list = dataclasses.field(default_factory=list)
+    #                               ^ (t, spill_site or "", spill_tid or "")
+    resumes: list = dataclasses.field(default_factory=list)
+    #                               ^ (t, restore_tid or "")
+    resets: list = dataclasses.field(default_factory=list)  # failure times
+    xfers: list = dataclasses.field(default_factory=list)
+    _open: Optional[float] = dataclasses.field(default=None, repr=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionRecord:
+    """One scheduler decision: ``kind`` is submit / reject / start /
+    backfill / resume / preempt / done; ``candidates`` is the eligible
+    idle node pool the policy considered at decision time; ``site`` the
+    chosen spill target for a spilling preemption."""
+    t: float
+    kind: str
+    jid: str
+    reason: str = ""
+    nodes: tuple = ()
+    candidates: tuple = ()
+    site: Optional[str] = None
+
+
+def _set_point(series: list, t: float, v) -> None:
+    """Append a breakpoint to a piecewise-constant curve, coalescing
+    no-op points and overwriting a same-timestamp batch's earlier
+    value (curves start at an implicit 0 before their first point)."""
+    if series and series[-1][0] == t:
+        prev = series[-2][1] if len(series) > 1 else 0.0
+        if prev == v:
+            series.pop()
+        else:
+            series[-1][1] = v
+        return
+    last = series[-1][1] if series else 0.0
+    if v != last:
+        series.append([t, v])
+
+
+class FlightRecorder:
+    """Observability sink for one `Engine` run (see module docstring).
+
+    Attributes after a run:
+
+    * ``tasks`` — tid -> `TaskRecord`, registration order
+    * ``decisions`` — `DecisionRecord` list, issue order
+    * ``node_events`` — (t, kind, node) failure/recovery marks
+    * ``rate_series`` / ``hold_series`` — resource name ->
+      ``[[t, value], ...]`` piecewise-constant breakpoints (delivered
+      work-units/s summed over the resource's flows, and its hold
+      count), valid until the next breakpoint or ``makespan``
+    * ``resource_caps`` / ``resource_nodes`` — name -> capacity / node
+    * ``makespan`` — the final clock `end_run` saw
+    """
+
+    def __init__(self):
+        self.meta: dict = {}
+        self.resource_names: list = []
+        self.resource_nodes: dict = {}
+        self.resource_caps: dict = {}
+        self.tasks: dict = {}
+        self.decisions: list = []
+        self.node_events: list = []
+        self.rate_series: dict = {}
+        self.hold_series: dict = {}
+        self.makespan: Optional[float] = None
+        self._last_rates = None
+        self._last_holds = None
+        self._rate_lists: list = []
+        self._hold_lists: list = []
+
+    # -- run lifecycle ------------------------------------------------------
+
+    def begin_run(self, resources: dict, *, allocator: str = "",
+                  backend: str = "") -> None:
+        """Reset all state and pin the run's resource universe (the
+        engine's topology-ordered ``{name: Resource}`` mapping)."""
+        self.__init__()
+        self.meta = {"allocator": allocator, "backend": backend}
+        self.resource_names = list(resources)
+        self.resource_nodes = {name: r.node
+                               for name, r in resources.items()}
+        self.resource_caps = {name: float(r.capacity)
+                              for name, r in resources.items()}
+        self.rate_series = {name: [] for name in self.resource_names}
+        self.hold_series = {name: [] for name in self.resource_names}
+        self._rate_lists = [self.rate_series[n]
+                            for n in self.resource_names]
+        self._hold_lists = [self.hold_series[n]
+                            for n in self.resource_names]
+
+    def end_run(self, now: float) -> None:
+        """Close still-open segments (tasks running when the run
+        stalled) at the final clock and pin the makespan."""
+        for tr in self.tasks.values():
+            if tr._open is not None:
+                tr.segments.append([tr._open, now])
+                tr._open = None
+        self.makespan = now
+
+    # -- engine-facing span hooks -------------------------------------------
+
+    def task_queued(self, now: float, task) -> None:
+        self.tasks[task.tid] = TaskRecord(
+            tid=task.tid, kind=task.kind.value, node=task.node,
+            gang_id=task.gang_id, deps=tuple(task.deps), queued_s=now)
+
+    def task_start(self, now: float, tid: str) -> None:
+        self.tasks[tid]._open = now
+
+    def _close(self, now: float, tid: str) -> TaskRecord:
+        tr = self.tasks[tid]
+        if tr._open is not None:
+            tr.segments.append([tr._open, now])
+            tr._open = None
+        return tr
+
+    def task_done(self, now: float, tid: str) -> None:
+        self._close(now, tid).done_s = now
+
+    def task_preempt(self, now: float, tid: str,
+                     spill_to: Optional[str] = None,
+                     spill_tid: Optional[str] = None) -> None:
+        tr = self._close(now, tid)
+        tr.preempts.append((now, spill_to or "", spill_tid or ""))
+        if spill_tid:
+            tr.xfers.append(spill_tid)
+
+    def task_resume(self, now: float, tid: str,
+                    restore_tid: Optional[str] = None) -> None:
+        tr = self.tasks[tid]
+        tr.resumes.append((now, restore_tid or ""))
+        if restore_tid:
+            tr.xfers.append(restore_tid)
+
+    def task_reset(self, now: float, tid: str) -> None:
+        """A node failure reset the task's progress (it re-runs)."""
+        self._close(now, tid).resets.append(now)
+
+    def node_event(self, now: float, kind: str, node: str) -> None:
+        self.node_events.append((now, kind, node))
+
+    # -- resource time-series (one call per engine step) --------------------
+
+    def sample_resources(self, now: float, core) -> None:
+        """Record per-resource rate/hold breakpoints from the core's
+        post-solve state; only changed resources append a point."""
+        rates, holds = core.resource_rates()
+        if self._last_rates is None:
+            n = len(self.resource_names)
+            self._last_rates = np.zeros(n)
+            self._last_holds = np.zeros(n, dtype=np.int64)
+        changed = np.flatnonzero(rates != self._last_rates)
+        if changed.size:
+            for i in changed.tolist():
+                _set_point(self._rate_lists[i], now, float(rates[i]))
+            self._last_rates[changed] = rates[changed]
+        changed = np.flatnonzero(holds != self._last_holds)
+        if changed.size:
+            for i in changed.tolist():
+                _set_point(self._hold_lists[i], now, int(holds[i]))
+            self._last_holds[changed] = holds[changed]
+
+    # -- scheduler-facing decision records ----------------------------------
+
+    def decision(self, now: float, kind: str, jid: str, *,
+                 reason: str = "", nodes: tuple = (),
+                 candidates: tuple = (),
+                 site: Optional[str] = None) -> None:
+        self.decisions.append(DecisionRecord(
+            t=now, kind=kind, jid=jid, reason=reason,
+            nodes=tuple(nodes), candidates=tuple(candidates), site=site))
+
+    # -- small derived views -------------------------------------------------
+
+    def n_spans(self) -> int:
+        """Total recorded running segments across all tasks."""
+        return sum(len(tr.segments) for tr in self.tasks.values())

@@ -1,0 +1,270 @@
+"""Chrome/Perfetto ``trace_event`` export for a `FlightRecorder`.
+
+The export is a plain dict in the Trace Event Format that
+``chrome://tracing`` / https://ui.perfetto.dev load directly:
+
+* one *process* per cluster node (plus ``fabric`` for node-less
+  resources like rack uplinks and the core, and ``scheduler`` for
+  decision marks), announced with ``M`` process_name metadata events;
+* one ``X`` complete event per task running segment (``ts``/``dur``
+  in microseconds), on a per-process lane (``tid``) assigned in task
+  registration order, with gang/kind attribution in ``args``;
+* ``C`` counter events per resource breakpoint — the exact
+  piecewise-constant delivered-rate and hold-count curves;
+* ``i`` instant events for preempt/resume/reset marks, node
+  failures/recoveries, and every scheduler decision.
+
+Everything is emitted in a deterministic order (resources in topology
+order, tasks in registration order, decisions in issue order) and
+`to_json` serializes with sorted keys and canonical separators, so
+the bytes are identical across ``PYTHONHASHSEED`` values and repeat
+runs.  The shape is versioned: ``metadata.schema`` names this format
+and ``metadata.version`` is `TRACE_SCHEMA_VERSION`; `validate_trace`
+checks both plus the per-event invariants and returns event counts.
+"""
+from __future__ import annotations
+
+import json
+
+TRACE_SCHEMA = "repro.sim.obs/trace_event"
+TRACE_SCHEMA_VERSION = 1
+
+_US = 1e6  # seconds -> trace microseconds
+
+_PHASES = ("M", "X", "C", "i")
+_INSTANT_SCOPES = ("g", "p", "t")
+
+
+def _us(t: float) -> float:
+    return t * _US
+
+
+def export_trace(recorder) -> dict:
+    """Build the Trace Event Format dict for one recorded run."""
+    pid_of: dict = {}
+
+    def ensure(proc: str) -> int:
+        if proc not in pid_of:
+            pid_of[proc] = len(pid_of) + 1
+        return pid_of[proc]
+
+    for name in recorder.resource_names:
+        ensure(recorder.resource_nodes[name] or "fabric")
+    for tr in recorder.tasks.values():
+        ensure(tr.node or "fabric")
+    sched_pid = ensure("scheduler")
+
+    events = [
+        {"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+         "args": {"name": proc}}
+        for proc, pid in pid_of.items()
+    ]
+
+    # task spans: one lane per task, assigned per-process in
+    # registration order
+    lanes: dict = {}
+    for tr in recorder.tasks.values():
+        pid = pid_of[tr.node or "fabric"]
+        lane = lanes.get(pid, 0) + 1
+        lanes[pid] = lane
+        for a, b in tr.segments:
+            events.append({
+                "ph": "X", "name": tr.tid, "cat": tr.kind,
+                "pid": pid, "tid": lane,
+                "ts": _us(a), "dur": _us(b - a),
+                "args": {"gang": tr.gang_id, "node": tr.node,
+                         "queued_s": tr.queued_s,
+                         "resets": len(tr.resets)},
+            })
+        for t, site, sid in tr.preempts:
+            events.append({
+                "ph": "i", "s": "t", "name": f"preempt {tr.tid}",
+                "pid": pid, "tid": lane, "ts": _us(t),
+                "args": {"spill_to": site, "xfer": sid},
+            })
+        for t, rid in tr.resumes:
+            events.append({
+                "ph": "i", "s": "t", "name": f"resume {tr.tid}",
+                "pid": pid, "tid": lane, "ts": _us(t),
+                "args": {"xfer": rid},
+            })
+        for t in tr.resets:
+            events.append({
+                "ph": "i", "s": "t", "name": f"reset {tr.tid}",
+                "pid": pid, "tid": lane, "ts": _us(t), "args": {},
+            })
+
+    # exact resource curves as counter tracks
+    for name in recorder.resource_names:
+        pid = pid_of[recorder.resource_nodes[name] or "fabric"]
+        for t, v in recorder.rate_series.get(name, ()):
+            events.append({"ph": "C", "name": f"{name} rate",
+                           "pid": pid, "tid": 0, "ts": _us(t),
+                           "args": {"value": v}})
+        for t, v in recorder.hold_series.get(name, ()):
+            events.append({"ph": "C", "name": f"{name} holds",
+                           "pid": pid, "tid": 0, "ts": _us(t),
+                           "args": {"value": v}})
+
+    for t, kind, node in recorder.node_events:
+        events.append({"ph": "i", "s": "p", "name": f"{kind} {node}",
+                       "pid": pid_of.get(node, sched_pid), "tid": 0,
+                       "ts": _us(t), "args": {}})
+
+    for d in recorder.decisions:
+        events.append({
+            "ph": "i", "s": "p", "name": f"{d.kind} {d.jid}",
+            "pid": sched_pid, "tid": 0, "ts": _us(d.t),
+            "args": {"reason": d.reason, "nodes": list(d.nodes),
+                     "candidates": list(d.candidates),
+                     "site": d.site or ""},
+        })
+
+    return {
+        "displayTimeUnit": "ms",
+        "metadata": {
+            "schema": TRACE_SCHEMA,
+            "version": TRACE_SCHEMA_VERSION,
+            "allocator": recorder.meta.get("allocator", ""),
+            "backend": recorder.meta.get("backend", ""),
+            "makespan_s": recorder.makespan,
+            "n_tasks": len(recorder.tasks),
+            "n_spans": recorder.n_spans(),
+            "n_decisions": len(recorder.decisions),
+        },
+        "traceEvents": events,
+    }
+
+
+def to_json(recorder) -> str:
+    """Canonical byte-stable JSON serialization of `export_trace`."""
+    return json.dumps(export_trace(recorder), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def validate_trace(trace: dict) -> dict:
+    """Validate a trace dict against the versioned schema; raises
+    ``ValueError`` on the first violation, returns per-phase event
+    counts on success."""
+    if not isinstance(trace, dict):
+        raise ValueError("trace must be a dict")
+    meta = trace.get("metadata")
+    if not isinstance(meta, dict):
+        raise ValueError("trace.metadata missing")
+    if meta.get("schema") != TRACE_SCHEMA:
+        raise ValueError(f"schema {meta.get('schema')!r} != "
+                         f"{TRACE_SCHEMA!r}")
+    if meta.get("version") != TRACE_SCHEMA_VERSION:
+        raise ValueError(f"version {meta.get('version')!r} != "
+                         f"{TRACE_SCHEMA_VERSION}")
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        raise ValueError("trace.traceEvents must be a list")
+    counts = {ph: 0 for ph in _PHASES}
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            raise ValueError(f"{where}: not a dict")
+        ph = ev.get("ph")
+        if ph not in counts:
+            raise ValueError(f"{where}: bad phase {ph!r}")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            raise ValueError(f"{where}: bad name")
+        if not isinstance(ev.get("pid"), int):
+            raise ValueError(f"{where}: pid must be int")
+        if not isinstance(ev.get("tid"), int):
+            raise ValueError(f"{where}: tid must be int")
+        if ph != "M":
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                raise ValueError(f"{where}: bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"{where}: bad dur {dur!r}")
+        if ph == "C":
+            args = ev.get("args")
+            if (not isinstance(args, dict)
+                    or not isinstance(args.get("value"),
+                                      (int, float))):
+                raise ValueError(f"{where}: counter needs "
+                                 "numeric args.value")
+        if ph == "i" and ev.get("s") not in _INSTANT_SCOPES:
+            raise ValueError(f"{where}: instant scope "
+                             f"{ev.get('s')!r}")
+        counts[ph] += 1
+    return counts
+
+
+# -- text bottleneck view ---------------------------------------------------
+
+
+def series_integral(series, t_end: float) -> float:
+    """Integral of a piecewise-constant ``[[t, v], ...]`` curve from
+    its first breakpoint (implicitly 0 before it) to ``t_end``."""
+    total = 0.0
+    for i, (t, v) in enumerate(series):
+        t1 = series[i + 1][0] if i + 1 < len(series) else t_end
+        total += v * (t1 - t)
+    return total
+
+
+def _series_time_above(series, t_end: float, thresh: float) -> float:
+    total = 0.0
+    for i, (t, v) in enumerate(series):
+        if v >= thresh:
+            t1 = series[i + 1][0] if i + 1 < len(series) else t_end
+            total += t1 - t
+    return total
+
+
+def bottlenecks(recorder, top: int = 10) -> list:
+    """Per-resource utilization/saturation rows, highest-utilization
+    first (name tiebreak), truncated to ``top``."""
+    makespan = recorder.makespan or 0.0
+    rows = []
+    for name in recorder.resource_names:
+        cap = recorder.resource_caps[name]
+        series = recorder.rate_series.get(name, [])
+        delivered = series_integral(series, makespan)
+        util = (delivered / (cap * makespan)
+                if cap > 0 and makespan > 0 else 0.0)
+        saturated = _series_time_above(
+            series, makespan, cap * (1.0 - 1e-9)) if cap > 0 else 0.0
+        busy = _series_time_above(series, makespan, 1e-12)
+        rows.append({
+            "resource": name,
+            "node": recorder.resource_nodes[name],
+            "capacity": cap,
+            "delivered": delivered,
+            "utilization": util,
+            "busy_s": busy,
+            "saturated_s": saturated,
+        })
+    rows.sort(key=lambda r: (-r["utilization"], r["resource"]))
+    return rows[:top]
+
+
+def render_bottlenecks(rows) -> str:
+    """Fixed-width text table for a `bottlenecks` result."""
+    lines = [f"{'resource':<28} {'node':<10} {'util':>6} "
+             f"{'busy_s':>9} {'sat_s':>9} {'delivered':>11}"]
+    for r in rows:
+        lines.append(
+            f"{r['resource']:<28} {r['node'] or '-':<10} "
+            f"{r['utilization']:>6.1%} {r['busy_s']:>9.2f} "
+            f"{r['saturated_s']:>9.2f} {r['delivered']:>11.2f}")
+    return "\n".join(lines)
+
+
+def render_attribution(attr: dict) -> str:
+    """Fixed-width text table for a `job_attribution` result."""
+    lines = [f"{'job':<14} {'jct_s':>8} {'queue':>8} {'compute':>8} "
+             f"{'fabric':>8} {'spill':>8} {'bubble':>8}"]
+    for jid, row in attr.items():
+        lines.append(
+            f"{jid:<14} {row['jct_s']:>8.2f} {row['queue_s']:>8.2f} "
+            f"{row['compute_s']:>8.2f} {row['fabric_s']:>8.2f} "
+            f"{row['spill_restore_s']:>8.2f} "
+            f"{row['bubble_s']:>8.2f}")
+    return "\n".join(lines)

@@ -76,10 +76,15 @@ def perf_digest(n_events: int, wall_s: float) -> dict:
     the engine-performance number `benchmarks/bench_sim.py` records per
     scenario and the perf CI lane gates on.  ``wall_s`` must come from
     `time.perf_counter` deltas — wall-clock `time.time` is not
-    monotonic and has too little resolution for sub-second runs."""
+    monotonic and has too little resolution for sub-second runs.
+
+    A sub-resolution run (``wall_s`` rounding to 0) reports
+    ``events_per_sec: None`` — JSON null — instead of dividing by zero
+    or emitting ``Infinity``, which is not valid JSON and breaks
+    strict parsers of BENCH_sim.json."""
     return {"n_events": int(n_events), "wall_s": round(wall_s, 3),
             "events_per_sec": round(n_events / wall_s, 1)
-            if wall_s > 0 else float("inf")}
+            if wall_s > 0 else None}
 
 
 def per_tenant(result: SimResult, workload) -> dict:
@@ -122,6 +127,15 @@ def attach_slo(summary: dict, slo: dict, energy: dict = None) -> dict:
     summary["slo"] = slo
     if energy is not None:
         summary["energy"] = energy
+    return summary
+
+
+def attach_attribution(summary: dict, attribution: dict) -> dict:
+    """Attach a per-job critical-path JCT decomposition
+    (`repro.sim.obs.job_attribution`: jid -> {jct_s, queue_s,
+    compute_s, fabric_s, spill_restore_s, bubble_s}) to a scenario
+    summary; `render` shows one line per job."""
+    summary["attribution"] = attribution
     return summary
 
 
@@ -242,4 +256,14 @@ def render(summary: dict) -> str:
         lines.append(
             f"  energy        {en['energy_per_job']:.4g}/job "
             f"provisioned  {en['active_energy_per_job']:.4g}/job active")
+    attr = summary.get("attribution")
+    if attr:
+        for jid, row in sorted(attr.items()):
+            lines.append(
+                f"  jct {jid:14s} {row['jct_s']:.4g} s = "
+                f"queue {row['queue_s']:.4g} + "
+                f"compute {row['compute_s']:.4g} + "
+                f"fabric {row['fabric_s']:.4g} + "
+                f"spill {row['spill_restore_s']:.4g} + "
+                f"bubble {row['bubble_s']:.4g}")
     return "\n".join(lines)

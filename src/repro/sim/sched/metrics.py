@@ -99,12 +99,17 @@ def tenant_summary(sr: SchedResult) -> dict:
     return out
 
 
-def gang_summary(sr: SchedResult) -> dict:
+def gang_summary(sr: SchedResult, *, recorder=None) -> dict:
     """Per-gang digest of one scheduled run: bubble time / fraction
     (member node-seconds idle while a peer member ran — the pipeline
     bubble), span, and — when the gang id is a job id, the scheduler's
     convention for ``gang=True`` templates — that job's JCT, preemption
-    and spill counts.  Empty when the run had no gang-tagged tasks."""
+    and spill counts.  Empty when the run had no gang-tagged tasks.
+
+    With the run's `repro.sim.obs.FlightRecorder` passed as
+    ``recorder``, each job-gang row additionally carries
+    ``attribution``: the critical-path JCT decomposition into
+    queue/compute/fabric/spill-restore/bubble seconds."""
     res = sr.result
     out: dict = {}
     for gang, (t0, t1) in res.gang_spans.items():
@@ -118,6 +123,12 @@ def gang_summary(sr: SchedResult) -> dict:
             "preemptions": rec.preemptions if rec is not None else 0,
             "spills": rec.spills if rec is not None else 0,
         }
+    if recorder is not None:
+        from repro.sim.obs import job_attribution
+        attr = job_attribution(sr, recorder)
+        for gang, row in out.items():
+            if gang in attr:
+                row["attribution"] = attr[gang]
     return out
 
 

@@ -52,17 +52,25 @@ from repro.core import costmodel as cm
 
 @dataclasses.dataclass(frozen=True)
 class Start:
+    """Place a queued job.  ``candidates`` is the eligible idle pool
+    the policy chose ``nodes`` from at decision time — pure
+    observability (the flight recorder logs it with the decision), it
+    changes nothing about placement."""
     jid: str
     nodes: tuple
+    candidates: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
 class Preempt:
     """Suspend a running job.  ``spill=True`` asks the scheduler to
     spill the victim's resumable state to a storage node (restore paid
-    at resume) instead of resetting its in-flight progress."""
+    at resume) instead of resetting its in-flight progress.
+    ``reason`` is an observability tag (why this victim) recorded with
+    the scheduler's decision."""
     jid: str
     spill: bool = False
+    reason: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +168,8 @@ class FifoPolicy:
                     if cluster.is_free(u) and u not in taken]
             nodes = self.place(qj, free, cluster)
             if nodes is not None:
-                acts.append(Start(qj.jid, tuple(nodes)))
+                acts.append(Start(qj.jid, tuple(nodes),
+                                  candidates=tuple(free)))
                 taken.update(nodes)
             elif not self.backfill:
                 break                     # FIFO: the head blocks the line
@@ -276,7 +285,8 @@ class PriorityPreemptPolicy:
                         victimized.add(rj.jid)
                         freed.update(rj.nodes)
             if nodes is not None:
-                acts.append(Start(qj.jid, tuple(nodes)))
+                acts.append(Start(qj.jid, tuple(nodes),
+                                  candidates=tuple(free)))
                 taken.update(nodes)
         return acts
 
@@ -287,7 +297,7 @@ class PriorityPreemptPolicy:
 
     def _make_preempt(self, rj: RunningJob,
                       cluster: ClusterView) -> Preempt:
-        return Preempt(rj.jid)
+        return Preempt(rj.jid, reason="priority")
 
     def _try_preempt(self, qj, pool, free, cluster, victimized):
         """Victims for ``qj``, or (None, ()) when preemption can't help."""
@@ -381,7 +391,9 @@ class CheckpointingPreemptPolicy(PriorityPreemptPolicy):
 
     def _make_preempt(self, rj, cluster):
         _, spill = self._recovery_cost(rj, cluster)
-        return Preempt(rj.jid, spill=spill)
+        return Preempt(rj.jid, spill=spill,
+                       reason=("priority:spill-cheaper" if spill
+                               else "priority:reset-cheaper"))
 
 
 def make_policy(name: str):

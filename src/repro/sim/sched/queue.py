@@ -180,7 +180,8 @@ class ClusterScheduler:
     def __init__(self, topo, policy: Union[str, object] = "pack", *,
                  allocator: str = "waterfill", admission: bool = False,
                  backend: str = "array",
-                 tenant_limits: Optional[dict] = None):
+                 tenant_limits: Optional[dict] = None,
+                 recorder=None):
         self.topo = topo
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
@@ -191,6 +192,10 @@ class ClusterScheduler:
             raise ValueError("tenant_limits is an admission-control "
                              "feature; pass admission=True to enable it")
         self.tenant_limits = dict(tenant_limits or {})
+        # optional repro.sim.obs.FlightRecorder: threaded into the
+        # engine for task spans + resource curves, and fed a decision
+        # record for every admit/reject/start/backfill/resume/preempt
+        self.recorder = recorder
 
     def run(self, jobs: Iterable[Job],
             engine: Optional[object] = None) -> SchedResult:
@@ -202,8 +207,13 @@ class ClusterScheduler:
         consumed: re-running or re-scheduling it would replay stale
         callbacks against finalized records, and is refused."""
         topo, policy = self.topo, self.policy
+        fr = self.recorder
         engine = engine if engine is not None else \
-            topo.engine(self.allocator, backend=self.backend)
+            topo.engine(self.allocator, backend=self.backend,
+                        recorder=fr)
+        if fr is not None and getattr(engine, "recorder", None) is None:
+            # a caller-supplied engine joins the same recorder
+            engine.recorder = fr
         if getattr(engine, "_sched_bound", False):
             raise ValueError(
                 "this engine already carries a scheduler's callbacks "
@@ -248,9 +258,11 @@ class ClusterScheduler:
                     gang=job.template.gang))
             return out
 
-        def apply_start(jid: str, nodes: tuple, ctl) -> None:
+        def apply_start(jid: str, nodes: tuple, ctl,
+                        candidates: tuple = ()) -> None:
             rec = records[jid]
-            if jid in suspended:          # resume on the pinned nodes
+            resuming = jid in suspended
+            if resuming:                  # resume on the pinned nodes
                 suspended.discard(jid)
                 if rec.spill_site is not None:
                     # state streams back from storage before the tasks
@@ -276,6 +288,18 @@ class ClusterScheduler:
                 left[jid] = len(tasks)
                 ctl.submit(tasks)
             pending.remove(jid)
+            if fr is not None:
+                if resuming:
+                    kind = "resume"
+                elif any((records[o].arrival_s, o)
+                         < (rec.arrival_s, jid) for o in pending):
+                    # an earlier arrival is still queued: this start
+                    # jumped the line (SJF/packing backfill)
+                    kind = "backfill"
+                else:
+                    kind = "start"
+                fr.decision(ctl.now, kind, jid, nodes=tuple(nodes),
+                            candidates=tuple(candidates))
             for u in rec.nodes:
                 occupants[u] = jid
             running[jid] = RunningJob(jid=jid, nodes=rec.nodes,
@@ -284,7 +308,8 @@ class ClusterScheduler:
                                       state_bytes=rec.state_bytes_total,
                                       gang=rec.job.template.gang)
 
-        def apply_preempt(jid: str, ctl, spill: bool = False) -> None:
+        def apply_preempt(jid: str, ctl, spill: bool = False,
+                          reason: str = "") -> None:
             rec = records[jid]
             site = None
             # a caller-supplied engine without a spill_route cannot
@@ -296,6 +321,11 @@ class ClusterScheduler:
                 # least-resident storage node takes the state (ties in
                 # topology order), so spills spread across the shelf
                 site = min(resident, key=lambda u: (resident[u], u))
+            if fr is not None:
+                fr.decision(ctl.now, "preempt", jid,
+                            reason=reason or ("spill" if site
+                                              else "reset"),
+                            nodes=rec.nodes, site=site)
             for tid in rec.task_ids:
                 # no-op for finished tasks / tasks on a down node
                 ctl.preempt(tid, spill_to=site)
@@ -323,9 +353,11 @@ class ClusterScheduler:
                     return
                 for act in acts:
                     if isinstance(act, Preempt):
-                        apply_preempt(act.jid, ctl, spill=act.spill)
+                        apply_preempt(act.jid, ctl, spill=act.spill,
+                                      reason=act.reason)
                     elif isinstance(act, Start):
-                        apply_start(act.jid, act.nodes, ctl)
+                        apply_start(act.jid, act.nodes, ctl,
+                                    candidates=act.candidates)
                     else:
                         raise TypeError(f"policy {policy.name!r} "
                                         f"returned {act!r}")
@@ -355,17 +387,26 @@ class ClusterScheduler:
                     # even an idle cluster cannot make the deadline —
                     # shed the job now instead of queueing a sure miss
                     rec.rejected = True
+                    if fr is not None:
+                        fr.decision(ctl.now, "reject", jid,
+                                    reason="deadline-infeasible")
                     return
                 if (self.admission
                         and over_tenant_limit(rec.job.tenant, ctl.now)):
                     # the tenant is over its concurrency or arrival-rate
                     # cap — shed at submit, same as a doomed deadline
                     rec.rejected = True
+                    if fr is not None:
+                        fr.decision(ctl.now, "reject", jid,
+                                    reason="tenant-limit")
                     return
                 tenant = rec.job.tenant
                 in_system[tenant] = in_system.get(tenant, 0) + 1
                 accepted_at.setdefault(tenant, []).append(ctl.now)
                 pending.append(jid)
+                if fr is not None:
+                    fr.decision(ctl.now, "submit", jid,
+                                reason=f"tenant={tenant}")
                 dispatch(ctl)
             return fire
 
@@ -386,6 +427,8 @@ class ClusterScheduler:
                         ctl.preempt(t2, spill_to=rec.spill_site)
                 return
             rec.finish_s = ctl.now
+            if fr is not None:
+                fr.decision(ctl.now, "done", jid, nodes=rec.nodes)
             in_system[rec.job.tenant] = in_system.get(rec.job.tenant,
                                                       1) - 1
             if jid in suspended:

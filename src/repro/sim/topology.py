@@ -166,9 +166,10 @@ class Topology:
         return {r.name: i for i, r in enumerate(self.resources())}
 
     def engine(self, allocator: str = "waterfill",
-               backend: str = "array") -> Engine:
+               backend: str = "array", recorder=None) -> Engine:
         return Engine(self.resources(), allocator=allocator,
-                      spill_route=self.spill_route, backend=backend)
+                      spill_route=self.spill_route, backend=backend,
+                      recorder=recorder)
 
     def spill_route(self, src: str, dst: str) -> tuple:
         """Resources a preemption spill/restore transfer holds between

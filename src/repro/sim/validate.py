@@ -184,6 +184,54 @@ def compare_backends(make_topo, build, *,
     return out
 
 
+def recorder_overhead(make_topo, build, *,
+                      allocator: str = "waterfill",
+                      backend: str = "array") -> dict:
+    """One workload with and without a flight recorder attached — the
+    observability-cost cell the ``obs`` CI lane gates on.
+
+    ``make_topo()``/``build(topo)`` as in `compare_allocators`.  Runs
+    the same workload twice on ``backend`` (recorder off, then on with
+    a fresh `repro.sim.obs.FlightRecorder`) and returns per-mode
+    ``wall_s``/``n_events``/``events_per_sec`` digests,
+    ``overhead_ratio`` (events/sec with recorder over without — the
+    fraction of throughput observability costs), ``identical_events``
+    (the recorder must be read-only: both event traces and finish
+    times match exactly), ``n_spans`` (recorded running segments), and
+    the ``recorder`` itself plus raw ``results`` for trace export (pop
+    both before JSON-serializing).
+    """
+    import time
+
+    from repro.sim.obs import FlightRecorder
+
+    out: dict = {"results": {}, "allocator": allocator,
+                 "backend": backend}
+    recorder = FlightRecorder()
+    for mode, rec in (("off", None), ("on", recorder)):
+        topo = make_topo()
+        tasks = build(topo)
+        eng = topo.engine(allocator=allocator, backend=backend,
+                          recorder=rec)
+        t0 = time.perf_counter()
+        res = eng.run(tasks)
+        wall = time.perf_counter() - t0
+        if not res.complete:
+            raise RuntimeError(f"recorder-{mode} run stalled")
+        out["results"][mode] = res
+        out[mode] = {"wall_s": wall, "n_events": len(res.events),
+                     "events_per_sec": len(res.events) / wall
+                     if wall > 0 else None}
+    on, off = out["results"]["on"], out["results"]["off"]
+    out["identical_events"] = (on.events == off.events
+                               and on.finish_times == off.finish_times)
+    out["overhead_ratio"] = (out["on"]["events_per_sec"]
+                             / out["off"]["events_per_sec"])
+    out["n_spans"] = recorder.n_spans()
+    out["recorder"] = recorder
+    return out
+
+
 def pipeline_bubble_report(make_topo, *, stages: int = 4,
                            microbatches: int = 8,
                            schedules=("1f1b", "gpipe"),

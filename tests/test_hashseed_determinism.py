@@ -37,9 +37,30 @@ json.dump(trace, sys.stdout, sort_keys=True)
 """
 
 
-def _run(hashseed: str) -> str:
+# same contract for the observability layer: a scheduled cell with
+# preemption runs under a FlightRecorder and the child prints the full
+# Perfetto export — span lanes, counter series, decision instants and
+# the per-job attribution all sit downstream of dict/set iteration, so
+# a hash-order leak anywhere in repro.sim.obs shows up as a byte diff
+_OBS_CHILD = r"""
+import sys
+from repro.sim import Fabric, lovelock_cluster
+from repro.sim.obs import FlightRecorder, to_json
+from repro.sim.sched import ClusterScheduler, reference_preempt_stream
+
+topo = lovelock_cluster(8, 1, accel_rate=1.0, storage_nodes=2,
+                        fabric=Fabric(rack_size=5, oversubscription=2.0,
+                                      core_oversubscription=2.0))
+rec = FlightRecorder()
+sched = ClusterScheduler(topo, policy="preempt-ckpt", recorder=rec)
+sr = sched.run(reference_preempt_stream())
+sys.stdout.write(to_json(rec))
+"""
+
+
+def _run(hashseed: str, child: str = _CHILD) -> str:
     proc = subprocess.run(
-        [sys.executable, "-c", _CHILD],
+        [sys.executable, "-c", child],
         env={"PYTHONPATH": str(REPO / "src"),
              "PYTHONHASHSEED": hashseed,
              "PATH": "/usr/bin:/bin"},
@@ -52,3 +73,11 @@ def test_trace_is_byte_identical_across_hash_seeds():
     traces = {seed: _run(seed) for seed in ("0", "42", "1337")}
     assert traces["0"] == traces["42"] == traces["1337"]
     assert '"events"' in traces["0"]  # the child actually produced a trace
+
+
+def test_perfetto_export_is_byte_identical_across_hash_seeds():
+    traces = {seed: _run(seed, _OBS_CHILD) for seed in ("0", "42", "1337")}
+    assert traces["0"] == traces["42"] == traces["1337"]
+    # the child actually produced a versioned trace with span events
+    assert '"traceEvents"' in traces["0"]
+    assert '"ph":"X"' in traces["0"]

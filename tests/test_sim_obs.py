@@ -1,0 +1,284 @@
+"""Flight-recorder contracts: zero-cost opt-in (recorder-on and
+recorder-off runs produce identical event traces), exact resource
+curves (rate-curve integrals equal the engine's delivered-work
+accounting), critical-path attribution that partitions each job's JCT
+exactly, a Perfetto export that validates against its versioned
+schema, and the scheduler's decision log."""
+import json
+
+import pytest
+
+from repro.sim import (Fabric, NodeModel, Topology, lovelock_cluster,
+                       perf_digest, recorder_overhead, shuffle)
+from repro.sim.obs import (CATEGORIES, FlightRecorder,
+                           TRACE_SCHEMA, TRACE_SCHEMA_VERSION,
+                           attribute_span, bottlenecks, export_trace,
+                           job_attribution, render_attribution,
+                           render_bottlenecks, series_integral,
+                           to_json, validate_trace)
+from repro.sim.sched import (ClusterScheduler, analytics_template,
+                             gang_summary, pipeline_template,
+                             reference_preempt_stream, trace_stream)
+
+
+def _shuffle_cell():
+    """Small contended cell with storage spill paths (the hashseed
+    child's cell): 6 workers + 1 storage node."""
+    topo = Topology(
+        [NodeModel(f"n{i}", "smartnic", 1.0, accel_rate=1.0)
+         for i in range(6)]
+        + [NodeModel("st0", "storage", 1.0, accel_rate=0.0, ici_bw=0.0)])
+    tasks = shuffle(topo, cpu_work_per_node=0.25, bytes_per_node=6.0,
+                    tasks_per_node=2, reduce_work_per_node=0.1,
+                    state_bytes=1.0)
+    return topo, tasks
+
+
+def _preempt_cell():
+    """The bench/CLI ``preempt_ckpt`` pin."""
+    topo = lovelock_cluster(
+        8, 1, accel_rate=1.0, storage_nodes=2,
+        fabric=Fabric(rack_size=5, oversubscription=2.0,
+                      core_oversubscription=2.0))
+    return topo, reference_preempt_stream(), "preempt-ckpt"
+
+
+def _pipeline_cell():
+    """The CLI ``pipeline_gang`` pin: a 1F1B gang preempted by an
+    urgent analytics arrival."""
+    topo = lovelock_cluster(
+        8, 1, accel_rate=1.0, storage_nodes=2,
+        fabric=Fabric(rack_size=5, oversubscription=2.0,
+                      core_oversubscription=2.0))
+    jobs = trace_stream([
+        (0.0, pipeline_template(4, microbatches=8)),
+        (8.0, analytics_template(6, priority=5, name="urgent")),
+    ])
+    return topo, jobs, "preempt-ckpt"
+
+
+@pytest.fixture(scope="module")
+def preempt_run():
+    topo, jobs, policy = _preempt_cell()
+    rec = FlightRecorder()
+    sr = ClusterScheduler(topo, policy, recorder=rec).run(jobs)
+    return sr, rec
+
+
+@pytest.fixture(scope="module")
+def pipeline_run():
+    topo, jobs, policy = _pipeline_cell()
+    rec = FlightRecorder()
+    sr = ClusterScheduler(topo, policy, recorder=rec).run(jobs)
+    return sr, rec
+
+
+# ---------------------------------------------------------------------------
+# zero-cost opt-in: the recorder must be read-only
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_is_read_only_and_prices_itself():
+    out = recorder_overhead(lambda: _shuffle_cell()[0],
+                            lambda topo: _shuffle_cell()[1])
+    assert out["identical_events"] is True
+    assert out["n_spans"] > 0
+    assert out["overhead_ratio"] > 0
+    rec = out["recorder"]
+    res = out["results"]["on"]
+    # every completed task got a closed span ending at its finish time
+    for tid, t_fin in res.finish_times.items():
+        tr = rec.tasks[tid]
+        assert tr.done_s == t_fin
+        assert tr.segments and tr.segments[-1][1] == t_fin
+        assert tr._open is None
+
+
+def test_recorder_reuse_resets_state():
+    topo, tasks = _shuffle_cell()
+    rec = FlightRecorder()
+    topo.engine(recorder=rec).run(tasks)
+    first = to_json(rec)
+    topo2, tasks2 = _shuffle_cell()
+    topo2.engine(recorder=rec).run(tasks2)
+    assert to_json(rec) == first  # begin_run wiped the previous run
+
+
+# ---------------------------------------------------------------------------
+# exact resource curves
+# ---------------------------------------------------------------------------
+
+
+def test_rate_curve_integrals_match_delivered_work():
+    topo, tasks = _shuffle_cell()
+    rec = FlightRecorder()
+    res = topo.engine(recorder=rec).run(tasks)
+    assert rec.makespan == res.makespan
+    checked = 0
+    for name in rec.resource_names:
+        got = series_integral(rec.rate_series[name], rec.makespan)
+        want = res.utilized_time.get(name, 0.0) * rec.resource_caps[name]
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-9), name
+        checked += bool(rec.rate_series[name])
+    assert checked > 0  # the cell actually drove resources
+
+
+def test_bottleneck_rows_are_ranked_and_bounded():
+    topo, tasks = _shuffle_cell()
+    rec = FlightRecorder()
+    topo.engine(recorder=rec).run(tasks)
+    rows = bottlenecks(rec, top=5)
+    assert len(rows) == 5
+    utils = [r["utilization"] for r in rows]
+    assert utils == sorted(utils, reverse=True)
+    for r in rows:
+        assert 0.0 <= r["utilization"] <= 1.0 + 1e-9
+        assert r["busy_s"] >= r["saturated_s"] >= 0.0
+    assert "resource" in render_bottlenecks(rows)
+
+
+# ---------------------------------------------------------------------------
+# critical-path attribution partitions the JCT
+# ---------------------------------------------------------------------------
+
+
+def _assert_partitions(sr, rec):
+    attr = job_attribution(sr, rec)
+    done = [r for r in sr.jobs if r.completed]
+    assert len(attr) == len(done)
+    for jrec in done:
+        row = attr[jrec.job.jid]
+        assert row["jct_s"] == pytest.approx(jrec.jct_s, rel=1e-12)
+        total = sum(row[c] for c in CATEGORIES)
+        assert total == pytest.approx(row["jct_s"], rel=1e-9, abs=1e-9)
+        assert all(row[c] >= -1e-9 for c in CATEGORIES)
+    return attr
+
+
+def test_attribution_sums_to_jct_preempt_cell(preempt_run):
+    sr, rec = preempt_run
+    attr = _assert_partitions(sr, rec)
+    # the preempt-ckpt cell spills: somebody pays spill/restore time
+    assert any(row["spill_restore_s"] > 0 for row in attr.values())
+    assert "jct" in render_attribution(attr)
+
+
+def test_attribution_sums_to_jct_pipeline_cell(pipeline_run):
+    sr, rec = pipeline_run
+    attr = _assert_partitions(sr, rec)
+    gangs = gang_summary(sr, recorder=rec)
+    for jid, row in attr.items():
+        if jid in gangs:
+            assert gangs[jid]["attribution"] == row
+
+
+def test_attribute_span_rejects_empty_task_set():
+    rec = FlightRecorder()
+    rec.begin_run({})
+    rec.end_run(1.0)
+    with pytest.raises(ValueError, match="no completed tasks"):
+        attribute_span(rec, [], 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# versioned Perfetto export
+# ---------------------------------------------------------------------------
+
+
+def test_export_validates_and_pins_schema(preempt_run):
+    _, rec = preempt_run
+    trace = export_trace(rec)
+    assert trace["metadata"]["schema"] == TRACE_SCHEMA
+    assert trace["metadata"]["version"] == TRACE_SCHEMA_VERSION == 1
+    counts = validate_trace(trace)
+    assert counts["X"] == rec.n_spans()
+    assert counts["M"] > 0 and counts["C"] > 0 and counts["i"] > 0
+    # canonical serialization round-trips
+    assert json.loads(to_json(rec)) == trace
+
+
+def test_validate_trace_rejects_malformed(preempt_run):
+    _, rec = preempt_run
+    trace = export_trace(rec)
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": trace["traceEvents"]})  # no meta
+    bad = json.loads(to_json(rec))
+    bad["traceEvents"][0]["ph"] = "Z"
+    with pytest.raises(ValueError):
+        validate_trace(bad)
+
+
+# ---------------------------------------------------------------------------
+# scheduler decision log
+# ---------------------------------------------------------------------------
+
+
+def test_decision_log_covers_lifecycle(preempt_run):
+    sr, rec = preempt_run
+    kinds = {d.kind for d in rec.decisions}
+    assert {"submit", "start", "done", "preempt"} <= kinds
+    times = [d.t for d in rec.decisions]
+    assert times == sorted(times)
+    admits = {}  # first admission (start or out-of-order backfill)
+    for d in rec.decisions:
+        if d.kind in ("start", "backfill"):
+            admits.setdefault(d.jid, d)
+    for jrec in sr.jobs:
+        if jrec.completed and not jrec.preemptions:
+            assert tuple(jrec.nodes) == admits[jrec.job.jid].nodes
+    preempts = [d for d in rec.decisions if d.kind == "preempt"]
+    assert all(d.reason.startswith("priority") for d in preempts)
+
+
+def test_reject_decisions_under_admission_guard():
+    topo = lovelock_cluster(4, 1, accel_rate=1.0,
+                            fabric=Fabric(rack_size=4))
+    jobs = trace_stream([
+        (0.0, analytics_template(4, name="wide")),
+        (0.1, analytics_template(4, deadline_s=0.2, name="doomed")),
+    ])
+    rec = FlightRecorder()
+    sr = ClusterScheduler(topo, "pack", admission=True,
+                          recorder=rec).run(jobs)
+    rejects = [d for d in rec.decisions if d.kind == "reject"]
+    assert [r for r in sr.jobs if r.rejected]
+    assert rejects and rejects[0].reason == "deadline-infeasible"
+
+
+# ---------------------------------------------------------------------------
+# CLI and satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_cli_writes_valid_trace(tmp_path, capsys):
+    from repro.sim.obs.__main__ import main
+    out = tmp_path / "trace.json"
+    assert main(["--cell", "pipeline_gang", "--out", str(out),
+                 "--top", "3"]) == 0
+    trace = json.loads(out.read_text())
+    validate_trace(trace)
+    text = capsys.readouterr().out
+    assert "bottleneck" in text or "resource" in text
+    assert "jct" in text
+
+
+def test_events_of_index_is_cached_and_correct():
+    topo, tasks = _shuffle_cell()
+    res = topo.engine().run(tasks)
+    from repro.sim import EventKind
+    for kind in EventKind:
+        want = [e for e in res.events if e.kind == kind]
+        assert res.events_of(kind) == want
+        assert res.events_of(kind) == want  # cached path
+    # the cache must not alias: mutating a returned list is harmless
+    want = [e for e in res.events if e.kind == EventKind.DMA]
+    got = res.events_of(EventKind.DMA)
+    got.clear()
+    assert res.events_of(EventKind.DMA) == want
+
+
+def test_perf_digest_zero_wall_is_json_safe():
+    d = perf_digest(10, 0.0)
+    assert d["events_per_sec"] is None
+    json.dumps(d)  # no Infinity in the output
+    assert perf_digest(10, 2.0)["events_per_sec"] == 5.0

@@ -425,3 +425,33 @@ def test_state001_matrix(snippet, expect):
 def test_state001_out_of_scope_path_is_clean():
     assert lint("REG = []\ndef f(x):\n    REG.append(x)\n",
                 PLAIN_PATH, codes={"STATE001"}) == []
+
+
+# ---------------------------------------------------------------------------
+# OBS001 — bare print() in sim code (output-paths scope)
+# ---------------------------------------------------------------------------
+
+
+def test_obs001_fires_and_suppresses():
+    assert_fires_and_suppresses("""
+        def report(result):
+            print(result.makespan)
+        """, "OBS001", path=SIM_PATH)
+
+
+@pytest.mark.parametrize("snippet,expect", [
+    ("def f(x):\n    print(x)\n", ["OBS001"]),
+    # every call site fires, not just the first
+    ("def f(x):\n    print(x)\n    print(x)\n", ["OBS001", "OBS001"]),
+    # method named print (file-writer style) is not the builtin
+    ("def f(w, x):\n    w.print(x)\n", []),
+    # rendering to a string is the sanctioned path
+    ("def f(rows):\n    return '\\n'.join(rows)\n", []),
+])
+def test_obs001_matrix(snippet, expect):
+    assert lint(snippet, SIM_PATH, codes={"OBS001"}) == expect
+
+
+def test_obs001_out_of_scope_path_is_clean():
+    assert lint("def f(x):\n    print(x)\n",
+                PLAIN_PATH, codes={"OBS001"}) == []
