@@ -9,8 +9,10 @@ stream), the gang-scheduled pipeline cell (1F1B/GPipe bubble fraction
 vs the (p-1)/(m+p-1) analytic, whole-gang preempt wasted work under
 reset vs spill, backend trace identity), the engine-scale events/sec
 cell (array vs legacy hot-loop backends on the pinned 64-node
-pipelined-shuffle-waves workload), plus the closed-form
-cross-validation:
+pipelined-shuffle-waves workload), the engine-xscale cell (the
+256-node ~100k-task timed-queue/solver matrix: calendar vs heap event
+queues, numpy vs jax.jit water-fill, per-phase timing shares), plus
+the closed-form cross-validation:
 
     PYTHONPATH=src python -m benchmarks.bench_sim           # full sweep
     PYTHONPATH=src python -m benchmarks.bench_sim --smoke   # CI lane
@@ -41,8 +43,9 @@ import time
 from repro.core import costmodel as cm
 from repro.core.cluster import WorkloadProfile
 from repro.sim import (Fabric, append_bench_run, compare_allocators,
-                       compare_backends, compare_policies,
-                       cross_validate_bigquery,
+                       compare_backends, compare_engine_variants,
+                       compare_policies, cross_validate_bigquery,
+                       jit_available,
                        lovelock_cluster, measure_interference,
                        multi_tenant, perf_digest,
                        pipeline_bubble_report,
@@ -64,8 +67,10 @@ ART = ROOT / "artifacts" / "dryrun"
 # refuses to append to a history with a different version
 # (v3: per-scenario n_events/events_per_sec, engine_scale cell,
 # perf_counter wall times; v4: engine_scale carries a ``recorder``
-# digest — flight-recorder overhead on the same pinned cell)
-SCHEMA_VERSION = 4
+# digest — flight-recorder overhead on the same pinned cell; v5: the
+# engine_xscale cell — 256-node ~100k-task timed-queue/solver matrix
+# with per-phase timing shares and jit/legacy anchor sub-cells)
+SCHEMA_VERSION = 5
 
 # physical-ish rates for the training scenario (bytes/s)
 NIC_BW = 25e9          # 200 Gb/s NIC
@@ -369,6 +374,150 @@ def scenario_engine_scale(smoke=False, trace_out=None):
     return out
 
 
+def scenario_engine_xscale(smoke=False):
+    """Engine *extreme*-scale cell: 256 nodes / 16x16 racks / 2:1
+    fabric, ~101k `pipelined_shuffle_waves` tasks (waves=22; --smoke
+    drops to waves=14, ~64.5k tasks — same topology, same per-event
+    working set), run as a timed-queue/solver matrix on the array
+    backend.  The final wave arrives as eight staggered deferred
+    `submit` batches, a node fails and recovers mid-run, and 32 control
+    callbacks fire on a fixed cadence — so the cell exercises the timed
+    event queue (push/pop/peek under live rewinds), not just the
+    numeric core.
+
+    Tracked numbers the ``engine-perf`` CI job gates on:
+
+      * ``bit_identical`` — the calendar-queue run must replay the
+        heap-queue reference trace byte-for-byte (correctness first; a
+        perf number from a drifted trace is invalid);
+      * ``calendar`` events/sec — an absolute floor, so the default
+        configuration can't quietly get slower;
+      * ``calendar_speedup`` — best-of-``repeats`` calendar wall over
+        heap wall.  The queue's own push/pop/peek work is a sub-1%
+        share of this cell's wall (``phases`` shows solve dominating;
+        the ``events`` phase is mostly completion handling, identical
+        on both sides), so the true ratio is ~1.0 and the CI floor
+        sits at 0.95 to absorb shared-runner noise — the gate catches
+        a queue that *regresses the engine*, while
+        `tests/test_sim_calq` pins the queue's own semantics.
+
+    Two anchor sub-cells complete the matrix honestly rather than
+    cheaply: ``jit`` runs the jax.jit water-fill solver on a pinned
+    waves=2 slice (~9.2k tasks) of the *same* 256-node topology —
+    bit-identical by construction, recorded non-gating because on CPU
+    XLA the compiled round loop loses to numpy's (scatter + per-round
+    sync dominate; see README) — and ``legacy_anchor`` (full sweep
+    only) prices the dict core on a waves=1 slice, where its O(n)
+    per-event min_dt already costs minutes; running it on the 100k
+    cell would take hours, which *is* the tentpole's motivation."""
+    waves = 14 if smoke else 22
+    n_nodes, rack = 256, 16
+
+    def make_topo():
+        return lovelock_cluster(
+            n_nodes, 1,
+            fabric=Fabric(rack_size=rack, oversubscription=2.0))
+
+    def tasks_of(topo, w):
+        return list(pipelined_shuffle_waves(topo, waves=w,
+                                            tasks_per_node=2,
+                                            jitter=0.35, seed=7))
+
+    def harness(w):
+        """build()/prepare() pair: all waves but the last at t=0, the
+        last wave as deferred contiguous batches (emission order is
+        dependency order, so a batch's deps live in earlier batches)."""
+        def split(topo):
+            tasks = tasks_of(topo, w)
+            n_defer = len(tasks) // w
+            return tasks[:len(tasks) - n_defer], tasks[len(tasks) - n_defer:]
+
+        def build(topo):
+            return split(topo)[0]
+
+        def prepare(eng, topo):
+            defer = split(topo)[1]
+            chunk = (len(defer) + 7) // 8
+            for i in range(8):
+                batch = defer[i * chunk:(i + 1) * chunk]
+                if batch:
+                    eng.submit(batch, at=1.0 + 0.5 * i)
+            eng.inject_failure("nic3", at=0.8, recover_at=1.3)
+            for i in range(32):
+                eng.call_at(0.25 + 0.25 * i, lambda ctl: None)
+
+        return build, prepare
+
+    build, prepare = harness(waves)
+    cmp = compare_engine_variants(
+        make_topo, build,
+        {"heap": dict(backend="array", timed_queue="heap"),
+         "calendar": dict(backend="array", timed_queue="calendar")},
+        repeats=2 if smoke else 3, prepare=prepare)
+    cmp.pop("results")
+    n_tasks = len(tasks_of(make_topo(), waves))
+    out = {
+        "n_nodes": n_nodes,
+        "racks": f"{n_nodes // rack}x{rack}",
+        "fabric": "2:1",
+        "waves": waves,
+        "n_tasks": n_tasks,
+        "n_events": (cmp["heap"]["n_events"]
+                     + cmp["calendar"]["n_events"]),
+        "bit_identical": cmp["bit_identical"]["calendar"],
+        "calendar_speedup": round(cmp["speedup"]["calendar"], 4),
+    }
+    for name in ("heap", "calendar"):
+        v = cmp[name]
+        out[name] = {
+            "wall_s": round(v["wall_s"], 3),
+            "events_per_sec": round(v["events_per_sec"], 1),
+            "queue_resizes": v["alloc_stats"]["queue_resizes"],
+            "mindt_evals": v["alloc_stats"]["mindt_evals"],
+            "mindt_skips": v["alloc_stats"]["mindt_skips"],
+            "phases": v["phases"],
+        }
+
+    # jit anchor: same topology, pinned waves=2 slice, numpy reference
+    jb, jp = harness(2)
+    jcmp = compare_engine_variants(
+        make_topo, jb,
+        {"numpy": dict(backend="array"),
+         "jit": dict(backend="array", solver="jit")},
+        repeats=1, prepare=jp)
+    jcmp.pop("results")
+    out["n_events"] += jcmp["numpy"]["n_events"] + jcmp["jit"]["n_events"]
+    out["jit"] = {
+        "active": jit_available(),
+        "waves": 2,
+        "n_tasks": len(tasks_of(make_topo(), 2)),
+        "bit_identical": jcmp["bit_identical"]["jit"],
+        "speedup_vs_numpy": round(jcmp["speedup"]["jit"], 4),
+        "events_per_sec": round(jcmp["jit"]["events_per_sec"], 1),
+        "n_solves": jcmp["jit"]["alloc_stats"]["n_solves"],
+    }
+
+    if not smoke:
+        lb, lp = harness(1)
+        lcmp = compare_engine_variants(
+            make_topo, lb,
+            {"array": dict(backend="array"),
+             "legacy": dict(backend="legacy")},
+            repeats=1, prepare=lp)
+        lcmp.pop("results")
+        out["n_events"] += (lcmp["array"]["n_events"]
+                            + lcmp["legacy"]["n_events"])
+        out["legacy_anchor"] = {
+            "waves": 1,
+            "n_tasks": len(tasks_of(make_topo(), 1)),
+            "bit_identical": lcmp["bit_identical"]["legacy"],
+            "array_speedup": round(1.0 / lcmp["speedup"]["legacy"], 2),
+            "legacy_events_per_sec": round(
+                lcmp["legacy"]["events_per_sec"], 1),
+        }
+    return out
+
+
 def scenario_pipeline_gang():
     """Gang-scheduled pipeline cell: a 4-stage 1F1B x 8-microbatch
     pipeline-parallel training job (one gang) on an 8-node 2-rack
@@ -452,7 +601,7 @@ def scenario_pipeline_gang():
 
 SCENARIOS = ("shuffle", "scatter_gather", "training", "multi_tenant",
              "analytics_skew", "scheduler_slo", "preempt_ckpt",
-             "pipeline_gang", "engine_scale")
+             "pipeline_gang", "engine_scale", "engine_xscale")
 
 
 def main():
@@ -484,6 +633,7 @@ def main():
         "pipeline_gang": scenario_pipeline_gang,
         "engine_scale": lambda: scenario_engine_scale(
             args.smoke, trace_out=args.trace_out),
+        "engine_xscale": lambda: scenario_engine_xscale(args.smoke),
     }
     cells = (args.cell,) if args.cell else SCENARIOS
 
@@ -539,6 +689,16 @@ def main():
             f"recorder overhead {es['recorder']['overhead_ratio']}x "
             f"({es['recorder']['events_per_sec']:.0f} ev/s, "
             f"read_only={es['recorder']['identical_events']})")
+    if "engine_xscale" in scns:
+        ex = scns["engine_xscale"]
+        digest.append(
+            f"xscale {ex['n_tasks']} tasks: calendar "
+            f"{ex['calendar']['events_per_sec']:.0f} ev/s "
+            f"({ex['calendar_speedup']}x vs heap, "
+            f"bit_identical={ex['bit_identical']}), jit anchor "
+            f"{ex['jit']['speedup_vs_numpy']}x "
+            f"(active={ex['jit']['active']}, "
+            f"bit_identical={ex['jit']['bit_identical']})")
     print(f"\nappended to {args.out}  ({', '.join(digest)})")
 
 

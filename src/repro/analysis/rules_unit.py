@@ -7,6 +7,12 @@ GB/s slot (the exact bug `HardwareSpec`'s old ``nic_gbps`` vs
 ``dram_gbps`` fields invited).  These rules machine-check the naming
 convention wherever inference is confident; see
 `repro.analysis.units` for the algebra and the explicit registry.
+
+Each rule also builds the file's dataclass-field environment
+(`dataclass_field_env`): a field declared ``lat: Seconds`` inside an
+``@dataclass`` body carries its unit into every ``x.lat`` in the file,
+so `HardwareSpec`-style structs are checked even when their field
+names carry no unit suffix.
 """
 from __future__ import annotations
 
@@ -14,7 +20,8 @@ import ast
 from typing import Iterable
 
 from repro.analysis.core import Finding, Rule, register
-from repro.analysis.units import (NAME_UNITS, infer_unit, unit_of_name)
+from repro.analysis.units import (NAME_UNITS, dataclass_field_env,
+                                  infer_unit, unit_of_name)
 
 
 @register
@@ -25,12 +32,13 @@ class MixedUnitArithmetic(Rule):
                "(bytes vs seconds, Gbit/s vs GB/s, ...)")
 
     def check(self, tree, ctx) -> Iterable[Finding]:
+        env = dataclass_field_env(tree)
         for node in ast.walk(tree):
             if not (isinstance(node, ast.BinOp)
                     and isinstance(node.op, (ast.Add, ast.Sub))):
                 continue
-            left = infer_unit(node.left)
-            right = infer_unit(node.right)
+            left = infer_unit(node.left, env)
+            right = infer_unit(node.right, env)
             if left is None or right is None:
                 continue
             if left.conflicts_with(right):
@@ -50,12 +58,13 @@ class BandwidthProduct(Rule):
                "seconds or a count")
 
     def check(self, tree, ctx) -> Iterable[Finding]:
+        env = dataclass_field_env(tree)
         for node in ast.walk(tree):
             if not (isinstance(node, ast.BinOp)
                     and isinstance(node.op, ast.Mult)):
                 continue
-            left = infer_unit(node.left)
-            right = infer_unit(node.right)
+            left = infer_unit(node.left, env)
+            right = infer_unit(node.right, env)
             if left is None or right is None:
                 continue
             if left.is_bandwidth and right.is_bandwidth:
@@ -73,6 +82,7 @@ class DeclaredUnitMismatch(Rule):
                "must return expressions of that unit")
 
     def check(self, tree, ctx) -> Iterable[Finding]:
+        env = dataclass_field_env(tree)
         for node in ast.walk(tree):
             if not isinstance(node, (ast.FunctionDef,
                                      ast.AsyncFunctionDef)):
@@ -83,7 +93,7 @@ class DeclaredUnitMismatch(Rule):
             for ret in ast.walk(node):
                 if not isinstance(ret, ast.Return) or ret.value is None:
                     continue
-                got = infer_unit(ret.value)
+                got = infer_unit(ret.value, env)
                 if got is None or got.dimensionless:
                     continue
                 if got.conflicts_with(declared):

@@ -11,12 +11,21 @@ and divide compose exponents, so ``state_bytes / bw`` infers seconds.
 
 Inference sources, strongest first:
 
-  1. `NAME_UNITS` — the explicit annotation registry for the cost-model
+  1. Dataclass field annotations (`dataclass_field_env`): a field
+     declared ``lat: Seconds`` / ``size: Bytes`` inside an
+     ``@dataclass`` body binds that *field name* to the annotated unit
+     for the rest of the file, so `HardwareSpec`-style structs whose
+     field names carry no suffix still participate in UNIT001-003.
+     Annotations are matched by name (`ANNOTATION_UNITS`), not import
+     resolution — ``Seconds = float`` aliases keep runtime behavior
+     untouched — and a field name annotated with *conflicting* units
+     by two dataclasses in one file drops back to unknown.
+  2. `NAME_UNITS` — the explicit annotation registry for the cost-model
      API (exact identifier names: fields, properties, paper symbols).
-  2. Suffix conventions (`SUFFIX_UNITS`): ``_bytes``, ``_s``/
+  3. Suffix conventions (`SUFFIX_UNITS`): ``_bytes``, ``_s``/
      ``_seconds``, ``_gbit_per_s``/``_gbyte_per_s``, ``_per_s``,
      ``_rate``, ``_bw``, ...
-  3. The one sanctioned conversion idiom: dividing a bit-flavored
+  4. The one sanctioned conversion idiom: dividing a bit-flavored
      quantity by a literal ``8`` (or multiplying a byte-flavored one)
      flips the flavor, so ``nic_gbit_per_s / 8.0`` honestly infers
      GB/s instead of flagging.
@@ -139,6 +148,20 @@ NAME_UNITS = {
 }
 
 
+# Unit-alias annotation names for dataclass fields: ``lat: Seconds``
+# declares the unit the field *name* cannot carry.  Matched by name so
+# ``Seconds = float`` (or any equivalent alias) satisfies the runtime.
+ANNOTATION_UNITS = {
+    "Seconds": SECONDS,
+    "Bytes": BYTES,
+    "Bits": BITS,
+    "BytesPerS": BYTES_PER_S,
+    "BitsPerS": BITS_PER_S,
+    "PerSecond": PER_SECOND,
+    "Bandwidth": BANDWIDTH,
+}
+
+
 def unit_of_name(name: str) -> Optional[Unit]:
     """Unit of one identifier: registry first, then suffix."""
     if name in NAME_UNITS:
@@ -147,6 +170,63 @@ def unit_of_name(name: str) -> Optional[Unit]:
         if name.endswith(suffix) and len(name) > len(suffix):
             return unit
     return None
+
+
+def unit_of_annotation(node: ast.expr) -> Optional[Unit]:
+    """Unit declared by a type annotation: a bare name, a dotted name's
+    last segment, or a string forward reference naming an
+    `ANNOTATION_UNITS` alias.  Anything else (including ``float``) is
+    no declaration."""
+    name = None
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+        name = node.value
+    return ANNOTATION_UNITS.get(name) if name else None
+
+
+def _is_dataclass_decorator(node: ast.expr) -> bool:
+    if isinstance(node, ast.Call):
+        node = node.func
+    return ((isinstance(node, ast.Name) and node.id == "dataclass")
+            or (isinstance(node, ast.Attribute)
+                and node.attr == "dataclass"))
+
+
+def dataclass_field_env(tree: ast.AST) -> dict:
+    """Field-name -> `Unit` environment from the file's dataclasses.
+
+    Walks every ``@dataclass``-decorated class body and records each
+    annotated field whose annotation names an `ANNOTATION_UNITS` alias.
+    The binding is file-local and by *field name*: an attribute access
+    ``spec.lat`` anywhere in the file resolves through it (the same
+    name-matching the suffix convention already relies on).  A field
+    name bound to conflicting units by two dataclasses is dropped —
+    unknown never produces a finding."""
+    env: dict = {}
+    ambiguous: set = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not any(_is_dataclass_decorator(d)
+                   for d in node.decorator_list):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            unit = unit_of_annotation(stmt.annotation)
+            if unit is None:
+                continue
+            name = stmt.target.id
+            if name in env and env[name] != unit:
+                ambiguous.add(name)
+            env[name] = unit
+    for name in sorted(ambiguous):
+        del env[name]
+    return env
 
 
 def _flavor_flip(u: Unit) -> Unit:
@@ -163,22 +243,31 @@ def _is_eight(node: ast.expr) -> bool:
             and node.value == 8)
 
 
-def infer_unit(node: ast.expr) -> Optional[Unit]:
+def infer_unit(node: ast.expr, env: Optional[dict] = None) \
+        -> Optional[Unit]:
     """Infer the unit of an expression, or None when unknown.
 
-    Conservative by construction: any sub-expression that fails to
-    infer poisons the whole expression to unknown, so the UNIT rules
-    only ever act on confident conclusions.
+    ``env`` (from `dataclass_field_env`) maps identifier names to units
+    declared by dataclass field annotations; it outranks the name
+    registry and suffix conventions because it is the file's own
+    explicit declaration.  Conservative by construction: any
+    sub-expression that fails to infer poisons the whole expression to
+    unknown, so the UNIT rules only ever act on confident conclusions.
     """
+    def lookup(name: str) -> Optional[Unit]:
+        if env and name in env:
+            return env[name]
+        return unit_of_name(name)
+
     if isinstance(node, ast.Constant):
         if isinstance(node.value, bool) or not isinstance(
                 node.value, (int, float)):
             return None
         return DIMENSIONLESS
     if isinstance(node, ast.Name):
-        return unit_of_name(node.id)
+        return lookup(node.id)
     if isinstance(node, ast.Attribute):
-        return unit_of_name(node.attr)
+        return lookup(node.attr)
     if isinstance(node, ast.Call):
         name = None
         if isinstance(node.func, ast.Name):
@@ -186,7 +275,7 @@ def infer_unit(node: ast.expr) -> Optional[Unit]:
         elif isinstance(node.func, ast.Attribute):
             name = node.func.attr
         if name in ("float", "int", "abs", "round", "max", "min"):
-            units = [infer_unit(a) for a in node.args]
+            units = [infer_unit(a, env) for a in node.args]
             units = [u for u in units if u is not None]
             if name in ("max", "min") and len(units) == len(node.args) \
                     and units and all(u == units[0] for u in units):
@@ -194,14 +283,15 @@ def infer_unit(node: ast.expr) -> Optional[Unit]:
             if name in ("float", "int", "abs", "round") and units:
                 return units[0]
             return None
-        return unit_of_name(name) if name else None
+        return lookup(name) if name else None
     if isinstance(node, ast.UnaryOp):
-        return infer_unit(node.operand)
+        return infer_unit(node.operand, env)
     if isinstance(node, ast.IfExp):
-        a, b = infer_unit(node.body), infer_unit(node.orelse)
+        a, b = infer_unit(node.body, env), infer_unit(node.orelse, env)
         return a if a == b else None
     if isinstance(node, ast.BinOp):
-        left, right = infer_unit(node.left), infer_unit(node.right)
+        left = infer_unit(node.left, env)
+        right = infer_unit(node.right, env)
         if isinstance(node.op, (ast.Add, ast.Sub)):
             if left is not None and left == right:
                 return left

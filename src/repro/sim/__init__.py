@@ -54,8 +54,12 @@ Quickstart::
     print(p.phi, p.mu, p.cost_ratio)
 """
 from repro.sim.engine import (ALLOCATORS, Engine, EventKind, Resource,
-                              SimEvent, SimResult, Task,
-                              progressive_fill_rates, water_filling_rates)
+                              SimEvent, SimResult, SimulationStalled,
+                              Task, progressive_fill_rates,
+                              water_filling_rates)
+from repro.sim.alloc import BACKENDS, SOLVERS, jit_available
+from repro.sim.calq import (TIMED_QUEUES, CalendarTimedQueue,
+                            HeapTimedQueue, make_timed_queue)
 from repro.sim.topology import (Fabric, NodeModel, Topology,
                                 lovelock_cluster, topology_from_plan,
                                 traditional_cluster)
@@ -71,10 +75,11 @@ from repro.sim.workloads import (PIPELINE_SCHEDULES,
                                  training_from_trace,
                                  training_with_stragglers)
 from repro.sim.validate import (compare_allocators, compare_backends,
+                                compare_engine_variants,
                                 compare_policies,
                                 cross_validate_bigquery,
                                 measure_interference,
-                                pipeline_bubble_report,
+                                pipeline_bubble_report, phase_shares,
                                 recorder_overhead, simulate_mu,
                                 simulate_plan)
 from repro.sim.report import (append_bench_run, attach_attribution,
@@ -85,8 +90,11 @@ from repro.sim.report import (append_bench_run, attach_attribution,
 from repro.sim import obs, sched
 
 __all__ = [
-    "ALLOCATORS", "Engine", "EventKind", "Resource", "SimEvent",
-    "SimResult", "Task", "progressive_fill_rates", "water_filling_rates",
+    "ALLOCATORS", "BACKENDS", "SOLVERS", "TIMED_QUEUES", "jit_available",
+    "CalendarTimedQueue", "HeapTimedQueue", "make_timed_queue",
+    "Engine", "EventKind", "Resource", "SimEvent",
+    "SimResult", "SimulationStalled", "Task",
+    "progressive_fill_rates", "water_filling_rates",
     "Fabric", "NodeModel", "Topology", "lovelock_cluster",
     "topology_from_plan", "traditional_cluster",
     "Instr", "Program", "Stage", "lower",
@@ -96,9 +104,10 @@ __all__ = [
     "skewed_analytics_mix",
     "storage_replay", "synthetic_trace", "trace_from_record",
     "training_from_trace", "training_with_stragglers",
-    "compare_allocators", "compare_backends", "compare_policies",
+    "compare_allocators", "compare_backends",
+    "compare_engine_variants", "compare_policies",
     "cross_validate_bigquery",
-    "measure_interference", "pipeline_bubble_report",
+    "measure_interference", "phase_shares", "pipeline_bubble_report",
     "recorder_overhead", "simulate_mu",
     "simulate_plan", "append_bench_run", "attach_attribution",
     "attach_scores", "attach_slo",

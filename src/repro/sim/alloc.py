@@ -46,6 +46,7 @@ makes component-level caching sound *and* bit-exact.
 from __future__ import annotations
 
 import math
+import time
 from typing import Callable, Dict
 
 import numpy as np
@@ -53,6 +54,17 @@ import numpy as np
 _EPS = 1e-12                       # matches repro.sim.engine._EPS
 
 BACKENDS = ("array", "legacy")
+
+# Water-fill round-loop implementations selectable on the array core:
+# "numpy" is `vector_water_fill`; "jit" routes large components through
+# `vector_water_fill_jit` (jax.jit over the same CSR arrays, bitwise
+# the same rates — see its docstring) and falls back to numpy for small
+# ones (below `_JIT_MIN_FLOWS`, dispatch overhead beats the kernel) or
+# when jax is not importable.  Mixing the two per component is safe
+# precisely because the rates are bitwise equal.
+SOLVERS = ("numpy", "jit")
+
+_JIT_MIN_FLOWS = 192
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +138,146 @@ def vector_water_fill(indptr: np.ndarray, indices: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# jax.jit water-fill (optional solver for the array core)
+# ---------------------------------------------------------------------------
+
+# probed lazily on first use: False when jax is not importable (the
+# engine then silently runs the numpy round loop — no hard dependency),
+# else the compiled kernel + the x64 context manager
+_JIT = {"ready": None}
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _probe_jit() -> bool:
+    if _JIT["ready"] is None:
+        try:
+            import jax
+            from jax import lax
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+        except Exception:               # jax absent or broken: numpy path
+            _JIT["ready"] = False  # simlint: ok[STATE001] memoized probe result
+            return False
+
+        def body(carry):
+            remaining, live, rates, unpinned, n_left, pair_flow, \
+                indices = carry
+            # one bottleneck-freeze round, op-for-op the numpy loop:
+            # IEEE divides, a nan-skipping min (pure selection), exact
+            # float equality for the tie group — so every round's m and
+            # pin set match `vector_water_fill` bitwise
+            fair = remaining / live
+            m = jnp.nanmin(fair)
+            hits = (fair[indices] == m).astype(jnp.int64)
+            pin = (jnp.zeros(rates.shape[0], jnp.int64)
+                   .at[pair_flow].add(hits) > 0) & unpinned
+            rates = jnp.where(pin, m, rates)
+            unpinned = unpinned & ~pin
+            pp = pin[pair_flow].astype(jnp.int64)
+            cnt = jnp.zeros(live.shape[0], jnp.int64).at[indices].add(pp)
+            # np.subtract.at applies one unbuffered subtraction *per
+            # hold*; replicate that exact left fold — k rounds of
+            # `rem - m` for a resource with k pinned holds — instead of
+            # a fused k*m (which rounds differently)
+            remaining = lax.fori_loop(
+                0, cnt.max(),
+                lambda i, rem: jnp.where(i < cnt, rem - m, rem),
+                remaining)
+            remaining = jnp.maximum(remaining, 0.0)
+            live = live - cnt
+            n_left = n_left - pin.sum()
+            return (remaining, live, rates, unpinned, n_left, pair_flow,
+                    indices)
+
+        def kernel(pair_flow, indices, cap, live0, rates0):
+            nf = rates0.shape[0]
+            carry = (cap, live0, rates0,
+                     jnp.ones(nf, bool), jnp.asarray(nf, jnp.int64),
+                     pair_flow, indices)
+            out = lax.while_loop(lambda c: c[4] > 0, body, carry)
+            return out[2]
+
+        # donate the rates buffer (it is the only output, so its input
+        # allocation is reused in place; donating the others would just
+        # warn — they don't alias an output)
+        # simlint: ok[STATE001] compile-once cache of a pure kernel —
+        # write-once per process, never consulted for sim state
+        _JIT["fn"] = jax.jit(kernel, donate_argnums=(4,))  # simlint: ok[STATE001] see above
+        _JIT["x64"] = enable_x64  # simlint: ok[STATE001] see above
+        _JIT["jnp"] = jnp  # simlint: ok[STATE001] see above
+        _JIT["ready"] = True  # simlint: ok[STATE001] see above
+    return _JIT["ready"]
+
+
+def jit_available() -> bool:
+    """True when the optional ``jax.jit`` water-fill kernel compiled.
+
+    `vector_water_fill_jit` (and ``solver="jit"``) silently falls back
+    to the numpy round loop when jax is absent, so benchmarks that
+    *label* a run "jit" must check this instead of trusting the label.
+    """
+    return _probe_jit()
+
+
+def vector_water_fill_jit(indptr: np.ndarray, indices: np.ndarray,
+                          cap: np.ndarray) -> np.ndarray:
+    """`vector_water_fill` with the round loop compiled by ``jax.jit``.
+
+    The kernel replays the numpy allocator's float operation sequence
+    on float64 (under `jax.experimental.enable_x64`): per-round IEEE
+    divides for the fair shares, a selection min, exact-equality tie
+    grouping, and the per-hold sequential capacity subtraction — so the
+    returned rates are bitwise equal to `vector_water_fill` and the
+    solver choice never shows in an event trace.  Falls back to the
+    numpy implementation when jax is not importable.
+
+    To bound recompilation, instances are padded to power-of-two
+    (flows, pairs, resources) buckets with one dummy resource of
+    infinite capacity held by the padding flows: its fair share is inf,
+    which never ties a real round's finite minimum, so the padding pins
+    in exactly one extra final round (at rate inf, sliced off) and no
+    real round's arithmetic sees it.
+    """
+    nf = indptr.size - 1
+    if nf == 0:
+        return np.zeros(0)
+    if not _probe_jit():
+        return vector_water_fill(indptr, indices, cap)
+    counts = np.diff(indptr)
+    pair_flow = np.repeat(np.arange(nf), counts)
+    nres = cap.size
+    npairs = indices.size
+    nf_pad = _next_pow2(nf + 1)
+    n_padf = nf_pad - nf              # >= 1 padding flow
+    nres_pad = _next_pow2(nres + 1)
+    dummy = nres                      # the inf-capacity pad resource
+    npairs_pad = _next_pow2(npairs + n_padf)
+    extra = npairs_pad - npairs       # >= n_padf padding pairs
+    # first padding flow absorbs the surplus pairs, the rest hold one
+    pf_full = np.concatenate([
+        pair_flow,
+        np.full(extra - n_padf + 1, nf, dtype=np.int64),
+        np.arange(nf + 1, nf_pad, dtype=np.int64)])
+    idx_full = np.concatenate([
+        np.asarray(indices, dtype=np.int64),
+        np.full(extra, dummy, dtype=np.int64)])
+    cap_full = np.concatenate([np.asarray(cap, dtype=float),
+                               np.full(nres_pad - nres, np.inf)])
+    live0 = np.bincount(idx_full, minlength=nres_pad)
+    jnp = _JIT["jnp"]
+    with _JIT["x64"]():
+        rates = _JIT["fn"](jnp.asarray(pf_full), jnp.asarray(idx_full),
+                           jnp.asarray(cap_full),
+                           jnp.asarray(live0),
+                           jnp.zeros(nf_pad))
+        out = np.asarray(rates)
+    return out[:nf]
+
+
+# ---------------------------------------------------------------------------
 # Dict reference core (the original hot loop, verbatim)
 # ---------------------------------------------------------------------------
 
@@ -152,6 +304,9 @@ class DictCore:
         self._res_index = {name: i for i, name in enumerate(resources)}
         self.n_solves = 0
         self.flows_solved = 0
+        self.t_solve_s = 0.0       # wall time per hot-loop phase, for
+        self.t_min_dt_s = 0.0      # validate.compare_backends' digest
+        self.t_advance_s = 0.0
 
     # -- per-task progress state -------------------------------------------
 
@@ -176,6 +331,7 @@ class DictCore:
     # -- the numeric hot loop ----------------------------------------------
 
     def solve(self) -> None:
+        t0 = time.perf_counter()
         holds: dict = {}
         flows: dict = {}
         out: dict = {}
@@ -195,16 +351,20 @@ class DictCore:
         if self._running:
             self.n_solves += 1
             self.flows_solved += len(self._running)
+        self.t_solve_s += time.perf_counter() - t0
 
     def min_dt(self) -> float:
+        t0 = time.perf_counter()
         dt = math.inf
         rem = self._remaining
         for tid, r in self._rate.items():
             if r > _EPS:
                 dt = min(dt, rem[tid] / r)
+        self.t_min_dt_s += time.perf_counter() - t0
         return dt
 
     def advance(self, dt: float) -> None:
+        t0 = time.perf_counter()
         rem = self._remaining
         for tid, r in self._rate.items():
             rem[tid] -= r * dt
@@ -212,6 +372,7 @@ class DictCore:
                 self._delivered[name] += r * dt
         for name in self._holds:
             self._busy[name] += dt
+        self.t_advance_s += time.perf_counter() - t0
 
     def finished(self) -> list:
         return [tid for tid in self._running
@@ -242,8 +403,12 @@ class DictCore:
         return rates, holds
 
     def stats(self) -> dict:
-        return {"backend": self.backend, "n_solves": self.n_solves,
-                "flows_solved": self.flows_solved}
+        return {"backend": self.backend, "solver": "numpy",
+                "n_solves": self.n_solves,
+                "flows_solved": self.flows_solved,
+                "t_solve_s": self.t_solve_s,
+                "t_min_dt_s": self.t_min_dt_s,
+                "t_advance_s": self.t_advance_s}
 
 
 # ---------------------------------------------------------------------------
@@ -282,12 +447,18 @@ class ArrayCore:
     backend = "array"
     _INITIAL_SLOTS = 64
     _INITIAL_STRIDE = 8
+    # pseudo-component id for pure delay tasks (no resources, rate 1.0):
+    # they belong to no union-find component but must still contribute
+    # to the memoized min_dt reduction
+    _DELAY = -1
 
-    def __init__(self, resources: Dict[str, object], allocator: str):
+    def __init__(self, resources: Dict[str, object], allocator: str,
+                 solver: str = "numpy"):
         self.res_names = list(resources)
         self.res_list = list(resources.values())
         self.res_index = {n: i for i, n in enumerate(self.res_names)}
         self.allocator = allocator
+        self.solver = solver
         nres = len(self.res_list)
         self.holds = np.zeros(nres, dtype=np.int64)
         self.cap = np.zeros(nres)           # aggregate_rate @ current holds
@@ -316,8 +487,23 @@ class ArrayCore:
         self.rem_map: dict = {}             # remaining while not running
         self.scale_map: dict = {}
         self.dirty_res: set = set()
+        # memoized min_dt state: per-component cached (min time-to-
+        # finish, core clock when computed); components dirtied by
+        # start/stop/set_remaining (their rates or remainings changed
+        # out-of-band) are re-evaluated exactly, clean ones only when
+        # their conservative lower bound could beat the current best —
+        # see `min_dt`
+        self.comp_mindt: dict = {}          # root -> (value, clock)
+        self._mindt_dirty: set = set()      # roots (or _DELAY) to redo
+        self._delay_slots: set = set()      # running no-resource slots
+        self._clock = 0.0                   # cumulative advanced time
         self.n_solves = 0
         self.flows_solved = 0
+        self.mindt_evals = 0                # components evaluated
+        self.mindt_skips = 0                # components bound-skipped
+        self.t_solve_s = 0.0                # wall time per hot-loop phase
+        self.t_min_dt_s = 0.0
+        self.t_advance_s = 0.0
 
     def _grow(self) -> None:
         old = self.remaining.size
@@ -373,6 +559,13 @@ class ArrayCore:
         s = self.tid2slot.get(tid)
         if s is not None:
             self.remaining[s] = value
+            self._mindt_dirty.add(self._comp_of(s))
+
+    def _comp_of(self, s: int) -> int:
+        """The min_dt component a running slot belongs to."""
+        if self.nres_of[s]:
+            return self._find(int(self.pool[s * self.stride]))
+        return self._DELAY
 
     # -- running-set incidence ---------------------------------------------
 
@@ -404,6 +597,11 @@ class ArrayCore:
                 if r2 != root:
                     small = self.comp_flows.pop(r2, None)
                     merged = self.comp_cache.pop(r2, None)
+                    # r2 is no longer a root: its cached component
+                    # minimum (if any) now lives under `root`, which is
+                    # dirtied below
+                    self.comp_mindt.pop(r2, None)
+                    self._mindt_dirty.discard(r2)
                     self.parent[r2] = root
                     if small:
                         self.comp_flows.setdefault(root, set()) \
@@ -421,10 +619,13 @@ class ArrayCore:
                     cmap[rr] = len(cres)
                     cres.append(rr)
             self.dirty_res.update(ridx)
+            self._mindt_dirty.add(root)
             self.rate[s] = 0.0            # set by the next solve
         else:
             self.nres_of[s] = 0
             self.rate[s] = 1.0            # pure delay task
+            self._delay_slots.add(s)
+            self._mindt_dirty.add(self._DELAY)
 
     def stop(self, tid: str) -> None:
         s = self.tid2slot.pop(tid)
@@ -441,8 +642,13 @@ class ArrayCore:
                 cap[r] = res_list[r].aggregate_rate(int(holds[r])) \
                     if holds[r] > 0 else 0.0
             self.dirty_res.update(ridx)
-            self.comp_flows[self._find(ridx[0])].discard(s)
+            root = self._find(ridx[0])
+            self.comp_flows[root].discard(s)
+            self._mindt_dirty.add(root)
             self.nres_of[s] = 0
+        else:
+            self._delay_slots.discard(s)
+            self._mindt_dirty.add(self._DELAY)
         self.slot_tid[s] = None
         self.free.append(s)
 
@@ -462,6 +668,7 @@ class ArrayCore:
         local resource relabelling, and cached capacities."""
         if not self.dirty_res:
             return
+        t0 = time.perf_counter()
         find = self._find
         roots = {find(r) for r in self.dirty_res}
         # a dirty resource with no holders left delivers nothing
@@ -474,6 +681,7 @@ class ArrayCore:
         live_roots = [rt for rt in sorted(roots)
                       if self.comp_flows.get(rt)]
         if not live_roots:
+            self.t_solve_s += time.perf_counter() - t0
             return
         if len(live_roots) == 1:
             g = self.comp_flows[live_roots[0]]
@@ -501,7 +709,14 @@ class ArrayCore:
                                            return_inverse=True)
         cap = self.cap[local_res]
         if self.allocator == "waterfill":
-            vals = vector_water_fill(indptr, indices, cap)
+            # the jit round loop is bitwise equal to the numpy one, so
+            # routing only large components through it (the dispatch
+            # overhead beats the kernel below _JIT_MIN_FLOWS) is
+            # invisible in the trace
+            if self.solver == "jit" and slots.size >= _JIT_MIN_FLOWS:
+                vals = vector_water_fill_jit(indptr, indices, cap)
+            else:
+                vals = vector_water_fill(indptr, indices, cap)
         else:
             vals = vector_progressive_fill(indptr, indices, cap,
                                            self.holds[local_res])
@@ -512,20 +727,90 @@ class ArrayCore:
                                              minlength=local_res.size)
         self.n_solves += 1
         self.flows_solved += slots.size
+        self.t_solve_s += time.perf_counter() - t0
 
-    def min_dt(self) -> float:
-        mask = self.rate > _EPS
+    def _comp_min(self, group) -> float:
+        """Exact min time-to-finish over one component's slots — the
+        same ``remaining / rate`` divides the full-array scan would
+        perform, so the partition min is bitwise the global min."""
+        if not group:
+            return math.inf
+        slots = np.fromiter(group, dtype=np.int64, count=len(group))
+        r = self.rate[slots]
+        mask = r > _EPS
         if not mask.any():
             return math.inf
-        return float((self.remaining[mask] / self.rate[mask]).min())
+        return float((self.remaining[slots][mask] / r[mask]).min())
+
+    def min_dt(self) -> float:
+        """Memoized global min time-to-finish.
+
+        Per component the core caches ``(value, clock)`` — its exact
+        slot-wise minimum and the core clock when it was computed.
+        Components dirtied since (start/stop/set_remaining changed
+        their rates or remainings out-of-band) are re-evaluated
+        exactly.  A *clean* component's slots all advanced at unchanged
+        rates, so in exact arithmetic its minimum is ``value -
+        elapsed``; in floats it can drift below that by accumulated
+        rounding, which the slack term over-covers by many orders of
+        magnitude (relative fp drift is ~1e-13 even over millions of
+        steps).  Clean components are visited in ascending lower-bound
+        order and evaluated exactly only while their bound could still
+        beat the best so far — every skipped component provably has a
+        larger minimum, so the returned value is *bitwise* the full
+        scan's (min is selection, not arithmetic): per-step cost drops
+        from O(running) to O(dirty components + near-minimum ones).
+        """
+        t_in = time.perf_counter()
+        cache = self.comp_mindt
+        clock = self._clock
+        if self._mindt_dirty:
+            find = self._find
+            for rt0 in self._mindt_dirty:
+                rt = rt0 if rt0 == self._DELAY else find(rt0)
+                group = self._delay_slots if rt == self._DELAY \
+                    else self.comp_flows.get(rt)
+                if group:
+                    cache[rt] = (self._comp_min(group), clock)
+                    self.mindt_evals += 1
+                else:
+                    cache.pop(rt, None)
+            self._mindt_dirty.clear()
+        best = math.inf
+        stale = []
+        for rt, (val, t0) in cache.items():
+            elapsed = clock - t0
+            if elapsed == 0.0:
+                if val < best:
+                    best = val
+            else:
+                lb = val - elapsed - 1e-6 * (abs(val) + elapsed + 1.0)
+                stale.append((lb, rt))
+        stale.sort()
+        for i, (lb, rt) in enumerate(stale):
+            if lb >= best:
+                self.mindt_skips += len(stale) - i
+                break
+            group = self._delay_slots if rt == self._DELAY \
+                else self.comp_flows[rt]
+            val = self._comp_min(group)
+            cache[rt] = (val, clock)
+            self.mindt_evals += 1
+            if val < best:
+                best = val
+        self.t_min_dt_s += time.perf_counter() - t_in
+        return best
 
     def advance(self, dt: float) -> None:
         # inactive slots carry rate 0, so one fused array op advances
         # exactly the running flows — same per-element float arithmetic
         # as the dict reference's `remaining[tid] -= r * dt`
+        t0 = time.perf_counter()
         self.remaining -= self.rate * dt
         self._busy[self.holds > 0] += dt
         self._delivered += self.inflow * dt
+        self._clock += dt
+        self.t_advance_s += time.perf_counter() - t0
 
     def finished(self) -> list:
         mask = self.active & (self.remaining <= self.eps_scale)
@@ -550,16 +835,26 @@ class ArrayCore:
         return self.inflow, self.holds
 
     def stats(self) -> dict:
-        return {"backend": self.backend, "n_solves": self.n_solves,
-                "flows_solved": self.flows_solved}
+        return {"backend": self.backend, "solver": self.solver,
+                "n_solves": self.n_solves,
+                "flows_solved": self.flows_solved,
+                "mindt_evals": self.mindt_evals,
+                "mindt_skips": self.mindt_skips,
+                "t_solve_s": self.t_solve_s,
+                "t_min_dt_s": self.t_min_dt_s,
+                "t_advance_s": self.t_advance_s}
 
 
 def make_core(backend: str, resources: Dict[str, object], allocator: str,
-              alloc_fn: Callable[[dict, dict, dict], dict]):
+              alloc_fn: Callable[[dict, dict, dict], dict],
+              solver: str = "numpy"):
     """One fresh numeric core per `Engine.run` call."""
+    if solver not in SOLVERS:
+        raise ValueError(f"unknown solver {solver!r}; "
+                         f"expected one of {SOLVERS}")
     if backend == "legacy":
         return DictCore(resources, alloc_fn)
     if backend == "array":
-        return ArrayCore(resources, allocator)
+        return ArrayCore(resources, allocator, solver=solver)
     raise ValueError(f"unknown backend {backend!r}; "
                      f"expected one of {BACKENDS}")

@@ -1,0 +1,229 @@
+"""Timed-event queues for the engine: binary heap vs calendar queue.
+
+`Engine.run` keeps its *timed* events — node fail/recover, deferred
+`submit` batches, `call_at` control callbacks — in a priority queue
+ordered by ``(at, seq)``: schedule time first, then a monotonically
+increasing sequence number so same-timestamp events fire in insertion
+order.  That total order is part of the byte-identical-trace contract,
+so this module provides two implementations with *identical* pop
+order and lets the engine select one, mirroring the
+`DictCore`/`ArrayCore` backend pattern in `repro.sim.alloc`:
+
+  * `HeapTimedQueue`     — the original ``heapq`` loop, verbatim.
+                           O(log n) push/pop; kept as the bit-exact
+                           reference (``Engine(timed_queue="heap")``)
+                           and the perf baseline.
+  * `CalendarTimedQueue` — the default (``timed_queue="calendar"``).
+                           A bucketed calendar queue [Brown 1988]:
+                           events hash into ``n_buckets`` time slices
+                           of ``width`` seconds each (bucket =
+                           ``floor(at / width) % n_buckets``), kept
+                           sorted per bucket; pops sweep the calendar
+                           window by window, so push and pop are O(1)
+                           amortized when the bucket count tracks the
+                           event count — which `_resize` maintains by
+                           doubling/halving the calendar and re-fitting
+                           the width to the live events' span.
+
+Correctness never leans on the calendar being well-tuned: the sweep
+only trusts a bucket head that falls inside the current window, and
+after one full lap without a hit it falls back to a direct min scan
+over all bucket heads (the far-future-outlier path), so any event
+distribution pops in exact ``(at, seq)`` order — `tests/test_sim_calq`
+drives both queues through random mixes, dense same-timestamp batches
+and outlier-triggered resizes asserting byte-identical order.
+
+Both queues reject non-finite times: a NaN/inf schedule time has no
+place on a calendar (the heap would accept inf silently and strand the
+event, which is strictly worse than refusing it).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from bisect import insort
+
+TIMED_QUEUES = ("calendar", "heap")
+
+
+class HeapTimedQueue:
+    """The engine's original ``heapq`` timed-event loop, verbatim."""
+
+    name = "heap"
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, at: float, item) -> None:
+        if not math.isfinite(at):
+            raise ValueError(f"timed event at non-finite time {at!r}")
+        heapq.heappush(self._heap, (at, self._seq, item))
+        self._seq += 1
+
+    def peek_time(self) -> float:
+        return self._heap[0][0] if self._heap else math.inf
+
+    def pop(self) -> tuple:
+        at, _seq, item = heapq.heappop(self._heap)
+        return at, item
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class CalendarTimedQueue:
+    """Bucketed calendar queue with the heap's exact total order.
+
+    ``_cur`` is the *absolute* window index (``floor(t / width)``) the
+    sweep is positioned at — bucket ``_cur % n_buckets``, window
+    ``[_cur * width, (_cur + 1) * width)``.  The head cache ``_min``
+    always holds the global minimum entry while the queue is nonempty:
+    `push` updates it (and rewinds the sweep) when the new event beats
+    it, `pop` removes it and re-sweeps.  Sweeping from the popped
+    minimum's window is sound because every queued event's time is >=
+    that minimum, so a bucket head inside the current window belongs
+    to *this* lap of the calendar and is the earliest event overall;
+    heads from future laps fail the window test and are skipped.  One
+    full fruitless lap (all events far in the future) triggers the
+    direct scan, which takes the true minimum over bucket heads and
+    jumps the sweep to its window.
+    """
+
+    name = "calendar"
+    _MIN_BUCKETS = 4
+
+    def __init__(self, n_buckets: int = _MIN_BUCKETS, width: float = 1.0):
+        if n_buckets < 1:
+            raise ValueError(f"n_buckets must be >= 1, got {n_buckets!r}")
+        if not (math.isfinite(width) and width > 0.0):
+            raise ValueError(f"width must be finite and > 0, "
+                             f"got {width!r}")
+        self._nb = int(n_buckets)
+        self._width = float(width)
+        self._buckets: list = [[] for _ in range(self._nb)]
+        self._n = 0
+        self._seq = 0
+        self._cur = 0                 # absolute window index
+        self._min = None              # (at, seq, item) global head
+        self._minb = None             # the head's bucket (list object)
+        self.n_resizes = 0            # calendar re-fits, for tests/stats
+
+    # -- public queue API ---------------------------------------------------
+
+    def push(self, at: float, item) -> None:
+        if not math.isfinite(at):
+            raise ValueError(f"timed event at non-finite time {at!r}")
+        entry = (at, self._seq, item)
+        self._seq += 1
+        w = self._width
+        wi = math.floor(at / w)
+        b = self._buckets[wi % self._nb]
+        insort(b, entry)
+        self._n += 1
+        m = self._min
+        if m is None or entry < m:
+            # new global head: rewind the sweep to its window (pushes
+            # are >= the engine clock, but a pop's `now + eps` slack
+            # means a later push can land up to an epsilon behind the
+            # last popped time — the rewind keeps the sweep invariant
+            # "no event precedes the current window" exact)
+            self._min = entry
+            self._minb = b
+            self._cur = wi
+        if self._n > 2 * self._nb:
+            self._resize(2 * self._nb)
+
+    def peek_time(self) -> float:
+        m = self._min
+        return m[0] if m is not None else math.inf
+
+    def pop(self) -> tuple:
+        m = self._min
+        if m is None:
+            raise IndexError("pop from an empty CalendarTimedQueue")
+        # the global head is its bucket's head (buckets are sorted)
+        self._minb.pop(0)
+        self._n -= 1
+        if self._MIN_BUCKETS < self._nb and self._n < self._nb // 2:
+            self._resize(self._nb // 2)   # re-sweeps via rebuild
+        else:
+            self._sweep()
+        return m[0], m[2]
+
+    def __len__(self) -> int:
+        return self._n
+
+    # -- calendar mechanics -------------------------------------------------
+
+    def _window_of(self, at: float) -> int:
+        return math.floor(at / self._width)
+
+    def _sweep(self) -> None:
+        """Re-establish the head cache: sweep the calendar window by
+        window from the current position; after one full lap, direct
+        scan (the far-future-outlier fallback).  The window bound is
+        recomputed as ``(cur + 1) * width`` each step — never
+        accumulated — so the in-window test is exact and the scan's
+        first hit is provably the global minimum (no event lies in a
+        window before ``_cur``; see the class docstring)."""
+        if self._n == 0:
+            self._min = None
+            self._minb = None
+            return
+        nb, w, cur = self._nb, self._width, self._cur
+        buckets = self._buckets
+        for _ in range(nb):
+            b = buckets[cur % nb]
+            if b:
+                head = b[0]
+                if head[0] < (cur + 1) * w:
+                    self._cur = cur
+                    self._min = head
+                    self._minb = b
+                    return
+            cur += 1
+        # one fruitless lap: every event sits beyond the current
+        # calendar year — take the exact min over bucket heads and
+        # jump the sweep to it
+        self._min = head = min(b[0] for b in buckets if b)
+        self._cur = math.floor(head[0] / w)
+        self._minb = buckets[self._cur % nb]
+
+    def _resize(self, n_buckets: int) -> None:
+        """Rebuild the calendar with ``n_buckets`` buckets and a width
+        re-fitted to the live events (span / count, so the average
+        window holds ~1 event).  Deterministic: the new geometry is a
+        pure function of the queued events."""
+        entries = [e for b in self._buckets for e in b]
+        lo = min(e[0] for e in entries) if entries else 0.0
+        hi = max(e[0] for e in entries) if entries else 0.0
+        span = hi - lo
+        width = span / max(len(entries), 1)
+        if not (math.isfinite(width) and width > 0.0):
+            width = 1.0               # all events share one timestamp
+        self._nb = nb = max(int(n_buckets), self._MIN_BUCKETS)
+        self._width = width
+        self._buckets = buckets = [[] for _ in range(nb)]
+        # scatter in globally sorted order: each bucket receives its
+        # entries already sorted, so plain appends keep the invariant
+        for e in sorted(entries):
+            buckets[math.floor(e[0] / width) % nb].append(e)
+        self.n_resizes += 1
+        if entries:
+            self._min = head = min(b[0] for b in buckets if b)
+            self._cur = math.floor(head[0] / width)
+            self._minb = buckets[self._cur % nb]
+        else:
+            self._min = None
+            self._minb = None
+
+
+def make_timed_queue(kind: str):
+    """One fresh timed-event queue per `Engine.run` call."""
+    if kind == "calendar":
+        return CalendarTimedQueue()
+    if kind == "heap":
+        return HeapTimedQueue()
+    raise ValueError(f"unknown timed_queue {kind!r}; "
+                     f"expected one of {TIMED_QUEUES}")

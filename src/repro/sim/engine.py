@@ -69,15 +69,43 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import heapq
 import math
+import time
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
-from repro.sim.alloc import BACKENDS, make_core
+from repro.sim.alloc import BACKENDS, SOLVERS, make_core
+from repro.sim.calq import TIMED_QUEUES, make_timed_queue
 
 _EPS = 1e-12
 
 ALLOCATORS = ("waterfill", "progressive")
+
+# consecutive zero-width steps that pop no timed event and finish no
+# task before the engine declares the simulation stalled.  Legitimate
+# zero-dt bursts (N same-timestamp events draining) pop or finish
+# something every iteration; a core whose min_dt is stuck at 0.0 with
+# nothing completing would otherwise spin forever.
+_MAX_ZERO_SPINS = 1000
+
+
+class SimulationStalled(RuntimeError):
+    """The engine made no progress: `min_dt` stayed 0.0 across
+    `_MAX_ZERO_SPINS` consecutive steps while no timed event fired and
+    no task finished.  Carries the stuck clock, the running set, and
+    the core's counters so the report points at the cycle instead of a
+    hung process."""
+
+    def __init__(self, now: float, running: tuple, stats: dict):
+        self.now = now
+        self.running = running
+        self.stats = stats
+        show = ", ".join(running[:8]) + (", ..." if len(running) > 8
+                                         else "")
+        super().__init__(
+            f"no progress after {_MAX_ZERO_SPINS} zero-width steps at "
+            f"t={now!r}: dt == 0.0 with no timed event and no "
+            f"completion; running ({len(running)}): [{show}]; "
+            f"core stats: {stats}")
 
 
 class EventKind(enum.Enum):
@@ -317,7 +345,9 @@ class Engine:
                  spill_route: Optional[Callable[[str, str],
                                                tuple]] = None,
                  backend: str = "array",
-                 recorder=None):
+                 recorder=None,
+                 timed_queue: str = "calendar",
+                 solver: str = "numpy"):
         """``spill_route(src_node, dst_node)`` returns the resource
         names a spill/restore transfer between the two nodes must hold
         (`Topology.engine` wires it to NIC tx/rx + the fabric path);
@@ -329,7 +359,16 @@ class Engine:
         `repro.sim.obs.FlightRecorder`: when attached, the run records
         task spans, node events, and exact per-resource rate curves;
         when ``None`` (default) no per-event observability work happens
-        and the replayed trace is byte-identical."""
+        and the replayed trace is byte-identical.  ``timed_queue``
+        picks the structure holding timed events (failures, deferred
+        submits, `call_at` callbacks): ``"calendar"`` (default) is the
+        O(1)-amortized bucketed calendar queue, ``"heap"`` the original
+        binary heap — identical pop order, so traces are byte-identical
+        (see `repro.sim.calq`).  ``solver`` picks the water-fill round
+        loop implementation inside the array core: ``"numpy"``
+        (default) or ``"jit"`` (jax.jit over the CSR arrays, bitwise
+        the same rates; falls back to numpy when jax is absent — see
+        `repro.sim.alloc.vector_water_fill_jit`)."""
         self.resources = {r.name: r for r in resources}
         self.resource_index = {name: i
                                for i, name in enumerate(self.resources)}
@@ -339,8 +378,20 @@ class Engine:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {BACKENDS}")
+        if timed_queue not in TIMED_QUEUES:
+            raise ValueError(f"unknown timed_queue {timed_queue!r}; "
+                             f"expected one of {TIMED_QUEUES}")
+        if solver not in SOLVERS:
+            raise ValueError(f"unknown solver {solver!r}; "
+                             f"expected one of {SOLVERS}")
+        if solver == "jit" and backend != "array":
+            raise ValueError("solver='jit' requires backend='array' "
+                             "(the legacy dict core has no vector "
+                             "round loop to jit)")
         self.allocator = allocator
         self.backend = backend
+        self.timed_queue = timed_queue
+        self.solver = solver
         self._alloc = _ALLOC_FNS[allocator]
         self.spill_route = spill_route
         self.recorder = recorder
@@ -385,14 +436,10 @@ class Engine:
         # timed events (node failures, future submissions, control
         # callbacks) are replayed from the instance lists on every call,
         # so a second run() sees the same schedule instead of a stale,
-        # half-consumed heap
-        timed: list = []
-        seq = 0
-
-        def push(at: float, item: tuple) -> None:
-            nonlocal seq
-            heapq.heappush(timed, (at, seq, item))
-            seq += 1
+        # half-consumed queue; heap and calendar queues share the exact
+        # (at, seq) pop order, so the choice never shows in the trace
+        timed = make_timed_queue(self.timed_queue)
+        push = timed.push
 
         for at, kind, node in self._injected:
             push(at, ("node", kind, node))
@@ -419,8 +466,11 @@ class Engine:
         # the numeric core owns remaining/rates/busy/delivered and the
         # flow/resource incidence; one fresh core per run
         core = make_core(self.backend, self.resources, self.allocator,
-                         self._alloc)
+                         self._alloc, solver=self.solver)
         now = 0.0
+        zero_spins = 0       # consecutive no-progress zero-width steps
+        t_events = 0.0       # wall seconds in the timed-event/completion
+                             # drain (the "event-pop" phase share)
         # -- spill/restore bookkeeping (preemption with snapshots) -----
         wasted: dict = {}             # tid -> work-units lost to resets
         snapshot: dict = {}           # tid -> remaining work at preempt
@@ -686,7 +736,7 @@ class Engine:
                 rec.sample_resources(now, core)
             dt = core.min_dt()
             if timed:
-                dt = min(dt, timed[0][0] - now)
+                dt = min(dt, timed.peek_time() - now)
             if not math.isfinite(dt):
                 break                      # stalled: nodes down forever
             dt = max(dt, 0.0)
@@ -710,8 +760,11 @@ class Engine:
 
             # timed events due now: node failures/recoveries, deferred
             # submissions, control callbacks — in schedule order
-            while timed and timed[0][0] <= now + _EPS:
-                t_ev, _, item = heapq.heappop(timed)
+            t0_ev = time.perf_counter()
+            n_popped = 0
+            while timed and timed.peek_time() <= now + _EPS:
+                t_ev, item = timed.pop()
+                n_popped += 1
                 if item[0] == "node":
                     _, kind, node = item
                     events.append(SimEvent(t_ev, kind, node))
@@ -813,6 +866,19 @@ class Engine:
                     fn(ctl, tid)
             if ready:
                 admit()
+            t_events += time.perf_counter() - t0_ev
+            # zero-progress guard: a zero-width step is legitimate only
+            # while it drains something (same-timestamp event batches,
+            # instant completions).  dt == 0.0 with nothing popped and
+            # nothing finished, repeated, is a stuck core — fail loudly
+            # with the state instead of spinning forever.
+            if dt == 0.0 and n_popped == 0 and not finished:  # simlint: ok[FLOAT001] exact zero IS the stall signature
+                zero_spins += 1
+                if zero_spins >= _MAX_ZERO_SPINS:
+                    raise SimulationStalled(now, tuple(running),
+                                            core.stats())
+            else:
+                zero_spins = 0
 
         if rec is not None:
             rec.end_run(now)
@@ -830,12 +896,16 @@ class Engine:
         events.sort(key=lambda e: (e.time, e.kind.value, e.subject))
         spans = {g: (t0, gang_end.get(g, now))
                  for g, t0 in gang_start.items()}
+        stats = core.stats()
+        stats["timed_queue"] = timed.name
+        stats["queue_resizes"] = getattr(timed, "n_resizes", 0)
+        stats["t_events_s"] = t_events
         return SimResult(makespan=now, finish_times=done, events=events,
                          busy_time=core.busy_time(), complete=complete,
                          utilized_time=utilized, wasted_work=wasted,
                          spilled_bytes=spilled, restored_bytes=restored,
                          storage_residency=residency,
-                         alloc_stats=core.stats(),
+                         alloc_stats=stats,
                          gang_bubble_time=gang_bubble,
                          gang_spans=spans,
                          gang_nodes={g: tuple(nodes) for g, nodes

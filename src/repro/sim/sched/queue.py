@@ -167,6 +167,9 @@ class ClusterScheduler:
     loop, or ``"legacy"`` for the dict reference — every churn the
     scheduler drives through `Control` dirties the engine's incidence
     and costs one incremental re-solve per event batch);
+    ``timed_queue`` and ``solver`` pass through to the engine (the
+    calendar-queue event structure and the water-fill round-loop
+    implementation — see `repro.sim.engine.Engine`);
     ``admission=True`` turns on the SLO admission guard (jobs with a
     finite ``deadline_s`` that is infeasible even on an idle placement
     are rejected at submit time); ``tenant_limits`` (a ``{tenant:
@@ -180,6 +183,8 @@ class ClusterScheduler:
     def __init__(self, topo, policy: Union[str, object] = "pack", *,
                  allocator: str = "waterfill", admission: bool = False,
                  backend: str = "array",
+                 timed_queue: str = "calendar",
+                 solver: str = "numpy",
                  tenant_limits: Optional[dict] = None,
                  recorder=None):
         self.topo = topo
@@ -187,6 +192,8 @@ class ClusterScheduler:
                        else policy)
         self.allocator = allocator
         self.backend = backend
+        self.timed_queue = timed_queue
+        self.solver = solver
         self.admission = admission
         if tenant_limits and not admission:
             raise ValueError("tenant_limits is an admission-control "
@@ -210,7 +217,8 @@ class ClusterScheduler:
         fr = self.recorder
         engine = engine if engine is not None else \
             topo.engine(self.allocator, backend=self.backend,
-                        recorder=fr)
+                        recorder=fr, timed_queue=self.timed_queue,
+                        solver=self.solver)
         if fr is not None and getattr(engine, "recorder", None) is None:
             # a caller-supplied engine joins the same recorder
             engine.recorder = fr
@@ -458,13 +466,16 @@ class ClusterScheduler:
 
 def run_policies(topo_factory, jobs, policies=("fifo", "pack"), *,
                  allocator: str = "waterfill",
-                 backend: str = "array") -> dict:
+                 backend: str = "array",
+                 timed_queue: str = "calendar",
+                 solver: str = "numpy") -> dict:
     """Run one arrival stream under several policies on fresh topologies;
     returns ``{policy_name: SchedResult}`` (see
     `validate.compare_policies` for the summarized comparison)."""
     out = {}
     for p in policies:
         sched = ClusterScheduler(topo_factory(), p, allocator=allocator,
-                                 backend=backend)
+                                 backend=backend,
+                                 timed_queue=timed_queue, solver=solver)
         out[sched.policy.name] = sched.run(jobs)
     return out

@@ -166,10 +166,13 @@ class Topology:
         return {r.name: i for i, r in enumerate(self.resources())}
 
     def engine(self, allocator: str = "waterfill",
-               backend: str = "array", recorder=None) -> Engine:
+               backend: str = "array", recorder=None,
+               timed_queue: str = "calendar",
+               solver: str = "numpy") -> Engine:
         return Engine(self.resources(), allocator=allocator,
                       spill_route=self.spill_route, backend=backend,
-                      recorder=recorder)
+                      recorder=recorder, timed_queue=timed_queue,
+                      solver=solver)
 
     def spill_route(self, src: str, dst: str) -> tuple:
         """Resources a preemption spill/restore transfer holds between

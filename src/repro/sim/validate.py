@@ -175,12 +175,113 @@ def compare_backends(make_topo, build, *,
         out[backend] = {"wall_s": wall, "n_events": len(res.events),
                         "events_per_sec": len(res.events) / wall
                         if wall > 0 else float("inf"),
-                        "alloc_stats": res.alloc_stats}
+                        "alloc_stats": res.alloc_stats,
+                        "phases": phase_shares(res.alloc_stats, wall)}
     a, l = out["results"]["array"], out["results"]["legacy"]
     out["bit_identical"] = (a.events == l.events
                             and a.finish_times == l.finish_times)
     out["speedup"] = (out["array"]["events_per_sec"]
                       / out["legacy"]["events_per_sec"])
+    return out
+
+
+def phase_shares(alloc_stats: dict, wall_s: float) -> dict:
+    """Hot-loop phase timing digest from a run's ``alloc_stats``.
+
+    The cores accumulate wall seconds per phase (``t_solve_s`` /
+    ``t_min_dt_s`` / ``t_advance_s``; the engine adds ``t_events_s``
+    for the timed-event + completion drain).  Returns each phase's
+    seconds and its share of the run's total wall time, plus ``other``
+    — the uninstrumented remainder (admission bookkeeping, Python loop
+    overhead) — so a perf PR can see where the next bottleneck lives
+    without re-profiling.
+    """
+    keys = {"t_solve_s": "solve", "t_min_dt_s": "min_dt",
+            "t_advance_s": "advance", "t_events_s": "events"}
+    out: dict = {}
+    accounted = 0.0
+    for k, label in keys.items():
+        v = float(alloc_stats.get(k, 0.0))
+        accounted += v
+        out[label] = {
+            "seconds": round(v, 4),
+            "share": round(v / wall_s, 4) if wall_s > 0 else 0.0}
+    out["other"] = {
+        "seconds": round(max(wall_s - accounted, 0.0), 4),
+        "share": (round(max(wall_s - accounted, 0.0) / wall_s, 4)
+                  if wall_s > 0 else 0.0)}
+    return out
+
+
+def compare_engine_variants(make_topo, build, variants, *,
+                            allocator: str = "waterfill",
+                            repeats: int = 1, prepare=None) -> dict:
+    """One workload under several full engine configurations — the
+    `engine_xscale` cell's harness.
+
+    ``variants`` maps a label to `Topology.engine` keyword arguments
+    (``backend`` / ``timed_queue`` / ``solver`` / ...); the **first**
+    entry is the reference every other variant's event trace and finish
+    times are compared against bitwise.  ``build(topo)`` returns the
+    t=0 task list; ``prepare(eng, topo)`` (optional) configures the
+    engine before the clock starts — inject failures, defer `submit`
+    batches, register callbacks — so a cell can exercise the timed
+    event queue, not just the numeric core.  Each variant runs
+    ``repeats`` times (identical traces by construction) and reports
+    the **best** wall time; repeats are interleaved round-robin —
+    every round times all variants back-to-back — so slow host drift
+    (frequency scaling, cache pressure on shared CI runners) lands on
+    every variant instead of biasing whichever block ran last.
+    Returns per-variant
+    wall/events_per_sec/``alloc_stats``/`phase_shares` digests,
+    ``bit_identical`` and ``speedup`` (events/sec over the reference)
+    per non-reference variant, and the raw ``results`` (pop before
+    JSON-serializing).
+    """
+    import time
+
+    variants = dict(variants)
+    if not variants:
+        raise ValueError("need at least one engine variant")
+    out: dict = {"results": {}, "allocator": allocator,
+                 "bit_identical": {}, "speedup": {}}
+    ref_name = next(iter(variants))
+    best: dict = {name: None for name in variants}
+    for _ in range(max(int(repeats), 1)):
+        for name, kw in variants.items():
+            topo = make_topo()
+            tasks = build(topo)
+            eng = topo.engine(allocator=allocator, **kw)
+            if prepare is not None:
+                prepare(eng, topo)
+            t0 = time.perf_counter()
+            res = eng.run(tasks)
+            wall = time.perf_counter() - t0
+            if not res.complete:
+                raise RuntimeError(f"variant {name!r} run stalled")
+            if best[name] is None or wall < best[name]:
+                best[name] = wall
+            out["results"][name] = res
+    for name, kw in variants.items():
+        res = out["results"][name]
+        wall = best[name]
+        out[name] = {"engine": dict(kw), "wall_s": wall,
+                     "n_events": len(res.events),
+                     "events_per_sec": len(res.events) / wall
+                     if wall > 0 else float("inf"),
+                     "alloc_stats": res.alloc_stats,
+                     "phases": phase_shares(res.alloc_stats, wall)}
+    ref = out["results"][ref_name]
+    for name in variants:
+        if name == ref_name:
+            continue
+        r = out["results"][name]
+        out["bit_identical"][name] = (
+            r.events == ref.events
+            and r.finish_times == ref.finish_times
+            and r.makespan == ref.makespan)
+        out["speedup"][name] = (out[name]["events_per_sec"]
+                                / out[ref_name]["events_per_sec"])
     return out
 
 

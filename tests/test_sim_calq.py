@@ -1,0 +1,187 @@
+"""Calendar-queue vs heap: the timed-event queues must share one exact
+``(at, seq)`` total order.  Property tests drive both queues through
+random push/pop mixes, dense same-timestamp batches, epsilon-behind
+rewinding pushes and far-future outliers (the resize + direct-scan
+paths), asserting byte-identical pop order; engine-level tests assert
+byte-identical full traces between ``timed_queue="heap"`` and
+``"calendar"`` across both allocators and both backends on a workload
+that exercises failures, deferred submissions and control callbacks."""
+import math
+import random
+
+import pytest
+
+from repro.sim import (CalendarTimedQueue, Fabric, HeapTimedQueue,
+                       TIMED_QUEUES, lovelock_cluster, make_timed_queue,
+                       shuffle)
+
+ALLOCATORS = ("waterfill", "progressive")
+
+
+def _drain(q):
+    out = []
+    while len(q):
+        out.append(q.pop())
+    return out
+
+
+def _run_ops(ops):
+    """Apply one op sequence to both queues; returns both pop streams
+    (pops during the mix plus the final drain)."""
+    cal, heap = CalendarTimedQueue(), HeapTimedQueue()
+    outc, outh = [], []
+    for op in ops:
+        if op[0] == "push":
+            cal.push(op[1], op[2])
+            heap.push(op[1], op[2])
+            assert cal.peek_time() == heap.peek_time()
+        else:
+            outc.append(cal.pop())
+            outh.append(heap.pop())
+    outc += _drain(cal)
+    outh += _drain(heap)
+    assert len(cal) == len(heap) == 0
+    return outc, outh, cal
+
+
+# ---------------------------------------------------------------------------
+# property tests: pop order is byte-identical to the heap
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_mix_pops_identical(seed):
+    rng = random.Random(seed)
+    live, ops = 0, []
+    for i in range(rng.randrange(20, 600)):
+        if live and rng.random() < 0.45:
+            ops.append(("pop",))
+            live -= 1
+        else:
+            ops.append(("push", rng.uniform(0.0, 10.0), i))
+            live += 1
+    outc, outh, _ = _run_ops(ops)
+    assert outc == outh
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dense_same_timestamp_batches_pop_in_insert_order(seed):
+    """Many events on few distinct timestamps: the seq tiebreak (and
+    the all-one-timestamp resize fallback width) must keep insertion
+    order within a timestamp."""
+    rng = random.Random(seed)
+    stamps = [0.0, 1.0, 1.0 + 2**-40, 2.5]
+    ops = [("push", rng.choice(stamps), i) for i in range(300)]
+    ops += [("pop",)] * 150
+    outc, outh, _ = _run_ops(ops)
+    assert outc == outh
+    ats = [at for at, _ in outc]
+    assert ats == sorted(ats)
+    # within one timestamp, payloads (insertion ids) are ascending
+    for stamp in stamps:
+        ids = [item for at, item in outc if at == stamp]
+        assert ids == sorted(ids)
+
+
+def test_far_future_outliers_trigger_resize_and_direct_scan():
+    """A handful of near-term events plus outliers thousands of widths
+    away: growth re-fits the calendar (n_resizes > 0) and popping past
+    the near-term cluster crosses the fruitless-lap direct-scan path —
+    order must still match the heap exactly."""
+    rng = random.Random(99)
+    ops = []
+    for i in range(400):
+        at = rng.uniform(0.0, 1.0) if i % 4 else rng.uniform(1e5, 1e6)
+        ops.append(("push", at, i))
+    outc, outh, cal = _run_ops(ops)
+    assert outc == outh
+    assert cal.n_resizes > 0
+
+
+def test_shrink_resize_keeps_order():
+    """Draining far below the bucket count halves the calendar
+    (repeatedly); order survives every rebuild."""
+    cal, heap = CalendarTimedQueue(), HeapTimedQueue()
+    rng = random.Random(3)
+    for i in range(2000):
+        at = rng.uniform(0.0, 50.0)
+        cal.push(at, i)
+        heap.push(at, i)
+    grow = cal.n_resizes
+    assert _drain(cal) == _drain(heap)
+    assert cal.n_resizes > grow
+
+
+def test_epsilon_behind_push_rewinds_the_sweep():
+    """The engine pops every event <= now + eps, so a push can land an
+    epsilon *behind* the last popped time; the calendar must rewind its
+    sweep window instead of orphaning the entry."""
+    for q in (CalendarTimedQueue(), HeapTimedQueue()):
+        q.push(1.0, "a")
+        q.push(5.0, "b")
+        assert q.pop() == (1.0, "a")
+        q.push(1.0 - 1e-12, "late")
+        assert q.peek_time() == 1.0 - 1e-12
+        assert q.pop() == (1.0 - 1e-12, "late")
+        assert q.pop() == (5.0, "b")
+
+
+@pytest.mark.parametrize("kind", TIMED_QUEUES)
+@pytest.mark.parametrize("bad", [math.inf, -math.inf, math.nan])
+def test_non_finite_times_rejected(kind, bad):
+    q = make_timed_queue(kind)
+    with pytest.raises(ValueError):
+        q.push(bad, "x")
+    assert len(q) == 0
+
+
+def test_make_timed_queue_validates():
+    assert make_timed_queue("heap").name == "heap"
+    assert make_timed_queue("calendar").name == "calendar"
+    with pytest.raises(ValueError):
+        make_timed_queue("splay")
+
+
+def test_empty_queue_behaviour():
+    for q in (CalendarTimedQueue(), HeapTimedQueue()):
+        assert q.peek_time() == math.inf
+        assert len(q) == 0
+        with pytest.raises(IndexError):
+            q.pop()
+
+
+# ---------------------------------------------------------------------------
+# engine-level: full traces identical across queues
+# ---------------------------------------------------------------------------
+
+
+def _busy_engine(topo, allocator, backend, timed_queue):
+    eng = topo.engine(allocator=allocator, backend=backend,
+                      timed_queue=timed_queue)
+    eng.inject_failure("nic1", at=0.4, recover_at=0.9)
+    late = shuffle(topo, cpu_work_per_node=0.25, bytes_per_node=1.5,
+                   tag="late")
+    eng.submit(late, at=0.6)
+    for i in range(10):
+        eng.call_at(0.1 + 0.2 * i, lambda ctl: None)
+    return eng
+
+
+@pytest.mark.parametrize("allocator", ALLOCATORS)
+@pytest.mark.parametrize("backend", ("legacy", "array"))
+def test_engine_traces_identical_across_queues(allocator, backend):
+    results = {}
+    for timed_queue in TIMED_QUEUES:
+        topo = lovelock_cluster(8, 1, accel_rate=1.0,
+                                fabric=Fabric(rack_size=4))
+        eng = _busy_engine(topo, allocator, backend, timed_queue)
+        res = eng.run(shuffle(topo, cpu_work_per_node=0.5,
+                              bytes_per_node=3.0))
+        assert res.complete
+        assert res.alloc_stats["timed_queue"] == timed_queue
+        results[timed_queue] = res
+    heap, cal = results["heap"], results["calendar"]
+    assert cal.events == heap.events
+    assert cal.finish_times == heap.finish_times
+    assert cal.makespan == heap.makespan
+    assert cal.utilized_time == heap.utilized_time

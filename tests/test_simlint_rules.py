@@ -285,6 +285,92 @@ def test_unit001_matrix(snippet, expect):
     assert lint(snippet, PLAIN_PATH, codes={"UNIT001"}) == expect
 
 
+# dataclass field annotations: `lat: Seconds` binds the *field name* to
+# a unit for the whole file, so HardwareSpec-style structs whose field
+# names carry no suffix still participate in UNIT001
+
+_SPEC_PREAMBLE = """
+    from dataclasses import dataclass
+    Seconds = float
+    Bytes = float
+
+    @dataclass
+    class Spec:
+        lat: Seconds
+        size: Bytes
+        scale: float
+"""
+
+
+def test_unit001_dataclass_annotations_fire_and_suppress():
+    assert_fires_and_suppresses(_SPEC_PREAMBLE + """
+        def f(s):
+            return s.lat + s.size
+        """, "UNIT001", path=PLAIN_PATH)
+
+
+@pytest.mark.parametrize("body,expect", [
+    # string forward references declare units too
+    ("""
+     @dataclass
+     class Other:
+         dur: "Seconds"
+     def f(s, o):
+         return s.size - o.dur
+     """, ["UNIT001"]),
+    # un-annotated (plain float) fields stay unknown -> silent
+    ("""
+     def f(s):
+         return s.size + s.scale
+     """, []),
+    # same-unit annotated fields add cleanly
+    ("""
+     def f(s, t):
+         return s.lat + t.lat
+     """, []),
+    # the annotation outranks a (lying) name suffix elsewhere: both
+    # sides are declared Seconds, so the sum is clean
+    ("""
+     @dataclass
+     class Renamed:
+         payload_bytes: Seconds
+     def f(r, s):
+         return r.payload_bytes + s.lat
+     """, []),
+    # conflicting declarations for one field name across two
+    # dataclasses drop it to unknown -> silent
+    ("""
+     @dataclass
+     class A:
+         cap: Seconds
+     @dataclass
+     class B:
+         cap: Bytes
+     def f(a, s):
+         return a.cap + s.lat
+     """, []),
+])
+def test_unit001_dataclass_annotation_matrix(body, expect):
+    src = textwrap.dedent(_SPEC_PREAMBLE) + textwrap.dedent(body)
+    assert lint(src, PLAIN_PATH, codes={"UNIT001"}) == expect
+
+
+def test_unit001_plain_class_annotations_do_not_bind():
+    """Only @dataclass bodies feed the environment: an ordinary class
+    with the same annotations must stay silent."""
+    assert lint("""
+        Seconds = float
+        Bytes = float
+
+        class Spec:
+            lat: Seconds
+            size: Bytes
+
+        def f(s):
+            return s.lat + s.size
+        """, PLAIN_PATH, codes={"UNIT001"}) == []
+
+
 # ---------------------------------------------------------------------------
 # UNIT002 — bandwidth x bandwidth
 # ---------------------------------------------------------------------------
